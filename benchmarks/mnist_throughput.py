@@ -1,0 +1,261 @@
+"""Paper Table II analogue: online-learning throughput on the MNIST task.
+
+The paper's claim is ARCHITECTURAL: pipelining inference with plasticity
+gives end-to-end FPS ~= forward-only FPS, where prior hardware ran the two
+stages sequentially (A/B FPS split in Table II).  We reproduce the
+methodology on the 784-1024-10 network: measure forward-only steps vs
+fused forward+plasticity steps (one jit program — the XLA analogue of the
+dual-engine overlap) vs explicitly sequential forward-then-update (two
+programs, weights re-fetched).
+
+Accuracy uses the PROCEDURAL digit set (see data/mnist.py) — not
+comparable to real-MNIST numbers; the throughput ratio is the deliverable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plasticity as P, snn
+from repro.data import mnist_batch, spike_encode
+from repro.kernels import dual_engine_step, lif_forward
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+CFG = snn.SNNConfig(layer_sizes=(784, 1024, 10), timesteps=8,
+                    spiking_readout=True)
+
+
+def _setup(batch: int, key):
+    imgs, labels = mnist_batch(key, batch)
+    spikes = jax.vmap(lambda k, im: spike_encode(k, im, CFG.timesteps))(
+        jax.random.split(key, batch), imgs)          # (B, T, 784)
+    state = snn.init_state(CFG, batch=1)             # kernels take (B, N)
+    theta = snn.init_theta(CFG, key, scale=0.05)
+    return spikes, labels, state, theta
+
+
+@jax.jit
+def fused_step(w1, w2, th1, th2, v1, v2, tr0, tr1, tr2, x):
+    """One timestep through both layers, forward AND plasticity fused."""
+    tr0 = P.update_trace(tr0, x, CFG.trace_decay)
+    s1, v1, tr1, w1 = dual_engine_step(x, w1, th1, v1, tr0, tr1)
+    s2, v2, tr2, w2 = dual_engine_step(s1, w2, th2, v2, tr1, tr2)
+    return w1, w2, v1, v2, tr0, tr1, tr2, s2
+
+
+@jax.jit
+def forward_only_step(w1, w2, v1, v2, tr1, tr2, x):
+    s1, v1, tr1 = lif_forward(x, w1, v1, tr1)
+    s2, v2, tr2 = lif_forward(s1, w2, v2, tr2)
+    return v1, v2, tr1, tr2, s2
+
+
+@jax.jit
+def sequential_step(w1, w2, th1, th2, v1, v2, tr0, tr1, tr2, x):
+    """Forward pass fully completes, THEN plasticity re-reads weights."""
+    tr0 = P.update_trace(tr0, x, CFG.trace_decay)
+    s1, v1n, tr1n = lif_forward(x, w1, v1, tr1)
+    s2, v2n, tr2n = lif_forward(s1, w2, v2, tr2)
+    pcfg1 = CFG.layer_plasticity_cfg(0)
+    pcfg2 = CFG.layer_plasticity_cfg(1)
+    w1 = P.apply_plasticity(w1, th1, tr0, tr1n, pcfg1)
+    w2 = P.apply_plasticity(w2, th2, tr1n, tr2n, pcfg2)
+    return w1, w2, v1n, v2n, tr0, tr1n, tr2n, s2
+
+
+def _time(fn, args, iters):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _theta_from_scalars(cfg, scalars, key):
+    """Structured per-synapse rule from 9 scalars (the ES search space).
+
+    L1's delta term is scalar c1 TIMES a fixed random sign matrix R — the
+    per-synapse delta_ij is how the offline phase encodes a feature
+    projection INTO the rule (weights still start at zero online; the rule
+    grows them toward +-c1-paced random features).  All other terms are
+    per-layer scalars, matching the paper's four functional roles.
+    """
+    a1, b1, g1, c1, a2, b2, g2, d2, _ = scalars
+    r = jax.random.rademacher(key, (cfg.layer_sizes[0], cfg.layer_sizes[1]),
+                              dtype=jnp.float32)
+    th1 = jnp.stack([
+        jnp.full_like(r, a1), jnp.full_like(r, b1),
+        jnp.full_like(r, g1), c1 * r])
+    shp2 = (cfg.layer_sizes[1], cfg.layer_sizes[2])
+    th2 = jnp.stack([jnp.full(shp2, a2), jnp.full(shp2, b2),
+                     jnp.full(shp2, g2), jnp.full(shp2, d2)])
+    return [th1, th2]
+
+
+def make_online_eval(cfg, n_stream: int, key):
+    """jit-able online-learning eval: stream of digits, predict-then-learn.
+
+    Returns fn(scalars) -> accuracy over the last 4/5 of the stream."""
+    imgs, labels = mnist_batch(key, n_stream)
+    xs = imgs.reshape(n_stream, -1)
+
+    def run(scalars):
+        theta = _theta_from_scalars(cfg, scalars, jax.random.PRNGKey(7))
+        teach_amp = scalars[-1]
+        state0 = snn.init_state(cfg)
+
+        def step(state, inp):
+            x, label = inp
+            _, scores = snn.classify_window(cfg, state, theta, x)
+            teach = teach_amp * jax.nn.one_hot(label, cfg.layer_sizes[-1])
+            state, _ = snn.classify_window(cfg, state, theta, x, teach=teach)
+            return state, (jnp.argmax(scores) == label)
+
+        _, hits = jax.lax.scan(step, state0, (xs, labels))
+        warm = n_stream // 5
+        return hits[warm:].mean()
+
+    return run
+
+
+def es_optimize_rule(n_stream: int = 96, gens: int = 12, pop_pairs: int = 8,
+                     key=None):
+    """Phase-1 for the MNIST task: PEPG over the 9 rule scalars, fitness =
+    online predict-before-learn accuracy (the paper's offline/online split
+    applied to classification)."""
+    from repro.core import es
+    key = jax.random.PRNGKey(3) if key is None else key
+    import dataclasses as _dc
+    cfg = _dc.replace(CFG, w_clip=1.0, timesteps=6)
+    evaluate = jax.jit(make_online_eval(cfg, n_stream, key))
+
+    mu0 = jnp.asarray([0.01, 0.004, -0.003, 0.002,
+                       0.05, -0.002, -0.005, -0.0005, 2.0])
+    scale = jnp.asarray([0.01, 0.005, 0.005, 0.002,
+                         0.05, 0.005, 0.005, 0.001, 1.0])
+
+    pcfg = es.PEPGConfig(num_params=9, pop_pairs=pop_pairs, sigma_init=0.5,
+                         lr_mu=0.3)
+
+    def fitness(pop, k):
+        return jax.vmap(lambda p: evaluate(mu0 + p * scale))(pop)
+
+    st, hist = es.run(pcfg, fitness, key, gens)
+    best = mu0 + st.best_theta * scale
+    return best, float(st.best_fitness), [float(h) for h in hist], cfg
+
+
+def online_accuracy(n_samples: int, key, teach_amp: float = 2.0) -> float:
+    """Supervised online learning: PREDICT each digit first (no teaching
+    signal), then learn on it with the label injected as a teaching current
+    into the output layer (supervised-STDP protocol).  Running accuracy of
+    the predict-before-learn stream is returned — a true online metric.
+
+    The rule here is hand-set Hebbian-dominant (alpha>0, delta<0) rather
+    than ES-trained; the paper's 97.5% uses an ES-optimized rule on real
+    MNIST, so this number demonstrates the ONLINE-LEARNING MECHANISM, not
+    the accuracy claim (DESIGN.md §8)."""
+    import dataclasses
+    cfg = dataclasses.replace(CFG, w_clip=1.0)
+    imgs, labels = mnist_batch(key, n_samples)
+    state = snn.init_state(cfg)
+    # hand-set rule.  Weights start at ZERO (Phase-2 semantics), so the
+    # Hebbian term alone can never bootstrap — the paper's presynaptic term
+    # is what grows synapses from activity before any postsynaptic spike
+    # exists.  L1: bootstrap + prune; L2: Hebbian binding to the taught
+    # class with presynaptic depression of non-causal features.
+    coeffs = [
+        # (alpha, beta, gamma, delta)
+        (0.010, 0.004, -0.0030, -0.0010),   # L1: 784 -> 1024
+        (0.050, -0.002, -0.0050, -0.0005),  # L2: 1024 -> 10
+    ]
+    theta = []
+    for i in range(cfg.num_layers):
+        shp = (cfg.layer_sizes[i], cfg.layer_sizes[i + 1])
+        th = jnp.zeros((4, *shp))
+        for j, c in enumerate(coeffs[i]):
+            th = th.at[j].set(c)
+        theta.append(th)
+
+    @jax.jit
+    def predict_then_learn(state, img, label):
+        x = img.reshape(-1)
+        _, scores = snn.classify_window(cfg, state, theta, x)   # no learning leak
+        teach = teach_amp * jax.nn.one_hot(label, cfg.layer_sizes[-1])
+        state, _ = snn.classify_window(cfg, state, theta, x, teach=teach)
+        return state, jnp.argmax(scores)
+
+    correct = 0
+    for i in range(n_samples):
+        state, pred = predict_then_learn(state, imgs[i], labels[i])
+        if i >= n_samples // 5:                 # skip the cold-start fifth
+            correct += int(pred == int(labels[i]))
+    return correct / (n_samples - n_samples // 5)
+
+
+def main(quick: bool = False):
+    os.makedirs(RESULTS, exist_ok=True)
+    key = jax.random.PRNGKey(0)
+    spikes, labels, state, theta = _setup(4, key)
+    x = spikes[0, 0][None]                           # (1, 784)
+    w1, w2 = state["w"]
+    th1, th2 = theta
+    v1, v2 = state["v"]
+    tr0, tr1, tr2 = state["trace"]
+
+    iters = 3 if quick else 10
+    t_fused = _time(fused_step, (w1, w2, th1, th2, v1, v2, tr0, tr1, tr2, x),
+                    iters)
+    t_fwd = _time(forward_only_step, (w1, w2, v1, v2, tr1, tr2, x), iters)
+    t_seq = _time(sequential_step, (w1, w2, th1, th2, v1, v2, tr0, tr1, tr2,
+                                    x), iters)
+
+    # FPS = 1 / (timesteps * per-timestep latency)
+    fps = {k: 1.0 / (CFG.timesteps * t)
+           for k, t in (("fused", t_fused), ("forward_only", t_fwd),
+                        ("sequential", t_seq))}
+    acc = online_accuracy(40 if quick else 120, key)
+    out = {
+        "per_timestep_ms": {"fused": t_fused * 1e3,
+                            "forward_only": t_fwd * 1e3,
+                            "sequential": t_seq * 1e3},
+        "fps": fps,
+        "fused_vs_sequential_speedup": t_seq / t_fused,
+        "learning_overhead_vs_forward": t_fused / t_fwd,
+        "procedural_digit_accuracy": acc,
+        "note": ("CPU wall-clock; paper Table II methodology — end-to-end "
+                 "FPS with learning ~ forward-only FPS when stages fuse, "
+                 "which is THE claim this harness reproduces. The accuracy "
+                 "field is a mechanism demo only and sits AT CHANCE (~0.1): "
+                 "a hand-set/random-searched scalar rule cannot separate "
+                 "classes without lateral inhibition or the paper's full "
+                 "per-synapse ES (3.2M coefficients on real MNIST -> "
+                 "97.5%); --es runs a small PEPG search over the 9-scalar "
+                 "structured rule (modestly above chance on the train "
+                 "stream). See DESIGN.md §8."),
+    }
+    import sys
+    if "--es" in sys.argv:
+        best, fit, hist, cfg_es = es_optimize_rule(
+            n_stream=64, gens=8, pop_pairs=6)
+        held = jax.jit(make_online_eval(cfg_es, 96,
+                                        jax.random.PRNGKey(99)))(best)
+        out["es_rule"] = {"train_stream_acc": fit,
+                          "heldout_stream_acc": float(held),
+                          "history": hist,
+                          "scalars": [float(b) for b in best]}
+    print(json.dumps(out, indent=1))
+    with open(os.path.join(RESULTS, "mnist_throughput.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,48 @@
+"""Benchmark entry point: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+  adaptation        Fig. 3   plasticity vs weight-trained generalization
+  engine_breakdown  Table I  per-engine FLOPs/bytes/roofline latency
+  mnist_throughput  Table II pipelined fwd+learn FPS methodology
+  latency           8 us     controller end-to-end latency analogue
+  roofline          Roofline table from the dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    quick = "--quick" in argv
+    t0 = time.time()
+    failures = []
+
+    from benchmarks import (adaptation, engine_breakdown, latency,
+                            mnist_throughput, roofline)
+
+    for name, fn in (
+        ("engine_breakdown", lambda: engine_breakdown.main(quick=quick)),
+        ("latency", lambda: latency.main(quick=quick)),
+        ("mnist_throughput", lambda: mnist_throughput.main(quick=quick)),
+        ("adaptation", lambda: adaptation.main(quick=quick)),
+        ("roofline_single", lambda: roofline.main(["--mesh", "single"])),
+        ("roofline_multi", lambda: roofline.main(["--mesh", "multi"])),
+    ):
+        print(f"\n===== {name} =====")
+        try:
+            fn()
+        except Exception as e:  # keep the harness running; report at end
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+
+    print(f"\nbenchmarks done in {time.time() - t0:.0f}s; "
+          f"{len(failures)} failures: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""End-to-end driver: adaptive control with simulated leg failure.
+
+    PYTHONPATH=src python examples/adaptive_control.py [--full]
+
+Reproduces the paper's central scenario: a controller whose synapses are
+continuously rewritten by the learned rule RECOVERS from a mid-episode
+actuator failure, while a weight-trained controller cannot adapt.
+
+Pipeline: Phase-1 PEPG rule search on the direction task (8 headings) ->
+Phase-2 deployment on unseen headings -> actuator-failure stress test.
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro import envs
+from repro.core import adaptation
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale run (slower)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    gens = 60 if args.full else 12
+    hidden = 128 if args.full else 24
+    ep_len = 150 if args.full else 50
+
+    env = envs.make("direction", episode_len=ep_len)
+    cfg = adaptation.AdaptationConfig(hidden=hidden, timesteps=2,
+                                      pop_pairs=16, generations=gens,
+                                      seed=args.seed)
+
+    results = {}
+    for label, plastic in (("fireflyp", True), ("weight-trained", False)):
+        print(f"== {label}: Phase 1 ({gens} generations) ==")
+        params, hist, scfg = adaptation.optimize_rule(env, cfg,
+                                                      plastic=plastic)
+        print(f"  train fitness {float(hist[0]):.2f} -> {float(hist[-1]):.2f}")
+
+        healthy = adaptation.evaluate_generalization(env, scfg, params,
+                                                     seed=args.seed + 1)
+        # leg failure: thruster 0 dies 1/3 into the episode
+        mask = jnp.ones((env.act_dim,)).at[0].set(0.0)
+        damaged = adaptation.evaluate_generalization(
+            env, scfg, params, seed=args.seed + 1,
+            actuator_mask=mask, mask_after=ep_len // 3)
+        retention = float(damaged.mean()) / max(float(healthy.mean()), 1e-9)
+        results[label] = {
+            "train_first": float(hist[0]), "train_last": float(hist[-1]),
+            "unseen72_mean": float(healthy.mean()),
+            "unseen72_damaged_mean": float(damaged.mean()),
+            "damage_retention": retention,
+        }
+        print(f"  unseen-72 mean return: {float(healthy.mean()):.2f}  "
+              f"with leg failure: {float(damaged.mean()):.2f}")
+
+    print(json.dumps(results, indent=1))
+    print("\nThe plastic controller's weights are rewritten online by the "
+          "rule, so it re-balances the remaining 7 thrusters after the "
+          "failure; the weight-trained policy is frozen.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""FireFly-P inside an LM serving stack: per-request plastic fast-weights.
+
+    PYTHONPATH=src python examples/plastic_serving.py
+
+Each decode stream carries its own fast-weight matrix W_fast (zero-init)
+that the four-term rule rewrites every generated token — the paper's
+Phase-2 online adaptation as a serving feature.  This example serves two
+archs (dense + SSM) with and without the adapter and reports the decode
+overhead and the fast-weight drift per stream.
+"""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import make_decode_step, make_prefill
+from repro.models import transformer as T
+
+
+def serve(arch: str, plastic: bool, gen: int = 12, batch: int = 2):
+    cfg = get_smoke(arch)
+    if plastic:
+        cfg = cfg.with_(plastic_adapter=True, adapter_neurons=32)
+    mesh = make_local_mesh()
+    with shd.use_mesh(mesh), mesh:
+        params = T.init(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (batch, 12),
+                                  0, cfg.vocab)
+        inputs = (jnp.take(params["embed"], toks, axis=0)
+                  if cfg.input_mode == "embeddings" else toks)
+        prefill = jax.jit(make_prefill(cfg, 12 + gen))
+        decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+        logits, cache = prefill(params, inputs)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        lat = []
+        for i in range(gen):
+            t0 = time.perf_counter()
+            logits, cache = decode(params, cache, tok[:, None])
+            logits.block_until_ready()
+            lat.append(time.perf_counter() - t0)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = {"arch": cfg.name, "plastic": plastic,
+               "decode_ms_p50": sorted(lat)[len(lat) // 2] * 1e3}
+        if plastic:
+            wf = cache["adapter"]["w_fast"]
+            out["fast_weight_drift_per_stream"] = [
+                float(jnp.abs(wf[b]).mean()) for b in range(batch)]
+        return out
+
+
+def main():
+    rows = []
+    for arch in ("qwen3-4b", "mamba2-1.3b"):
+        for plastic in (False, True):
+            rows.append(serve(arch, plastic))
+            print(json.dumps(rows[-1]))
+    base = rows[0]["decode_ms_p50"]
+    plas = rows[1]["decode_ms_p50"]
+    print(f"\nadapter decode overhead ({rows[1]['arch']}): "
+          f"{(plas / base - 1) * 100:.1f}% "
+          f"(one extra (B,N,N) rule application per token)")
+
+
+if __name__ == "__main__":
+    main()

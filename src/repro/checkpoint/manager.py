@@ -1,0 +1,185 @@
+"""Sharded checkpointing with atomic manifest commit and resharding restore.
+
+Layout per step:
+
+    <dir>/step_000123/
+        manifest.json      # tree structure, shapes, dtypes, leaf -> file map
+        leaf_00000.npy ... # one .npy per leaf (host-local shard in multi-host;
+                           # full array in single-process)
+    <dir>/LATEST           # atomic pointer file, written LAST
+
+Crash-safety contract: a checkpoint is visible only after its manifest AND
+the LATEST pointer are fully written (os.replace is atomic on POSIX).  A
+half-written step directory is ignored by loaders and reaped by `gc()`.
+
+Resharding restore: leaves are stored unsharded (np.asarray gathers); load
+places them onto whatever mesh/sharding the *new* topology asks for — this
+is what makes elastic re-mesh (restore onto a different device count) work.
+Async save: `save(..., blocking=False)` snapshots to host RAM immediately
+(jax.device_get) and writes on a daemon thread — the train loop resumes
+while I/O drains; `wait()` joins before the next save or at exit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(p) for p in kp) for kp, _ in leaves_with_paths]
+    leaves = [l for _, l in leaves_with_paths]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    """Write one checkpoint synchronously.  Returns the step dir path."""
+    step_dir = os.path.join(directory, f"step_{step:09d}")
+    tmp_dir = step_dir + ".tmp"
+    if os.path.exists(tmp_dir):
+        shutil.rmtree(tmp_dir)
+    os.makedirs(tmp_dir, exist_ok=True)
+
+    paths, leaves, _ = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for i, (path, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp_dir, fname), arr)
+        manifest["leaves"].append({
+            "path": path, "file": fname,
+            "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.replace(tmp_dir, step_dir)                      # atomic visibility
+    _write_latest(directory, step)
+    return step_dir
+
+
+def _write_latest(directory: str, step: int) -> None:
+    tmp = os.path.join(directory, "LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(str(step))
+    os.replace(tmp, os.path.join(directory, "LATEST"))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def load_checkpoint(directory: str, tree_like: Any, step: Optional[int] = None,
+                    shardings: Any = None):
+    """Restore into the structure of `tree_like`.
+
+    `shardings`: optional pytree of NamedShardings (same structure) — leaves
+    are device_put onto them, which is the resharding path: the stored arrays
+    are full (unsharded), so ANY target mesh works (elastic re-mesh).
+
+    Returns (tree, step, extra).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    step_dir = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    paths, leaves, treedef = _flatten_with_paths(tree_like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    out = []
+    for path, like, shd in zip(paths, leaves, shard_leaves):
+        entry = by_path.get(path)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {path!r}")
+        arr = np.load(os.path.join(step_dir, entry["file"]))
+        want_shape = tuple(getattr(like, "shape", arr.shape))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"shape mismatch for {path}: ckpt {arr.shape} vs {want_shape}")
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out), step, manifest["extra"]
+
+
+class CheckpointManager:
+    """Keep-K rotating checkpoints with async save.
+
+    save() with blocking=False snapshots device arrays to host immediately
+    and performs file I/O on a background thread; wait() joins it.  The
+    manager is what the fault-tolerance layer (distributed/ft.py) drives.
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             blocking: bool = True) -> None:
+        self.wait()
+        # snapshot NOW (cheap host copy) so training can mutate buffers
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if blocking:
+            save_checkpoint(self.directory, step, host_tree, extra)
+            self.gc()
+            return
+
+        def _bg():
+            save_checkpoint(self.directory, step, host_tree, extra)
+            self.gc()
+
+        self._thread = threading.Thread(target=_bg, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        self.wait()
+        return load_checkpoint(self.directory, tree_like, step, shardings)
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def gc(self) -> None:
+        """Remove all but the newest `keep` complete checkpoints + orphans."""
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else steps:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)
+        for name in os.listdir(self.directory):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)

@@ -1,0 +1,26 @@
+"""mamba2-1.3b [ssm] — 48L d_model=2048 (attention-free) vocab=50280,
+ssm_state=128; SSD (state-space duality).  [arXiv:2405.21060]
+
+vocab 50280 is not divisible by the 16-way model axis — the embedding
+sharding falls back to replicated for that dim (sharding.py drops
+non-dividing axes); the lm_head matmul stays model-sharded on d_inner.
+Eligible for long_500k: decode state is O(1) per token."""
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    n_layers=48, d_model=2048, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab=50280,
+    layout="ssm", sub_quadratic=True,
+    ssm=SSMConfig(state=128, head_dim=64, expand=2, n_groups=1,
+                  conv_width=4, chunk=256),
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-1.3b-smoke",
+    n_layers=2, d_model=64, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab=509,          # odd vocab, as in full (50280 % 16 != 0)
+    layout="ssm", sub_quadratic=True, remat=False,
+    ssm=SSMConfig(state=16, head_dim=16, expand=2, n_groups=1,
+                  conv_width=4, chunk=16),
+)

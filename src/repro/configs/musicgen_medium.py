@@ -1,0 +1,21 @@
+"""musicgen-medium [audio] — 48L d_model=1536 24H (MHA kv=24) d_ff=6144
+vocab=2048; decoder-only over EnCodec tokens.  [arXiv:2306.05284; hf]
+
+Backbone only, per the shape spec: the EnCodec frontend is a STUB —
+input_specs() provides precomputed frame embeddings (input_mode=
+"embeddings"), the transformer + 2048-way codebook head is fully real."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24,
+    d_ff=6144, vocab=2048,
+    layout="dense", input_mode="embeddings",
+)
+
+SMOKE = ModelConfig(
+    name="musicgen-medium-smoke",
+    n_layers=2, d_model=96, n_heads=6, n_kv_heads=6,
+    d_ff=192, vocab=128,
+    layout="dense", input_mode="embeddings", remat=False,
+)

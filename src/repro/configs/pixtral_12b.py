@@ -1,0 +1,23 @@
+"""pixtral-12b [vlm] — 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072; pixtral-ViT frontend + mistral-nemo decoder.
+[hf:mistralai/Pixtral-12B-2409]
+
+Backbone only, per the shape spec: the ViT patch-encoder is a STUB —
+input_specs() provides precomputed patch/text embeddings (input_mode=
+"embeddings"); the 12B decoder is fully real."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=131072, head_dim=128,
+    rope_theta=1_000_000.0,
+    layout="dense", input_mode="embeddings",
+)
+
+SMOKE = ModelConfig(
+    name="pixtral-12b-smoke",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2,
+    d_ff=256, vocab=512, head_dim=32,
+    layout="dense", input_mode="embeddings", remat=False,
+)

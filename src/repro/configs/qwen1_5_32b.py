@@ -1,0 +1,24 @@
+"""qwen1.5-32b [dense] — 64L d_model=5120 40H (MHA: kv=40) d_ff=27392
+vocab=152064; QKV bias.  [hf:Qwen/Qwen1.5-0.5B; hf]
+
+40 heads do not divide the 16-way model axis: per-head activation shardings
+fall back to replicated (sharding.py drops non-dividing axes) while the
+flattened h*hd projections stay sharded — a deliberate baseline for the
+roofline table (see EXPERIMENTS.md §Perf for the head-padding fix)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40,
+    d_ff=27392, vocab=152064,
+    qkv_bias=True, rope_theta=1_000_000.0,
+    layout="dense",
+)
+
+SMOKE = ModelConfig(
+    name="qwen1.5-32b-smoke",
+    n_layers=2, d_model=120, n_heads=5, n_kv_heads=5,   # odd head count, as in full
+    d_ff=256, vocab=512,
+    qkv_bias=True, rope_theta=1_000_000.0,
+    layout="dense", remat=False,
+)

@@ -1,0 +1,140 @@
+"""Two-phase learning framework (FireFly-P Sec. II-B).
+
+Phase 1 (offline): PEPG searches plasticity-coefficient space; each candidate
+theta is scored by rolling out a plastic SNN — weights start at ZERO and are
+rewritten online by the rule — across the training tasks.  The learned object
+is the *rule*, never the weights.
+
+Phase 2 (online): theta* frozen; the controller adapts its synapses on the
+fly, including under perturbations (actuator failure) and on unseen tasks.
+
+A weight-trained baseline (ES directly over synaptic weights, plasticity off)
+reproduces the paper's Fig. 3 comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import es, snn
+from repro.envs.base import Env
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptationConfig:
+    hidden: int = 128                  # paper: 128 hidden neurons for control
+    timesteps: int = 4
+    trace_decay: float = 0.8
+    pop_pairs: int = 24
+    generations: int = 60
+    episodes_per_task: int = 1
+    theta_scale: float = 0.05          # PEPG sigma_init over theta space
+    seed: int = 0
+
+
+def make_snn_config(env: Env, cfg: AdaptationConfig, plastic: bool = True) -> snn.SNNConfig:
+    return snn.SNNConfig(
+        layer_sizes=(env.obs_dim, cfg.hidden, env.act_dim),
+        timesteps=cfg.timesteps, trace_decay=cfg.trace_decay,
+        plastic=plastic)
+
+
+def episode_return(env: Env, scfg: snn.SNNConfig, theta_or_w: jax.Array,
+                   task: jax.Array, key: jax.Array,
+                   actuator_mask: Optional[jax.Array] = None,
+                   mask_after: Optional[int] = None) -> jax.Array:
+    """Roll one episode; returns cumulative reward.
+
+    For plastic nets `theta_or_w` is the flat plasticity-coefficient vector
+    and synaptic weights start at zero (Phase-2 semantics).  For the
+    weight-trained baseline it is the flat weight vector, frozen.
+
+    `mask_after`: env step after which `actuator_mask` kicks in (simulated
+    mid-episode leg failure); None applies the mask from t=0.
+    """
+    k_env, k_enc = jax.random.split(key)
+    state = snn.init_state(scfg)
+    if scfg.plastic:
+        theta = snn.unflatten_theta(scfg, theta_or_w)
+    else:
+        theta = snn.init_theta(scfg, jax.random.PRNGKey(0), scale=0.0)
+        state["w"] = unflatten_weights(scfg, theta_or_w)
+
+    est = env.reset(k_env, task)
+    full_mask = jnp.ones((env.act_dim,))
+    fail_mask = full_mask if actuator_mask is None else actuator_mask
+
+    def step(carry, t):
+        est, st = carry
+        mask = fail_mask if mask_after is None else jnp.where(
+            t >= mask_after, fail_mask, full_mask)
+        est = est._replace(actuator_mask=mask)
+        obs = env.observe(est)
+        st, action = snn.controller_step(scfg, st, theta, obs, k_enc)
+        est, r = env.step(est, action)
+        return (est, st), r
+
+    (_, _), rewards = jax.lax.scan(step, (est, state), jnp.arange(env.episode_len))
+    return rewards.sum()
+
+
+def unflatten_weights(scfg: snn.SNNConfig, flat: jax.Array):
+    out, off = [], 0
+    for i in range(scfg.num_layers):
+        shape = (scfg.layer_sizes[i], scfg.layer_sizes[i + 1])
+        n = shape[0] * shape[1]
+        out.append(flat[off:off + n].reshape(shape).astype(scfg.dtype))
+        off += n
+    return out
+
+
+def weight_size(scfg: snn.SNNConfig) -> int:
+    return sum(scfg.layer_sizes[i] * scfg.layer_sizes[i + 1]
+               for i in range(scfg.num_layers))
+
+
+def make_fitness_fn(env: Env, scfg: snn.SNNConfig, tasks: jax.Array):
+    """Mean return across training tasks, vmapped over the ES population."""
+
+    def single(param_vec: jax.Array, key: jax.Array) -> jax.Array:
+        keys = jax.random.split(key, tasks.shape[0])
+        rets = jax.vmap(
+            lambda task, k: episode_return(env, scfg, param_vec, task, k)
+        )(tasks, keys)
+        return rets.mean()
+
+    def fitness(pop: jax.Array, key: jax.Array) -> jax.Array:
+        keys = jnp.broadcast_to(key, (pop.shape[0], *key.shape))
+        return jax.vmap(single)(pop, keys)
+
+    return fitness
+
+
+def optimize_rule(env: Env, cfg: AdaptationConfig,
+                  plastic: bool = True) -> tuple[jax.Array, jax.Array, snn.SNNConfig]:
+    """Phase 1.  Returns (theta*_flat or w*_flat, fitness history, snn cfg)."""
+    scfg = make_snn_config(env, cfg, plastic=plastic)
+    n = snn.theta_size(scfg) if plastic else weight_size(scfg)
+    pcfg = es.PEPGConfig(num_params=n, pop_pairs=cfg.pop_pairs,
+                         sigma_init=cfg.theta_scale)
+    fitness = make_fitness_fn(env, scfg, env.train_tasks())
+    key = jax.random.PRNGKey(cfg.seed)
+    state, history = es.run(pcfg, fitness, key, cfg.generations)
+    return state.mu, history, scfg
+
+
+def evaluate_generalization(env: Env, scfg: snn.SNNConfig, params: jax.Array,
+                            seed: int = 1,
+                            actuator_mask: Optional[jax.Array] = None,
+                            mask_after: Optional[int] = None) -> jax.Array:
+    """Phase 2 on the 72 unseen tasks.  Returns per-task returns."""
+    tasks = env.eval_tasks()
+    keys = jax.random.split(jax.random.PRNGKey(seed), tasks.shape[0])
+    return jax.vmap(
+        lambda task, k: episode_return(env, scfg, params, task, k,
+                                       actuator_mask=actuator_mask,
+                                       mask_after=mask_after)
+    )(tasks, keys)

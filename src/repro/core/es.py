@@ -1,0 +1,136 @@
+"""Parameter-Exploring Policy Gradients (PEPG) — Sehnke et al. 2010.
+
+The paper's Phase-1 offline optimizer: searches the plasticity-coefficient
+space theta with symmetric (antithetic) sampling.  Pure JAX; the fitness
+function is expected to be vmappable (a whole plastic-SNN episode rollout).
+
+    eps ~ N(0, sigma^2)            (one per population pair)
+    theta+/- = mu +/- eps
+    d_mu    = alpha_mu    * T^T r_diff      T_ij = eps_ij
+    d_sigma = alpha_sigma * S^T r_avg       S_ij = (eps_ij^2 - sigma_j^2)/sigma_j
+
+with r_diff = (r+ - r-)/2 and r_avg = (r+ + r-)/2 - b (running baseline).
+Optional rank-based fitness shaping stabilizes heavy-tailed RL returns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PEPGConfig:
+    num_params: int
+    pop_pairs: int = 32              # population = 2 * pop_pairs (antithetic)
+    lr_mu: float = 0.1
+    lr_sigma: float = 0.05
+    sigma_init: float = 0.05
+    sigma_min: float = 1e-3
+    sigma_max: float = 1.0
+    baseline_decay: float = 0.9
+    rank_shaping: bool = True
+    mu_init_scale: float = 0.0
+
+
+class PEPGState(NamedTuple):
+    mu: jax.Array          # (num_params,)
+    sigma: jax.Array       # (num_params,)
+    baseline: jax.Array    # ()
+    step: jax.Array        # ()
+    best_fitness: jax.Array
+    best_theta: jax.Array
+
+
+def init(cfg: PEPGConfig, key: jax.Array) -> PEPGState:
+    mu = cfg.mu_init_scale * jax.random.normal(key, (cfg.num_params,))
+    return PEPGState(
+        mu=mu,
+        sigma=jnp.full((cfg.num_params,), cfg.sigma_init),
+        baseline=jnp.zeros(()),
+        step=jnp.zeros((), jnp.int32),
+        best_fitness=jnp.full((), -jnp.inf),
+        best_theta=mu,
+    )
+
+
+def ask(cfg: PEPGConfig, state: PEPGState, key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sample the antithetic population.
+
+    Returns (population, eps): population is (2*pop_pairs, num_params) laid
+    out as [mu+eps_0..mu+eps_{P-1}, mu-eps_0..mu-eps_{P-1}].
+    """
+    eps = jax.random.normal(key, (cfg.pop_pairs, cfg.num_params)) * state.sigma[None, :]
+    pop = jnp.concatenate([state.mu[None, :] + eps, state.mu[None, :] - eps], axis=0)
+    return pop, eps
+
+
+def _rank_shape(f: jax.Array) -> jax.Array:
+    """Centered rank transform in [-0.5, 0.5]."""
+    n = f.shape[0]
+    ranks = jnp.argsort(jnp.argsort(f))
+    return ranks.astype(jnp.float32) / (n - 1) - 0.5
+
+
+def tell(cfg: PEPGConfig, state: PEPGState, eps: jax.Array,
+         fitness: jax.Array) -> PEPGState:
+    """PEPG update from population fitness (ordered as `ask` returned it)."""
+    p = cfg.pop_pairs
+    f_raw = fitness
+    f = _rank_shape(fitness) if cfg.rank_shaping else fitness
+    f_pos, f_neg = f[:p], f[p:]
+
+    r_diff = 0.5 * (f_pos - f_neg)                       # (P,)
+    r_avg = 0.5 * (f_pos + f_neg)                        # (P,)
+    baseline = jnp.where(
+        state.step == 0, r_avg.mean(),
+        cfg.baseline_decay * state.baseline + (1 - cfg.baseline_decay) * r_avg.mean())
+
+    # mu gradient:  T^T r_diff / P
+    d_mu = eps.T @ r_diff / p                            # (num_params,)
+    # sigma gradient: S^T (r_avg - b) / P
+    s_mat = (eps ** 2 - state.sigma[None, :] ** 2) / state.sigma[None, :]
+    d_sigma = s_mat.T @ (r_avg - baseline) / p
+
+    mu = state.mu + cfg.lr_mu * d_mu
+    sigma = jnp.clip(state.sigma + cfg.lr_sigma * d_sigma,
+                     cfg.sigma_min, cfg.sigma_max)
+
+    # elitism bookkeeping over raw (unshaped) fitness
+    pop = jnp.concatenate([state.mu[None, :] + eps, state.mu[None, :] - eps], 0)
+    best_idx = jnp.argmax(f_raw)
+    gen_best_f = f_raw[best_idx]
+    gen_best_theta = pop[best_idx]
+    improved = gen_best_f > state.best_fitness
+    return PEPGState(
+        mu=mu, sigma=sigma, baseline=baseline, step=state.step + 1,
+        best_fitness=jnp.where(improved, gen_best_f, state.best_fitness),
+        best_theta=jnp.where(improved, gen_best_theta, state.best_theta),
+    )
+
+
+def run(cfg: PEPGConfig,
+        fitness_fn: Callable[[jax.Array, jax.Array], jax.Array],
+        key: jax.Array,
+        generations: int,
+        log_every: int = 0) -> tuple[PEPGState, jax.Array]:
+    """Full ES loop.  fitness_fn(population, key) -> (pop_size,) fitness.
+
+    Returns (final_state, per-generation mean-fitness history).  The loop is
+    a lax.scan so the entire offline phase jit-compiles to one program.
+    """
+    state = init(cfg, key)
+
+    def gen(carry, k):
+        st = carry
+        k_ask, k_fit = jax.random.split(k)
+        pop, eps = ask(cfg, st, k_ask)
+        fit = fitness_fn(pop, k_fit)
+        st = tell(cfg, st, eps, fit)
+        return st, fit.mean()
+
+    keys = jax.random.split(jax.random.fold_in(key, 1), generations)
+    state, history = jax.lax.scan(gen, state, keys)
+    return state, history

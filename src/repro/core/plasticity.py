@@ -1,0 +1,127 @@
+"""Four-term parametric synaptic plasticity rule (FireFly-P, Sec. II-A).
+
+The paper's core algorithmic contribution::
+
+    dw_ij = alpha_ij * S_j(t) * S_i(t)   (associative potentiation, Hebbian)
+          + beta_ij  * S_j(t)            (presynaptic depression)
+          + gamma_ij * S_i(t)            (postsynaptic homeostasis)
+          + delta_ij                     (synaptic regularization / decay)
+
+with exponentially decaying spike traces ``S(t) = lam * S(t-1) + s(t)``.
+
+Hardware mapping note (DESIGN.md Sec. 2): the FPGA packs {alpha,beta,gamma,
+delta} into one wide word so the Plasticity Engine fetches all four with a
+single memory access.  We mirror that by storing theta as ONE packed array of
+shape ``(4, n_pre, n_post)`` — a single HBM->VMEM DMA per tile streams every
+coefficient plane (see kernels/plasticity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Indices into the packed theta array — keep in sync with kernels/plasticity.
+ALPHA, BETA, GAMMA, DELTA = 0, 1, 2, 3
+NUM_TERMS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class PlasticityConfig:
+    """Static configuration of the plasticity rule for one synaptic layer."""
+
+    n_pre: int
+    n_post: int
+    trace_decay: float = 0.8          # lam in S(t) = lam S(t-1) + s(t)
+    w_clip: Optional[float] = 4.0     # |w| clamp; None disables (paper relies
+                                      # on the delta term for boundedness, the
+                                      # clip is an fp16-overflow guard)
+    per_synapse: bool = True          # paper: theta is per-synapse (theta_ij)
+    dtype: jnp.dtype = jnp.float32    # bf16/fp16 supported (paper uses fp16)
+
+    @property
+    def theta_shape(self):
+        if self.per_synapse:
+            return (NUM_TERMS, self.n_pre, self.n_post)
+        return (NUM_TERMS,)
+
+
+def init_theta(cfg: PlasticityConfig, key: jax.Array, scale: float = 0.01) -> jax.Array:
+    """Initial plasticity coefficients (the object the offline ES optimizes)."""
+    return (scale * jax.random.normal(key, cfg.theta_shape)).astype(cfg.dtype)
+
+
+def init_traces(cfg: PlasticityConfig, batch: Optional[int] = None) -> tuple[jax.Array, jax.Array]:
+    """Zeroed (pre, post) spike traces."""
+    pre_shape = (cfg.n_pre,) if batch is None else (batch, cfg.n_pre)
+    post_shape = (cfg.n_post,) if batch is None else (batch, cfg.n_post)
+    return jnp.zeros(pre_shape, cfg.dtype), jnp.zeros(post_shape, cfg.dtype)
+
+
+def update_trace(trace: jax.Array, spikes: jax.Array, decay: float) -> jax.Array:
+    """S(t) = lam * S(t-1) + s(t).  (Sec. II-A, trace update.)"""
+    return (decay * trace + spikes.astype(trace.dtype)).astype(trace.dtype)
+
+
+def delta_w(theta: jax.Array, s_pre: jax.Array, s_post: jax.Array) -> jax.Array:
+    """Evaluate the four-term rule.
+
+    Args:
+      theta:  packed ``(4, n_pre, n_post)`` (or ``(4,)`` scalar-rule) coeffs.
+      s_pre:  pre-synaptic traces ``(n_pre,)`` or batched ``(B, n_pre)``.
+      s_post: post-synaptic traces ``(n_post,)`` or batched ``(B, n_post)``.
+
+    Returns:
+      ``(n_pre, n_post)`` weight update (batch-averaged when inputs are
+      batched — each agent in a batch is an independent plastic network only
+      when vmapped; a shared-weight batch averages, as in batched MNIST
+      online learning).
+    """
+    if s_pre.ndim == 1:
+        s_pre = s_pre[None]
+        s_post = s_post[None]
+    b = s_pre.shape[0]
+    compute = jnp.promote_types(theta.dtype, jnp.float32)
+    sp = s_pre.astype(compute)
+    so = s_post.astype(compute)
+    th = theta.astype(compute)
+    # Hebbian outer product, batch-averaged: (n_pre, n_post)
+    hebb = jnp.einsum("bi,bj->ij", sp, so) / b
+    pre_m = jnp.mean(sp, axis=0)    # (n_pre,)
+    post_m = jnp.mean(so, axis=0)   # (n_post,)
+    if theta.ndim == 1:  # scalar rule (shared across synapses)
+        dw = (th[ALPHA] * hebb
+              + th[BETA] * pre_m[:, None]
+              + th[GAMMA] * post_m[None, :]
+              + th[DELTA])
+    else:
+        dw = (th[ALPHA] * hebb
+              + th[BETA] * pre_m[:, None]
+              + th[GAMMA] * post_m[None, :]
+              + th[DELTA])
+    return dw.astype(theta.dtype)
+
+
+def apply_plasticity(w: jax.Array,
+                     theta: jax.Array,
+                     s_pre: jax.Array,
+                     s_post: jax.Array,
+                     cfg: PlasticityConfig) -> jax.Array:
+    """w <- clip(w + dw).  One online plasticity step for one layer."""
+    w_new = w + delta_w(theta, s_pre, s_post).astype(w.dtype)
+    if cfg.w_clip is not None:
+        w_new = jnp.clip(w_new, -cfg.w_clip, cfg.w_clip)
+    return w_new
+
+
+# ---------------------------------------------------------------------------
+# Surrogate-spike plasticity for non-spiking layers (LM plastic adapters).
+# The trace algebra is identical; the event source is a thresholded
+# activation instead of a LIF spike (DESIGN.md Sec. 4).
+# ---------------------------------------------------------------------------
+
+def spikify(x: jax.Array, threshold: float = 0.0) -> jax.Array:
+    """Binary surrogate spikes from continuous activations."""
+    return (x > threshold).astype(x.dtype)

@@ -1,0 +1,206 @@
+"""LIF spiking network with online plasticity (FireFly-P forward engine).
+
+Implements the paper's Forward Engine semantics functionally:
+
+  * psum stage:     I(t) = W^T s_in(t)              (matmul)
+  * neuron stage:   V(t) = V(t-1) + (I - V(t-1))/tau_m,  tau_m = 2
+                    s(t) = V(t) >= V_th ; hard reset on spike
+  * trace stage:    S(t) = lam S(t-1) + s(t)
+
+and the Scheduler's main-loop dataflow (Sec. III-C): within a timestep, layer
+L's plasticity update consumes the *current* timestep's (pre, post) traces
+while layer L+1's forward pass consumes layer L's fresh spikes.  On the FPGA
+these overlap in time; functionally the order below is exactly the data
+dependence the write-priority scheme enforces (forward always reads
+up-to-date weights: w_{t+1} = w_t + dw_t threaded through the scan carry).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plasticity as P
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFConfig:
+    tau_m: float = 2.0        # paper: tau_m = 2 -> multiplier-free on FPGA
+    v_threshold: float = 1.0
+    v_reset: float = 0.0      # hard reset (see DESIGN.md Sec. 8)
+    dtype: jnp.dtype = jnp.float32
+
+
+def lif_step(v: jax.Array, current: jax.Array, cfg: LIFConfig) -> tuple[jax.Array, jax.Array]:
+    """One LIF update.  Returns (v_new, spikes)."""
+    v = v + (current.astype(v.dtype) - v) * (1.0 / cfg.tau_m)
+    spikes = (v >= cfg.v_threshold).astype(v.dtype)
+    v = jnp.where(spikes > 0, cfg.v_reset, v)
+    return v, spikes
+
+
+def leaky_readout(v: jax.Array, current: jax.Array, cfg: LIFConfig) -> jax.Array:
+    """Non-spiking leaky-integrator readout (continuous actions)."""
+    return v + (current.astype(v.dtype) - v) * (1.0 / cfg.tau_m)
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    """Three-layer fully-connected controller (paper Sec. IV-A).
+
+    layer_sizes = (obs_dim, hidden, act_dim); hidden = 128 for control,
+    1024 for the MNIST task.
+    """
+    layer_sizes: Sequence[int] = (16, 128, 8)
+    timesteps: int = 4                      # SNN timesteps per control step
+    trace_decay: float = 0.8
+    lif: LIFConfig = LIFConfig()
+    encoding: str = "current"               # "current" | "rate"
+    spiking_readout: bool = False           # True for classification (spike counts)
+    w_clip: float = 4.0
+    dtype: jnp.dtype = jnp.float32
+    plastic: bool = True                    # False => fixed (weight-trained) SNN
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layer_sizes) - 1
+
+    def layer_plasticity_cfg(self, i: int) -> P.PlasticityConfig:
+        return P.PlasticityConfig(
+            n_pre=self.layer_sizes[i], n_post=self.layer_sizes[i + 1],
+            trace_decay=self.trace_decay, w_clip=self.w_clip, dtype=self.dtype)
+
+
+def init_state(cfg: SNNConfig, batch: Optional[int] = None):
+    """Network state: per-layer membrane V, per-population traces, weights.
+
+    Phase-2 deployment starts from ZERO weights (paper Sec. II-B): the rule,
+    not the initialization, builds the connectivity.
+    """
+    def z(*shape):
+        s = shape if batch is None else (batch, *shape)
+        return jnp.zeros(s, cfg.dtype)
+
+    sizes = cfg.layer_sizes
+    return {
+        "w": [jnp.zeros((sizes[i], sizes[i + 1]), cfg.dtype)
+              for i in range(cfg.num_layers)],
+        "v": [z(sizes[i + 1]) for i in range(cfg.num_layers)],
+        "trace": [z(sizes[i]) for i in range(len(sizes))],
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_theta(cfg: SNNConfig, key: jax.Array, scale: float = 0.01):
+    keys = jax.random.split(key, cfg.num_layers)
+    return [P.init_theta(cfg.layer_plasticity_cfg(i), keys[i], scale)
+            for i in range(cfg.num_layers)]
+
+
+def theta_size(cfg: SNNConfig) -> int:
+    return sum(P.NUM_TERMS * cfg.layer_sizes[i] * cfg.layer_sizes[i + 1]
+               for i in range(cfg.num_layers))
+
+
+def flatten_theta(theta) -> jax.Array:
+    return jnp.concatenate([t.reshape(-1) for t in theta])
+
+
+def unflatten_theta(cfg: SNNConfig, flat: jax.Array):
+    out, off = [], 0
+    for i in range(cfg.num_layers):
+        shape = (P.NUM_TERMS, cfg.layer_sizes[i], cfg.layer_sizes[i + 1])
+        n = shape[0] * shape[1] * shape[2]
+        out.append(flat[off:off + n].reshape(shape).astype(cfg.dtype))
+        off += n
+    return out
+
+
+def encode(cfg: SNNConfig, obs: jax.Array, key: Optional[jax.Array], t: jax.Array) -> jax.Array:
+    """Observation -> input drive for one timestep."""
+    if cfg.encoding == "rate":
+        p = jnp.clip(jnp.abs(obs), 0.0, 1.0)
+        u = jax.random.uniform(jax.random.fold_in(key, t), obs.shape)
+        return (u < p).astype(cfg.dtype) * jnp.sign(obs).astype(cfg.dtype)
+    return obs.astype(cfg.dtype)  # analog current injection
+
+
+def timestep(cfg: SNNConfig, state: dict, theta, drive: jax.Array,
+             teach: Optional[jax.Array] = None) -> tuple[dict, jax.Array]:
+    """One SNN timestep through all layers with (optional) plasticity.
+
+    Mirrors the Scheduler main loop: each layer's forward consumes the fresh
+    spikes of its predecessor; its plasticity update consumes the traces of
+    the *current* timestep (Phase A/B of Sec. III-C collapsed to dataflow).
+    Returns (new_state, output) where output is the readout activity.
+
+    `teach`: optional teaching current injected into the OUTPUT layer
+    (supervised online learning — drives the postsynaptic trace so the
+    Hebbian term binds features to the labelled class, the standard
+    supervised-STDP protocol used for the paper's MNIST task).
+    """
+    w, v, tr = list(state["w"]), list(state["v"]), list(state["trace"])
+    x = drive
+    # input trace: input drive acts as the presynaptic event for L1
+    tr[0] = P.update_trace(tr[0], x, cfg.trace_decay)
+    out = None
+    for i in range(cfg.num_layers):
+        current = x @ w[i]
+        if teach is not None and i == cfg.num_layers - 1:
+            current = current + teach.astype(current.dtype)
+        last = i == cfg.num_layers - 1
+        if last and not cfg.spiking_readout:
+            v[i] = leaky_readout(v[i], current, cfg.lif)
+            spikes = jnp.tanh(v[i])  # bounded continuous activity as "event"
+            out = v[i]
+        else:
+            v[i], spikes = lif_step(v[i], current, cfg.lif)
+            out = spikes
+        tr[i + 1] = P.update_trace(tr[i + 1], spikes, cfg.trace_decay)
+        if cfg.plastic:
+            pcfg = cfg.layer_plasticity_cfg(i)
+            # delta_w batch-averages internally when traces are batched
+            # (shared-weight mode, e.g. batched MNIST online learning);
+            # per-agent plastic nets vmap the whole controller instead.
+            w[i] = P.apply_plasticity(w[i], theta[i], tr[i], tr[i + 1], pcfg)
+        x = spikes
+    new_state = {"w": w, "v": v, "trace": tr, "t": state["t"] + 1}
+    return new_state, out
+
+
+def controller_step(cfg: SNNConfig, state: dict, theta, obs: jax.Array,
+                    key: Optional[jax.Array] = None) -> tuple[dict, jax.Array]:
+    """One control step = cfg.timesteps SNN timesteps on a held observation.
+
+    Returns (state, action) with action = mean readout over the window.
+    """
+    def body(carry, t):
+        st = carry
+        drive = encode(cfg, obs, key, st["t"])
+        st, out = timestep(cfg, st, theta, drive)
+        return st, out
+
+    state, outs = jax.lax.scan(body, state, jnp.arange(cfg.timesteps))
+    action = outs.mean(axis=0)
+    if not cfg.spiking_readout:
+        action = jnp.tanh(action)
+    return state, action
+
+
+def classify_window(cfg: SNNConfig, state: dict, theta, x: jax.Array,
+                    key: Optional[jax.Array] = None,
+                    teach: Optional[jax.Array] = None) -> tuple[dict, jax.Array]:
+    """Present x for cfg.timesteps; return (state, class scores = spike counts).
+
+    With `teach` (e.g. `label_onehot * amplitude`) the output population is
+    driven toward the labelled class during the window, so the plasticity
+    rule performs supervised online learning."""
+    def body(st, t):
+        drive = encode(cfg, x, key, st["t"])
+        st, out = timestep(cfg, st, theta, drive, teach=teach)
+        return st, out
+
+    state, outs = jax.lax.scan(body, state, jnp.arange(cfg.timesteps))
+    return state, outs.sum(axis=0)

@@ -1,0 +1,13 @@
+"""Deterministic, shard-aware data substrate (no external datasets offline).
+
+  tokens   — procedural LM token pipeline: seeded, restartable (step-indexed),
+             per-host sharded; a Zipf-ish unigram mixture with short-range
+             structure so cross-entropy has learnable signal
+  mnist    — procedural 28x28 digit renderer + Poisson-rate spike encoding
+             (Table II stand-in; accuracy not comparable, protocol is)
+"""
+from repro.data.tokens import TokenPipelineConfig, batch_at_step, host_batch
+from repro.data.mnist import (mnist_batch, render_digit, spike_encode)
+
+__all__ = ["TokenPipelineConfig", "batch_at_step", "host_batch",
+           "mnist_batch", "render_digit", "spike_encode"]

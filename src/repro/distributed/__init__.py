@@ -1,0 +1,9 @@
+from repro.distributed import ft, sharding
+from repro.distributed.sharding import (logical_to_physical, named_sharding,
+                                        shard_constraint)
+from repro.distributed.ft import (FaultTolerantRunner, StragglerMonitor,
+                                  elastic_restore)
+
+__all__ = ["ft", "sharding", "logical_to_physical", "named_sharding",
+           "shard_constraint", "FaultTolerantRunner", "StragglerMonitor",
+           "elastic_restore"]

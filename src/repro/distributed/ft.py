@@ -1,0 +1,166 @@
+"""Fault tolerance: NaN sentinel + rollback, straggler monitor, elastic re-mesh.
+
+Designed for the 1000+-node posture:
+
+  * FaultTolerantRunner wraps any step function.  Every step's loss is
+    checked by a NaN/inf sentinel; a poisoned step triggers rollback to the
+    last good checkpoint (skipping the poisoned data batch — the batch index
+    advances past it, which the deterministic pipeline makes exact).
+  * StragglerMonitor keeps a per-step wall-time EWMA and flags steps (hosts,
+    in multi-host deployments where each host reports) slower than
+    mean + k * std — the signal a scheduler uses to trigger hot-spare swaps.
+  * elastic_restore() reshards any checkpoint onto any new mesh: storage is
+    unsharded (checkpoint/manager.py), so restore = device_put onto the new
+    NamedShardings.  Works across device-count changes (elastic scaling).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+def loss_is_bad(loss) -> bool:
+    """Host-side NaN/inf sentinel (call on a fetched scalar)."""
+    v = float(loss)
+    return not np.isfinite(v)
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA step-time tracker; flags outliers that exceed BOTH
+    mean + k*std and (1 + rel_min)*mean — the relative floor stops noise
+    flags when the variance is tiny (lock-step SPMD steps)."""
+
+    alpha: float = 0.1
+    k: float = 3.0
+    rel_min: float = 0.2
+    warmup: int = 5
+
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    flagged: int = 0
+
+    def observe(self, dt: float) -> bool:
+        """Record one step time; returns True if it is a straggler event."""
+        self.n += 1
+        if self.n <= self.warmup:
+            # prime the statistics; never flag during warmup
+            d = dt - self.mean
+            self.mean += d / self.n
+            self.var += d * (dt - self.mean)
+            return False
+        std = max((self.var / max(self.n - 1, 1)) ** 0.5, 1e-9)
+        is_straggler = (dt > self.mean + self.k * std
+                        and dt > (1.0 + self.rel_min) * self.mean)
+        if is_straggler:
+            self.flagged += 1
+        # EWMA update (outliers damped so one straggler doesn't poison stats)
+        w = self.alpha if not is_straggler else self.alpha * 0.1
+        self.mean = (1 - w) * self.mean + w * dt
+        self.var = (1 - w) * self.var + w * (dt - self.mean) ** 2
+        return is_straggler
+
+
+class FaultTolerantRunner:
+    """Checkpoint/restart + NaN rollback + straggler accounting around a step.
+
+    step_fn(state, batch) -> (state, metrics) must be pure (jit-compiled).
+    `state` is any pytree that fully determines training (params, opt state,
+    step counter, rng).  Batches come from a step-indexed pipeline so replay
+    after rollback is deterministic.
+    """
+
+    def __init__(self, step_fn: Callable, ckpt: CheckpointManager,
+                 save_every: int = 100, max_rollbacks: int = 3,
+                 shardings: Any = None):
+        self.step_fn = step_fn
+        self.ckpt = ckpt
+        self.save_every = save_every
+        self.max_rollbacks = max_rollbacks
+        self.shardings = shardings
+        self.monitor = StragglerMonitor()
+        self.rollbacks = 0
+        self.skipped_steps: list[int] = []
+        self.events: list[dict] = []
+
+    def restore_or_init(self, state):
+        """Resume from the latest checkpoint if one exists."""
+        if self.ckpt.latest_step() is not None:
+            state, step, _ = self.ckpt.restore(state, shardings=self.shardings)
+            self.events.append({"kind": "resume", "step": step})
+            return state, step
+        return state, 0
+
+    def run(self, state, batches: Callable[[int], Any], num_steps: int,
+            start_step: int = 0, log_every: int = 0):
+        """Drive `num_steps` steps with checkpointing and rollback.
+
+        batches(step) -> batch pytree (deterministic, step-indexed).
+        Returns (state, history list of metric dicts).
+        """
+        history = []
+        step = start_step
+        if self.ckpt.latest_step() is None:
+            self.ckpt.save(step, state, blocking=True)
+
+        while step < num_steps:
+            if step in self.skipped_steps:
+                step += 1            # poisoned batch — do not replay it
+                continue
+            t0 = time.perf_counter()
+            new_state, metrics = self.step_fn(state, batches(step))
+            loss = jax.device_get(metrics["loss"])   # sync point
+            dt = time.perf_counter() - t0
+
+            if loss_is_bad(loss):
+                # Rollback: reload the last good checkpoint, replay the
+                # deterministic batches after it, and SKIP the poisoned one
+                # (the skip set is consulted at the top of the loop).
+                self.rollbacks += 1
+                self.events.append({"kind": "rollback", "step": step,
+                                    "loss": float(loss)})
+                if self.rollbacks > self.max_rollbacks:
+                    raise RuntimeError(
+                        f"{self.rollbacks} rollbacks exceed budget; aborting")
+                state, good_step, _ = self.ckpt.restore(
+                    state, shardings=self.shardings)
+                self.skipped_steps.append(step)
+                step = min(good_step, step)
+                continue
+
+            if self.monitor.observe(dt):
+                self.events.append({"kind": "straggler", "step": step,
+                                    "dt": dt, "mean": self.monitor.mean})
+
+            state = new_state
+            step += 1
+            history.append({"step": step, "loss": float(loss), "dt": dt})
+            if log_every and step % log_every == 0:
+                print(f"step {step}: loss={float(loss):.4f} dt={dt*1e3:.1f}ms")
+            if step % self.save_every == 0:
+                self.ckpt.save(step, state, blocking=False)
+
+        self.ckpt.save(num_steps, state, blocking=True)
+        return state, history
+
+
+def elastic_restore(ckpt_dir: str, tree_like, new_mesh, sharding_fn,
+                    step: Optional[int] = None):
+    """Restore a checkpoint onto a DIFFERENT mesh (elastic scaling).
+
+    sharding_fn(mesh) -> pytree of NamedShardings matching tree_like.
+    Checkpoint leaves are stored unsharded, so this is a pure device_put
+    re-layout — any divisor mesh works without resharding passes.
+    """
+    from repro.checkpoint import load_checkpoint
+    shardings = sharding_fn(new_mesh)
+    return load_checkpoint(ckpt_dir, tree_like, step=step,
+                           shardings=shardings)

@@ -1,0 +1,135 @@
+"""Logical -> physical sharding vocabulary.
+
+Models annotate params/activations with LOGICAL axes:
+
+  "data"   — batch-like; maps to ("pod", "data") on a multi-pod mesh so the
+             global batch shards across pods transparently
+  "model"  — tensor-parallel axis (heads / ffn / vocab / experts)
+  "seq"    — sequence/context-parallel; rides the data axes (long-context
+             cells with tiny batch shard sequence instead of batch)
+  None     — replicated
+
+The same model code therefore lowers unchanged on (data, model) and
+(pod, data, model) meshes — the pod axis is purely a launch-layer concern.
+
+The active mesh is process-global (set by the launcher / dry-run); model
+code only ever names logical axes.  Without an active mesh every constraint
+is a no-op, so unit tests run the identical code on one CPU device.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+class use_mesh:
+    """Context manager: `with sharding.use_mesh(mesh): ...`"""
+
+    def __init__(self, mesh: Optional[Mesh]):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.prev = get_mesh()
+        set_mesh(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_mesh(self.prev)
+        return False
+
+
+def _axis(mesh: Mesh, logical):
+    if logical is None:
+        return None
+    if isinstance(logical, (tuple, list)):
+        out = []
+        for a in logical:
+            m = _axis(mesh, a)
+            if m is None:
+                continue
+            out.extend(m if isinstance(m, tuple) else (m,))
+        return tuple(out) if out else None
+    if logical in ("data", "seq"):
+        return ("pod", "data") if "pod" in mesh.axis_names else "data"
+    if logical == "model":
+        return "model"
+    raise ValueError(f"unknown logical axis {logical!r}")
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        n = 1
+        for a in phys:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[phys]
+
+
+def logical_to_physical(mesh: Mesh, spec, shape=None) -> P:
+    """spec: tuple/list of logical axis names.
+
+    Two shape-aware fallbacks keep every arch/mesh combination lowerable:
+
+    * divisibility — axes that do not evenly divide the corresponding
+      dimension are dropped (GSPMD rejects uneven input shardings), e.g. a
+      40-head or 50280-vocab dim over a 16-way model axis replicates.
+    * dedup — a physical mesh axis may shard at most one dim; the first
+      (shape-valid) claimant wins and later duplicates are dropped.  This
+      lets plans list a PREFERENCE ORDER, e.g. MoE expert weights
+      ("model", "data", "model"): expert-parallel when num_experts divides
+      the axis (deepseek 64e), falling back to ffn-sharding when it does
+      not (grok 8e on a 16-way axis).
+    """
+    phys = [_axis(mesh, s) for s in tuple(spec)]
+    if shape is not None:
+        phys = [p if dim % _axis_size(mesh, p) == 0 else None
+                for p, dim in zip(phys, shape)]
+    used: set = set()
+    out = []
+    for i, p in enumerate(phys):
+        if p is None:
+            out.append(None)
+            continue
+        axes = p if isinstance(p, tuple) else (p,)
+        kept = tuple(a for a in axes if a not in used)
+        if shape is not None:
+            while kept and shape[i] % _axis_size(mesh, kept) != 0:
+                kept = kept[:-1]
+        if not kept:
+            out.append(None)
+            continue
+        used.update(kept)
+        out.append(kept if len(kept) > 1 else kept[0])
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, spec, shape=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_physical(mesh, spec, shape))
+
+
+def shard_constraint(x, spec):
+    """with_sharding_constraint in logical axes; no-op without a mesh.
+
+    Shape-aware: non-dividing axes are replicated instead of erroring, so
+    the same model code serves every arch/mesh combination.
+    """
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(mesh, spec, x.shape))

@@ -1,0 +1,28 @@
+"""Pure-JAX continuous-control environments (Brax stand-ins, DESIGN.md §8.1).
+
+Three tasks mirroring the paper's evaluation protocol (Sec. IV-A):
+
+  * direction: planar 8-thruster locomotor trained on 8 target directions,
+               evaluated on 72 unseen directions            (Brax `ant`)
+  * velocity:  1-D runner trained on 8 target velocities,
+               evaluated on 72 unseen velocities            (Brax `halfcheetah`)
+  * position:  2-link torque-controlled reacher with random
+               goal positions                               (Brax `ur5e`)
+
+All are reset/step pure functions, vmap- and scan-compatible, with an
+actuator-mask channel to simulate morphology damage ("leg failure").
+"""
+from repro.envs.base import Env, EnvState
+from repro.envs.direction import DirectionEnv
+from repro.envs.velocity import VelocityEnv
+from repro.envs.reacher import ReacherEnv
+
+ENVS = {
+    "direction": DirectionEnv,
+    "velocity": VelocityEnv,
+    "position": ReacherEnv,
+}
+
+
+def make(name: str, **kwargs) -> Env:
+    return ENVS[name](**kwargs)

@@ -1,0 +1,63 @@
+"""Environment interface: pure reset/step functions over a pytree state."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EnvState(NamedTuple):
+    phys: jax.Array        # flat physics state vector
+    task: jax.Array        # task parameter (direction / velocity / goal)
+    actuator_mask: jax.Array  # (act_dim,) 1 = healthy, 0 = failed
+    t: jax.Array           # step counter
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    """Subclasses define obs_dim/act_dim/episode_len and _dynamics."""
+
+    episode_len: int = 200
+    dt: float = 0.05
+
+    # --- to override -------------------------------------------------------
+    obs_dim: int = 0
+    act_dim: int = 0
+
+    def init_phys(self, key: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def dynamics(self, phys: jax.Array, force: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def observe(self, state: EnvState) -> jax.Array:
+        raise NotImplementedError
+
+    def reward(self, state: EnvState, action: jax.Array,
+               new_phys: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def train_tasks(self) -> jax.Array:
+        raise NotImplementedError
+
+    def eval_tasks(self) -> jax.Array:
+        raise NotImplementedError
+
+    # --- common ------------------------------------------------------------
+    def reset(self, key: jax.Array, task: jax.Array,
+              actuator_mask: jax.Array | None = None) -> EnvState:
+        if actuator_mask is None:
+            actuator_mask = jnp.ones((self.act_dim,))
+        return EnvState(phys=self.init_phys(key), task=task,
+                        actuator_mask=actuator_mask,
+                        t=jnp.zeros((), jnp.int32))
+
+    def step(self, state: EnvState, action: jax.Array) -> tuple[EnvState, jax.Array]:
+        """Returns (new_state, reward).  Actions in [-1, 1]."""
+        act = jnp.clip(action, -1.0, 1.0) * state.actuator_mask
+        new_phys = self.dynamics(state.phys, act)
+        new_state = EnvState(phys=new_phys, task=state.task,
+                             actuator_mask=state.actuator_mask, t=state.t + 1)
+        return new_state, self.reward(state, act, new_phys)

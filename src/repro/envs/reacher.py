@@ -1,0 +1,66 @@
+"""Position-generalization task (Brax `ur5e` stand-in).
+
+A torque-controlled 2-link planar arm reaching toward goal positions sampled
+in the workspace annulus.  Train goals: 8 fixed positions; eval: 72 unseen.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, EnvState
+
+
+@dataclasses.dataclass(frozen=True)
+class ReacherEnv(Env):
+    episode_len: int = 150
+    dt: float = 0.05
+    obs_dim: int = 11     # sin/cos q(4), dq(2), goal(2), tip-goal(2), 1
+    act_dim: int = 2
+    link: float = 0.5
+    damping: float = 1.0
+    gain: float = 2.0
+
+    def init_phys(self, key: jax.Array) -> jax.Array:
+        # phys = [q1, q2, dq1, dq2]
+        q0 = 0.1 * jax.random.normal(key, (2,))
+        return jnp.concatenate([q0, jnp.zeros(2)])
+
+    def _tip(self, q: jax.Array) -> jax.Array:
+        x = self.link * (jnp.cos(q[0]) + jnp.cos(q[0] + q[1]))
+        y = self.link * (jnp.sin(q[0]) + jnp.sin(q[0] + q[1]))
+        return jnp.array([x, y])
+
+    def dynamics(self, phys: jax.Array, force: jax.Array) -> jax.Array:
+        q, dq = phys[:2], phys[2:]
+        ddq = self.gain * force - self.damping * dq
+        dq = dq + self.dt * ddq
+        q = q + self.dt * dq
+        return jnp.concatenate([q, dq])
+
+    def observe(self, state: EnvState) -> jax.Array:
+        q, dq = state.phys[:2], state.phys[2:]
+        tip = self._tip(q)
+        goal = state.task
+        return jnp.concatenate([
+            jnp.sin(q), jnp.cos(q), dq, goal, goal - tip, jnp.array([1.0])])
+
+    def reward(self, state: EnvState, action: jax.Array,
+               new_phys: jax.Array) -> jax.Array:
+        tip = self._tip(new_phys[:2])
+        dist = jnp.linalg.norm(tip - state.task)
+        ctrl = 0.01 * jnp.sum(action ** 2)
+        return -dist - ctrl
+
+    def _goals(self, n: int, phase: float) -> jax.Array:
+        ang = (jnp.arange(n) + phase) * (2 * jnp.pi / n)
+        r = 0.7 * self.link * 2 * 0.5 + 0.35  # mid-workspace ring
+        return jnp.stack([r * jnp.cos(ang), r * jnp.sin(ang)], axis=1)
+
+    def train_tasks(self) -> jax.Array:
+        return self._goals(8, 0.0)
+
+    def eval_tasks(self) -> jax.Array:
+        return self._goals(72, 0.5)

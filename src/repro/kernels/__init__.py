@@ -1,0 +1,17 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec) with jnp oracles.
+
+  plasticity — fused dual-engine SNN step (the paper's Table I datapath)
+  lif        — psum-stationary matmul + LIF (Forward Engine)
+  attention  — flash attention, GQA-aware block index maps
+  ssd        — Mamba2 chunked state-space scan, VMEM-resident state
+
+Every op exposes impl="xla" (oracle; what dry-runs lower) and impl="pallas"
+(TPU target; interpret=True executes the kernel body on CPU for tests).
+"""
+from repro.kernels.attention import attention
+from repro.kernels.lif import lif_forward
+from repro.kernels.plasticity import dual_engine_step
+from repro.kernels.ssd import ssd, ssd_decode_step
+
+__all__ = ["attention", "lif_forward", "dual_engine_step", "ssd",
+           "ssd_decode_step"]

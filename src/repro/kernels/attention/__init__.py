@@ -1,0 +1,3 @@
+from repro.kernels.attention.ops import attention
+
+__all__ = ["attention"]

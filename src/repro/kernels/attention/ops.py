@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for attention. impl: "xla" (oracle) | "pallas"."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.attention import kernel as _kernel
+from repro.kernels.attention import ref as _ref
+from repro.kernels.attention import xla_flash as _xla_flash
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "kv_len", "impl", "interpret",
+                     "block_q", "block_kv"))
+def attention(q, k, v, *, causal: bool = True, scale=None, kv_len=None,
+              impl: str = "xla", interpret: bool = False,
+              block_q: int = 128, block_kv: int = 128):
+    if impl == "pallas":
+        return _kernel.flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale, kv_len=kv_len,
+            block_q=block_q, block_kv=block_kv, interpret=interpret)
+    if impl == "xla_flash":
+        return _xla_flash.blocked_attention(
+            q, k, v, causal=causal, scale=scale, kv_len=kv_len)
+    return _ref.mha(q, k, v, causal=causal, scale=scale, kv_len=kv_len)

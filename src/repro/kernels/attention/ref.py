@@ -1,0 +1,39 @@
+"""Pure-jnp oracle: multi-head attention with GQA, causal masking, KV length.
+
+Layouts: q (B, Sq, H, D); k/v (B, Skv, HKV, D); HKV divides H.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def mha(q, k, v, *, causal: bool = True, scale: Optional[float] = None,
+        kv_len: Optional[int] = None):
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert h % hkv == 0
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    kr = jnp.repeat(k, g, axis=2)  # (B, Skv, H, D)
+    vr = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        # queries are the LAST sq positions of the kv sequence (decode-friendly)
+        offset = skv - sq
+        qi = jnp.arange(sq)[:, None] + offset
+        ki = jnp.arange(skv)[None, :]
+        mask = mask & (ki <= qi)
+    if kv_len is not None:
+        mask = mask & (jnp.arange(skv)[None, :] < kv_len)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

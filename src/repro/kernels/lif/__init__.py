@@ -1,0 +1,3 @@
+from repro.kernels.lif.ops import lif_forward
+
+__all__ = ["lif_forward"]

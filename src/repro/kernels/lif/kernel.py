@@ -1,0 +1,89 @@
+"""Forward Engine Pallas kernel: psum-stationary blocked matmul + LIF + trace.
+
+Unlike kernels/plasticity (which holds the whole fan-in per tile), this
+kernel demonstrates the paper's psum-stationary dataflow literally: the grid
+walks (m, k) tiles with k innermost; an fp32 VMEM scratch accumulator plays
+the role of the PE psum registers — input current accumulates locally and
+only touches the output (neuron state) once, after the last k tile, exactly
+like the FPGA's "accumulate in PE registers to minimize on-chip memory
+access".  Neuron dynamics + trace update fire on the epilogue tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lif_kernel(x_ref, w_ref, v_ref, tr_ref, s_out, v_out, tr_out, acc_ref,
+                *, tau_m, v_th, v_reset, trace_decay, n_k):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # psum-stationary accumulation (PE-register analogue)
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                            w_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        current = acc_ref[...]
+        v = v_ref[...].astype(jnp.float32)
+        v_new = v + (current - v) * (1.0 / tau_m)
+        spikes = (v_new >= v_th).astype(jnp.float32)
+        v_upd = jnp.where(spikes > 0, v_reset, v_new)
+        s_out[...] = spikes.astype(s_out.dtype)
+        v_out[...] = v_upd.astype(v_out.dtype)
+        tr_out[...] = (trace_decay * tr_ref[...].astype(jnp.float32)
+                       + spikes).astype(tr_out.dtype)
+
+
+def lif_forward_pallas(x, w, v, trace, *, tau_m: float = 2.0,
+                       v_th: float = 1.0, v_reset: float = 0.0,
+                       trace_decay: float = 0.8, block_m: int = 128,
+                       block_k: int = 128, interpret: bool = False):
+    b, kdim = x.shape
+    _, m = w.shape
+    bm, bk = min(block_m, m), min(block_k, kdim)
+    # Pad the contraction dim to a block multiple: out-of-bounds tile reads
+    # are undefined (NaN in interpret mode) and K-padding feeds the psum.
+    k_pad = (-kdim) % bk
+    if k_pad:
+        x = jnp.pad(x, ((0, 0), (0, k_pad)))
+        w = jnp.pad(w, ((0, k_pad), (0, 0)))
+        kdim += k_pad
+    n_k = pl.cdiv(kdim, bk)
+    grid = (pl.cdiv(m, bm), n_k)  # k innermost => acc persists across k tiles
+
+    kernel = functools.partial(
+        _lif_kernel, tau_m=tau_m, v_th=v_th, v_reset=v_reset,
+        trace_decay=trace_decay, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, bk), lambda j, k: (0, k)),
+            pl.BlockSpec((bk, bm), lambda j, k: (k, j)),
+            pl.BlockSpec((b, bm), lambda j, k: (0, j)),
+            pl.BlockSpec((b, bm), lambda j, k: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, bm), lambda j, k: (0, j)),
+            pl.BlockSpec((b, bm), lambda j, k: (0, j)),
+            pl.BlockSpec((b, bm), lambda j, k: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), x.dtype),
+            jax.ShapeDtypeStruct((b, m), v.dtype),
+            jax.ShapeDtypeStruct((b, m), trace.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((b, bm), jnp.float32)],
+        interpret=interpret,
+    )(x, w, v, trace)

@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for the Forward Engine kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.lif import kernel as _kernel
+from repro.kernels.lif import ref as _ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tau_m", "v_th", "v_reset", "trace_decay", "impl",
+                     "interpret", "block_m", "block_k"))
+def lif_forward(x, w, v, trace, *, tau_m: float = 2.0, v_th: float = 1.0,
+                v_reset: float = 0.0, trace_decay: float = 0.8,
+                impl: str = "xla", interpret: bool = False,
+                block_m: int = 128, block_k: int = 128):
+    kw = dict(tau_m=tau_m, v_th=v_th, v_reset=v_reset, trace_decay=trace_decay)
+    if impl == "pallas":
+        return _kernel.lif_forward_pallas(
+            x, w, v, trace, block_m=block_m, block_k=block_k,
+            interpret=interpret, **kw)
+    return _ref.lif_forward(x, w, v, trace, **kw)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the Forward Engine (matmul + LIF + trace), no plasticity."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lif_forward(x, w, v, trace, *, tau_m: float = 2.0, v_th: float = 1.0,
+                v_reset: float = 0.0, trace_decay: float = 0.8):
+    """x (B,K), w (K,M), v (B,M), trace (B,M) ->
+    (spikes (B,M), v_out (B,M), trace_new (B,M))."""
+    compute = jnp.float32
+    current = jnp.dot(x.astype(compute), w.astype(compute))
+    v_new = v.astype(compute) + (current - v.astype(compute)) / tau_m
+    spikes = (v_new >= v_th).astype(compute)
+    v_out = jnp.where(spikes > 0, v_reset, v_new)
+    trace_new = trace_decay * trace.astype(compute) + spikes
+    return (spikes.astype(x.dtype), v_out.astype(v.dtype),
+            trace_new.astype(trace.dtype))

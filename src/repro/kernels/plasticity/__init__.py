@@ -1,0 +1,3 @@
+from repro.kernels.plasticity.ops import dual_engine_step
+
+__all__ = ["dual_engine_step"]

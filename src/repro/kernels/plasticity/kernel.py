@@ -1,0 +1,108 @@
+"""Fused dual-engine Pallas TPU kernel (FireFly-P Secs. III-B/C on TPU).
+
+One kernel invocation = one SNN timestep for one synaptic layer: the Forward
+Engine (psum matmul -> LIF -> trace) AND the Plasticity Engine (four-term
+dw) execute on the SAME VMEM-resident weight/coefficient tiles.
+
+FPGA -> TPU adaptation (DESIGN.md Sec. 2):
+  * psum-stationary PE registers  -> fp32 accumulation inside the MXU dot;
+    the full fan-in N is kept resident per tile (controller layers are
+    <= a few K wide, so (N, bm) weight tiles fit VMEM comfortably).
+  * wide packed {a,b,g,d} fetch   -> theta is ONE (4, N, bm) block => a
+    single HBM->VMEM DMA streams all four coefficient planes per tile.
+  * dual-engine overlap           -> fusion: w/theta tiles are read once and
+    consumed by both engines before leaving VMEM; there is no second pass
+    over HBM for the update (the FPGA hides update latency in time, we
+    eliminate the traffic instead).
+
+Grid: (M // bm,) — one program per block of postsynaptic neurons.  Every
+block sees the whole batch and the whole fan-in, so both matmuls (forward
+x@w and Hebbian trace_pre^T@trace_post) are single MXU calls per tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.plasticity import ALPHA, BETA, GAMMA, DELTA
+
+
+def _dual_engine_kernel(x_ref, w_ref, theta_ref, v_ref, tpre_ref, tpost_ref,
+                        s_out, v_out, tpost_out, w_out,
+                        *, tau_m, v_th, v_reset, trace_decay, w_clip,
+                        plastic, batch):
+    # ---- Forward Engine ----------------------------------------------------
+    x = x_ref[...].astype(jnp.float32)          # (B, N)
+    w = w_ref[...].astype(jnp.float32)          # (N, bm)
+    current = jnp.dot(x, w, preferred_element_type=jnp.float32)   # psum (MXU)
+    v = v_ref[...].astype(jnp.float32)
+    v_new = v + (current - v) * (1.0 / tau_m)   # LIF, tau_m = 2
+    spikes = (v_new >= v_th).astype(jnp.float32)
+    v_upd = jnp.where(spikes > 0, v_reset, v_new)
+    tpost = tpost_ref[...].astype(jnp.float32)
+    tpost_new = trace_decay * tpost + spikes    # Trace Update Unit
+
+    s_out[...] = spikes.astype(s_out.dtype)
+    v_out[...] = v_upd.astype(v_out.dtype)
+    tpost_out[...] = tpost_new.astype(tpost_out.dtype)
+
+    # ---- Plasticity Engine (same tiles, still in VMEM) ---------------------
+    if plastic:
+        th = theta_ref[...].astype(jnp.float32)  # (4, N, bm) single wide fetch
+        tpre = tpre_ref[...].astype(jnp.float32)  # (B, N)
+        hebb = jnp.dot(tpre.T, tpost_new,
+                       preferred_element_type=jnp.float32) / batch
+        pre_m = jnp.mean(tpre, axis=0)           # (N,)
+        post_m = jnp.mean(tpost_new, axis=0)     # (bm,)
+        dw = (th[ALPHA] * hebb + th[BETA] * pre_m[:, None]
+              + th[GAMMA] * post_m[None, :] + th[DELTA])
+        w_new = jnp.clip(w + dw, -w_clip, w_clip)
+        w_out[...] = w_new.astype(w_out.dtype)
+    else:
+        w_out[...] = w.astype(w_out.dtype)
+
+
+def dual_engine_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
+                            tau_m: float = 2.0, v_th: float = 1.0,
+                            v_reset: float = 0.0, trace_decay: float = 0.8,
+                            w_clip: float = 4.0, plastic: bool = True,
+                            block_m: int = 128, interpret: bool = False):
+    """Pallas-call wrapper.  Shapes as in ref.dual_engine_step."""
+    b, n = x.shape
+    n2, m = w.shape
+    assert n == n2, (x.shape, w.shape)
+    bm = min(block_m, m)
+    grid = (pl.cdiv(m, bm),)
+
+    kernel = functools.partial(
+        _dual_engine_kernel, tau_m=tau_m, v_th=v_th, v_reset=v_reset,
+        trace_decay=trace_decay, w_clip=w_clip, plastic=plastic, batch=b)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, n), lambda j: (0, 0)),        # x: full batch/fan-in
+            pl.BlockSpec((n, bm), lambda j: (0, j)),       # w tile
+            pl.BlockSpec((4, n, bm), lambda j: (0, 0, j)),  # packed theta tile
+            pl.BlockSpec((b, bm), lambda j: (0, j)),       # v tile
+            pl.BlockSpec((b, n), lambda j: (0, 0)),        # pre trace
+            pl.BlockSpec((b, bm), lambda j: (0, j)),       # post trace tile
+        ],
+        out_specs=[
+            pl.BlockSpec((b, bm), lambda j: (0, j)),       # spikes
+            pl.BlockSpec((b, bm), lambda j: (0, j)),       # v out
+            pl.BlockSpec((b, bm), lambda j: (0, j)),       # post trace out
+            pl.BlockSpec((n, bm), lambda j: (0, j)),       # w out
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), x.dtype),
+            jax.ShapeDtypeStruct((b, m), v.dtype),
+            jax.ShapeDtypeStruct((b, m), trace_post.dtype),
+            jax.ShapeDtypeStruct((n, m), w.dtype),
+        ],
+        interpret=interpret,
+    )(x, w, theta, v, trace_pre, trace_post)

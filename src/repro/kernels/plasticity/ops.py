@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the fused dual-engine step.
+
+`impl` selects: "pallas" (TPU target; `interpret=True` for CPU validation)
+or "xla" (the ref oracle — what the dry-run and CPU benchmarks lower).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.plasticity import kernel as _kernel
+from repro.kernels.plasticity import ref as _ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tau_m", "v_th", "v_reset", "trace_decay", "w_clip",
+                     "plastic", "impl", "interpret", "block_m"))
+def dual_engine_step(x, w, theta, v, trace_pre, trace_post, *,
+                     tau_m: float = 2.0, v_th: float = 1.0,
+                     v_reset: float = 0.0, trace_decay: float = 0.8,
+                     w_clip: float = 4.0, plastic: bool = True,
+                     impl: str = "xla", interpret: bool = False,
+                     block_m: int = 128):
+    kw = dict(tau_m=tau_m, v_th=v_th, v_reset=v_reset,
+              trace_decay=trace_decay, w_clip=w_clip, plastic=plastic)
+    if impl == "pallas":
+        return _kernel.dual_engine_step_pallas(
+            x, w, theta, v, trace_pre, trace_post,
+            block_m=block_m, interpret=interpret, **kw)
+    return _ref.dual_engine_step(x, w, theta, v, trace_pre, trace_post, **kw)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the fused dual-engine step (forward + plasticity).
+
+Semantics of one SNN timestep for one synaptic layer, matching
+core/snn.timestep for a spiking layer:
+
+    I        = x @ w                       # psum stage (Forward Engine)
+    v_new    = v + (I - v) / tau_m         # neuron dynamics, tau_m = 2
+    s        = v_new >= v_th               # spike
+    v_out    = v_reset where s else v_new
+    tp_new   = lam * trace_post + s        # trace update
+    hebb     = trace_pre^T @ tp_new / B    # Plasticity Engine (4 terms)
+    dw       = a*hebb + b*mean(pre)[:,N] + g*mean(tp_new)[N,:] + d
+    w_new    = clip(w + dw, -clip, clip)
+
+`trace_pre` is the *already-updated* presynaptic trace for this timestep
+(the Forward Engine's Trace Update Unit runs upstream of this layer).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.plasticity import ALPHA, BETA, GAMMA, DELTA
+
+
+def dual_engine_step(x, w, theta, v, trace_pre, trace_post, *,
+                     tau_m: float = 2.0, v_th: float = 1.0,
+                     v_reset: float = 0.0, trace_decay: float = 0.8,
+                     w_clip: float = 4.0, plastic: bool = True):
+    """Oracle.  Shapes: x (B,N), w (N,M), theta (4,N,M), v (B,M),
+    trace_pre (B,N), trace_post (B,M).
+
+    Returns (spikes (B,M), v_out (B,M), trace_post_new (B,M), w_new (N,M)).
+    """
+    compute = jnp.float32
+    b = x.shape[0]
+    current = jnp.dot(x.astype(compute), w.astype(compute))
+    v_new = v.astype(compute) + (current - v.astype(compute)) / tau_m
+    spikes = (v_new >= v_th).astype(compute)
+    v_out = jnp.where(spikes > 0, v_reset, v_new)
+    tp_new = trace_decay * trace_post.astype(compute) + spikes
+
+    if plastic:
+        th = theta.astype(compute)
+        hebb = jnp.dot(trace_pre.astype(compute).T, tp_new) / b
+        pre_m = trace_pre.astype(compute).mean(0)
+        post_m = tp_new.mean(0)
+        dw = (th[ALPHA] * hebb + th[BETA] * pre_m[:, None]
+              + th[GAMMA] * post_m[None, :] + th[DELTA])
+        w_new = jnp.clip(w.astype(compute) + dw, -w_clip, w_clip)
+    else:
+        w_new = w.astype(compute)
+
+    return (spikes.astype(x.dtype), v_out.astype(v.dtype),
+            tp_new.astype(trace_post.dtype), w_new.astype(w.dtype))

@@ -1,0 +1,3 @@
+from repro.kernels.ssd.ops import ssd, ssd_decode_step
+
+__all__ = ["ssd", "ssd_decode_step"]

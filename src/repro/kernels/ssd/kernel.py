@@ -1,0 +1,109 @@
+"""Mamba2 SSD Pallas TPU kernel — chunked scan with VMEM-resident state.
+
+Grid: (B*H, n_chunks), chunk innermost.  The (S, P) state matrix lives in
+fp32 VMEM scratch and persists across the sequential chunk walk (TPU grids
+execute serially on a core), so the recurrent carry never round-trips HBM.
+Each chunk does two MXU matmuls (C@B^T duality term, gated @ x) plus the
+rank-1-sum state update — arithmetic intensity scales with chunk length,
+which is how the SSD insight maps onto the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, sf_ref, state_scr,
+                *, n_chunks, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)      # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)    # (Q,)
+    a = a_ref[0, 0].astype(jnp.float32)   # scalar
+    bm = b_ref[0].astype(jnp.float32)     # (Q, S)
+    cm = c_ref[0].astype(jnp.float32)     # (Q, S)
+
+    lg = a * jnp.cumsum(dt)               # (Q,) cumulative log-decay
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = row >= col
+
+    # ---- intra-chunk (duality matmul) --------------------------------------
+    gate = jnp.where(tri, jnp.exp(lg[:, None] - lg[None, :]), 0.0)  # (Q,Q)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)    # (Q,Q)
+    g = cb * gate * dt[None, :]
+    y_intra = jax.lax.dot_general(g, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk (carry-in state) ---------------------------------------
+    state = state_scr[...]                                          # (S, P)
+    y_inter = jnp.exp(lg)[:, None] * jax.lax.dot_general(
+        cm, state, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # ---- state update -------------------------------------------------------
+    w = jnp.exp(lg[-1] - lg) * dt                                   # (Q,)
+    upd = jax.lax.dot_general(bm * w[:, None], x, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)   # (S, P)
+    state_scr[...] = jnp.exp(lg[-1]) * state + upd
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        sf_ref[0] = state_scr[...].astype(sf_ref.dtype)
+
+
+def ssd_pallas(x, dt, a, bmat, c, *, chunk: int = 64, interpret: bool = False):
+    """x (B,L,H,P), dt (B,L,H), a (H,), bmat/c (B,L,H,S).
+
+    Returns (y (B,L,H,P), state_final (B,H,S,P)).  L must be chunk-padded by
+    the wrapper (ops.py pads with dt=0 steps, which are exact no-ops:
+    da=exp(0)=1, update term scales by dt=0).
+    """
+    bsz, length, h, p = x.shape
+    s = bmat.shape[-1]
+    assert length % chunk == 0, (length, chunk)
+    n_chunks = length // chunk
+    bh = bsz * h
+
+    xf = x.transpose(0, 2, 1, 3).reshape(bh, length, p)
+    dtf = dt.transpose(0, 2, 1).reshape(bh, length)
+    bf = bmat.transpose(0, 2, 1, 3).reshape(bh, length, s)
+    cf = c.transpose(0, 2, 1, 3).reshape(bh, length, s)
+    af = jnp.tile(a[None, :], (bsz, 1)).reshape(bh, 1)
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks, chunk=chunk)
+
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(bh, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda i, ci: (i, ci)),
+            pl.BlockSpec((1, 1), lambda i, ci: (i, 0)),
+            pl.BlockSpec((1, chunk, s), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk, s), lambda i, ci: (i, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, s, p), lambda i, ci: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, length, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, s, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((s, p), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf)
+
+    return (y.reshape(bsz, h, length, p).transpose(0, 2, 1, 3),
+            sf.reshape(bsz, h, s, p))

@@ -1,0 +1,48 @@
+"""Jit'd public wrapper for the SSD scan. impl: "xla" (chunked ref) | "scan" |
+"pallas".  Pads L to a chunk multiple with dt=0 no-op steps."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import kernel as _kernel
+from repro.kernels.ssd import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def ssd(x, dt, a, bmat, c, *, chunk: int = 64, impl: str = "xla",
+        interpret: bool = False):
+    """x (B,L,H,P), dt (B,L,H), a (H,), bmat/c (B,L,H,S) ->
+    (y (B,L,H,P), final_state (B,H,S,P))."""
+    if impl == "scan":
+        return _ref.ssd_scan_ref(x, dt, a, bmat, c)
+
+    length = x.shape[1]
+    pad = (-length) % chunk
+    if pad:
+        # dt=0 steps are exact no-ops for both state and (discarded) outputs
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    if impl == "pallas":
+        y, sf = _kernel.ssd_pallas(x, dt, a, bmat, c, chunk=chunk,
+                                   interpret=interpret)
+    else:
+        y, sf = _ref.ssd_chunked_ref(x, dt, a, bmat, c, chunk=chunk)
+    return y[:, :length], sf
+
+
+def ssd_decode_step(state, xt, dtt, a, bt, ct):
+    """Single-token recurrent step. state (B,H,S,P); xt (B,H,P); dtt (B,H);
+    bt/ct (B,H,S) -> (new_state, y (B,H,P))."""
+    compute = jnp.float32
+    xt, dtt, bt, ct = (t.astype(compute) for t in (xt, dtt, bt, ct))
+    da = jnp.exp(a.astype(compute)[None, :] * dtt)
+    upd = dtt[..., None, None] * bt[..., :, None] * xt[..., None, :]
+    state = da[..., None, None] * state.astype(compute) + upd
+    y = jnp.einsum("bhs,bhsp->bhp", ct, state)
+    return state, y.astype(xt.dtype)

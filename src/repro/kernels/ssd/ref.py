@@ -1,0 +1,102 @@
+"""Mamba2 SSD (state-space duality) oracles.
+
+Recurrence per (batch, head) with state matrix ``state in R^{S x P}``::
+
+    da_t    = exp(A * dt_t)                       # scalar decay, A < 0
+    state_t = da_t * state_{t-1} + dt_t * B_t (x) x_t      # outer product
+    y_t     = C_t @ state_t                                 # (P,)
+
+Two oracles:
+  * ssd_scan_ref    — literal lax.scan recurrence (ground truth; also the
+                      decode step).
+  * ssd_chunked_ref — block-parallel "chunked" formulation (the SSD trick):
+    intra-chunk quadratic term + inter-chunk state pass.  This is the XLA
+    path the models lower for train/prefill, and the algorithm the Pallas
+    kernel implements per-tile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, a, b, c, state0=None):
+    """x (B,L,H,P), dt (B,L,H), a (H,), b/c (B,L,H,S) -> (y, state_final).
+
+    y (B,L,H,P); state (B,H,S,P).
+    """
+    bsz, length, h, p = x.shape
+    s = b.shape[-1]
+    compute = jnp.float32
+    x, dt, b, c = (t.astype(compute) for t in (x, dt, b, c))
+    a = a.astype(compute)
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, s, p), compute)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,S), (B,H,S)
+        da = jnp.exp(a[None, :] * dtt)                    # (B,H)
+        upd = dtt[..., None, None] * bt[..., :, None] * xt[..., None, :]
+        state = da[..., None, None] * state + upd         # (B,H,S,P)
+        y = jnp.einsum("bhs,bhsp->bhp", ct, state)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          b.transpose(1, 0, 2, 3), c.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state0.astype(compute), xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state
+
+
+def ssd_chunked_ref(x, dt, a, bmat, c, state0=None, chunk: int = 64):
+    """Chunked SSD — identical result to ssd_scan_ref (up to fp error)."""
+    bsz, length, h, p = x.shape
+    s = bmat.shape[-1]
+    assert length % chunk == 0, (length, chunk)
+    n = length // chunk
+    compute = jnp.float32
+    xc = x.astype(compute).reshape(bsz, n, chunk, h, p)
+    dtc = dt.astype(compute).reshape(bsz, n, chunk, h)
+    bc = bmat.astype(compute).reshape(bsz, n, chunk, h, s)
+    cc = c.astype(compute).reshape(bsz, n, chunk, h, s)
+    a = a.astype(compute)
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, s, p), compute)
+
+    # cumulative log-decay within each chunk: Lg[b,n,t,h] = A_h * cumsum(dt)
+    lg = a[None, None, None, :] * jnp.cumsum(dtc, axis=2)
+
+    # ---- intra-chunk (quadratic within chunk, the "duality" matmul) -------
+    # decay(t,s) = exp(Lg_t - Lg_s) for s <= t
+    diff = lg[:, :, :, None, :] - lg[:, :, None, :, :]        # (B,n,t,s,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    gate = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bnths,bnzhs->bntzh", cc, bc)             # (B,n,t,z,H)
+    y_intra = jnp.einsum("bntzh,bntzh,bnzh,bnzhp->bnthp",
+                         cb, gate, dtc, xc)
+
+    # ---- chunk-state contributions ----------------------------------------
+    # state_in for chunk i = decayed carry of previous chunks (sequential scan
+    # over n chunks — n is small: L/chunk)
+    chunk_decay = jnp.exp(lg[:, :, -1, :])                    # (B,n,H)
+    # state contribution of chunk i: sum_s exp(Lg_last - Lg_s) dt_s B_s x x_s
+    w = jnp.exp(lg[:, :, -1:, :] - lg) * dtc                  # (B,n,t,H)
+    state_c = jnp.einsum("bnth,bnths,bnthp->bnhsp", w, bc, xc)
+
+    def carry_fn(state, inp):
+        dec, sc = inp                                          # (B,H), (B,H,S,P)
+        state_in = state
+        state = dec[..., None, None] * state + sc
+        return state, state_in
+
+    states_in = jax.lax.scan(
+        carry_fn, state0.astype(compute),
+        (chunk_decay.transpose(1, 0, 2), state_c.transpose(1, 0, 2, 3, 4)))
+    state_f, sins = states_in
+    sins = sins.transpose(1, 0, 2, 3, 4)                      # (B,n,H,S,P)
+
+    # inter-chunk output: y_t += exp(Lg_t) * C_t @ state_in
+    y_inter = jnp.einsum("bnth,bnths,bnhsp->bnthp",
+                         jnp.exp(lg), cc, sins)
+
+    y = (y_intra + y_inter).reshape(bsz, length, h, p)
+    return y.astype(x.dtype), state_f

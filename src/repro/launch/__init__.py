@@ -1,0 +1,3 @@
+# launch layer: mesh construction, input specs, step builders, dry-run CLI,
+# end-to-end train/serve drivers.  Import nothing heavy at package level so
+# `import repro.launch.dryrun` can set XLA_FLAGS before jax initializes.

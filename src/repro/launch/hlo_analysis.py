@@ -1,0 +1,443 @@
+"""Post-optimization HLO analyzer: FLOPs / bytes / collective traffic with
+while-loop trip-count attribution.
+
+Why not ``compiled.cost_analysis()`` alone?  XLA's HloCostAnalysis visits a
+``while`` body ONCE — for scan-over-layers models (all of ours) that
+undercounts FLOPs and collective bytes by a factor of n_layers.  The
+optimized HLO text carries ``backend_config={"known_trip_count":{"n":"80"}}``
+on every counted loop, so we parse the module into a computation call graph
+and multiply every nested computation's totals by the trip counts on the
+path from ENTRY.
+
+Per-device semantics: the analyzed module is the post-SPMD-partition
+program, so every number here is PER DEVICE (chip) — exactly what the
+roofline terms want (all chips run the same program concurrently).
+
+Bytes-accessed model (mirrors HloCostAnalysis):
+  * instruction bytes = result bytes + operand read bytes
+  * dynamic-slice / gather read only the slice, not the source buffer
+  * dynamic-update-slice reads+writes only the update window
+  * fusion operands consumed exclusively by slicing ops inside the fused
+    computation are charged at slice size (this is what keeps a 2 GiB KV
+    cache from being "read" once per decode layer)
+
+Collective wire-bytes model (ring algorithms, G = group size, R = result
+bytes):
+    all-gather          R * (G-1)/G         (bytes received per device)
+    all-reduce          2 * R * (G-1)/G     (reduce-scatter + all-gather)
+    reduce-scatter      R * (G-1)           (operand = R*G)
+    all-to-all          R * (G-1)/G
+    collective-permute  R
+
+FLOPs are counted from ``dot`` instructions (2 * prod(result) * K); the VPU
+elementwise tail inside fusions is not counted — the MXU term dominates
+every cell we report, and the bytes term covers elementwise traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string; tuple types are summed."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# %name = TYPE op(...).  TYPE may be a tuple containing /*index=N*/ comments,
+# so match lazily up to the first ``word(`` (types never precede '(').
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{"n"\s*:\s*"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    "while", "conditional", "call", "custom-call", "copy-start", "copy-done",
+    # dtype converts are XLA:CPU float-normalization artifacts: the CPU
+    # backend legalizes bf16 dots by materializing f32 copies; on the TPU
+    # target bf16 is native and the convert fuses into its consumer.
+    "convert",
+}
+_SLICING_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+def _through_convert(comp: "Comp", name: str) -> Optional["Instr"]:
+    """Resolve an operand through convert instructions / wrapped-convert
+    fusions so reads are charged at the source (storage) dtype."""
+    inst = comp.by_name.get(name)
+    for _ in range(4):
+        if inst is None:
+            return None
+        if inst.op == "convert" and inst.operands:
+            inst = comp.by_name.get(inst.operands[0])
+            continue
+        if (inst.op == "fusion" and inst.name.startswith("wrapped_convert")
+                and inst.operands):
+            inst = comp.by_name.get(inst.operands[0])
+            continue
+        return inst
+    return inst
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type: str
+    op: str
+    operands: List[str]
+    line: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    by_name: Dict[str, Instr] = dataclasses.field(default_factory=dict)
+
+
+def _split_computations(text: str) -> tuple[Dict[str, Comp], Optional[str]]:
+    comps: Dict[str, Comp] = {}
+    entry: Optional[str] = None
+    cur: Optional[Comp] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and "->" in line and line.endswith("{"):
+            cur = Comp(hdr.group(2))
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        iname, itype, op, rest = m.groups()
+        # operand names: everything inside the first (...) of the call
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPERANDS_RE.findall(rest[:end])
+        inst = Instr(iname, itype.strip(), op, operands, line,
+                     is_root="ROOT " in line)
+        cur.instrs.append(inst)
+        cur.by_name[iname] = inst
+    return comps, entry
+
+
+def _result_write_bytes(inst: Instr, comps: Dict[str, Comp]) -> float:
+    """Result bytes, window-sized for in-place dynamic-update-slice roots."""
+    if inst.op == "dynamic-update-slice":
+        return 0.0  # write charged by _operand_read_bytes (update window x2)
+    if inst.op == "fusion":
+        fm = _CALLS_RE.search(inst.line)
+        fused = comps.get(fm.group(1)) if fm else None
+        if fused is not None:
+            roots = [i for i in fused.instrs if i.is_root]
+            r = roots[0] if roots else None
+            # look through transparent ops (convert/copy/bitcast chains)
+            for _ in range(4):
+                if r is not None and r.op in _TRANSPARENT_OPS and r.operands:
+                    r = fused.by_name.get(r.operands[0])
+                else:
+                    break
+            if r is not None and r.op == "dynamic-update-slice":
+                upd = (fused.by_name.get(r.operands[1])
+                       if len(r.operands) > 1 else None)
+                return float(_shape_bytes(upd.type) if upd
+                             else _shape_bytes(r.type))
+    return float(_shape_bytes(inst.type))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))   # [num_groups, group_size]
+    return 1
+
+
+def _collective_wire_bytes(kind: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(result_bytes) * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+def _operand_read_bytes(comp: Comp, inst: Instr, comps: Dict[str, Comp]) -> float:
+    """Bytes read from inst's operands, with slice-aware accounting."""
+    if inst.op in ("dynamic-slice", "slice", "gather"):
+        # reads ~result-sized window (+ tiny indices)
+        return _shape_bytes(inst.type)
+    if inst.op == "dynamic-update-slice":
+        # reads the update window and writes it back; the aliased source
+        # buffer is not otherwise traversed
+        upd = comp.by_name.get(inst.operands[1]) if len(inst.operands) > 1 else None
+        return 2.0 * (_shape_bytes(upd.type) if upd else _shape_bytes(inst.type))
+
+    if inst.op == "fusion":
+        fm = _CALLS_RE.search(inst.line)
+        fused = comps.get(fm.group(1)) if fm else None
+        total = 0.0
+        for pos, oname in enumerate(inst.operands):
+            o = _through_convert(comp, oname)
+            if o is None:
+                continue
+            full = _shape_bytes(o.type)
+            if fused is not None:
+                total += _fused_param_read(fused, pos, full)
+            else:
+                total += full
+        return total
+
+    total = 0.0
+    for oname in inst.operands:
+        o = _through_convert(comp, oname)
+        if o is not None:
+            total += _shape_bytes(o.type)
+    return total
+
+
+_TRANSPARENT_OPS = {"convert", "copy", "bitcast", "bitcast-convert"}
+
+
+def _fused_param_read(fused: Comp, param_idx: int, full_bytes: int) -> float:
+    """Bytes a fusion reads from parameter `param_idx`: slice/window-sized
+    when every (transitively, through transparent ops) internal consumer is
+    a slicing op or the in-place buffer of a dynamic-update-slice; else the
+    full operand."""
+    pname = None
+    for inst in fused.instrs:
+        if inst.op == "parameter":
+            m = _PARAM_IDX_RE.search(inst.line)
+            if m and int(m.group(1)) == param_idx:
+                pname = inst.name
+                break
+    if pname is None:
+        return full_bytes
+    frontier = [pname]
+    read = 0.0
+    seen = set()
+    for _ in range(6):
+        next_frontier = []
+        for name in frontier:
+            for c in fused.instrs:
+                if name not in c.operands or c.name in seen:
+                    continue
+                seen.add(c.name)
+                if c.op in _TRANSPARENT_OPS:
+                    next_frontier.append(c.name)
+                elif c.op in _SLICING_OPS:
+                    read += _shape_bytes(c.type)
+                elif c.op == "dynamic-update-slice":
+                    # reading as the in-place buffer (operand 0) is free;
+                    # as the update (operand 1+) costs window bytes
+                    if c.operands and c.operands[0] != name:
+                        upd = fused.by_name.get(c.operands[1]) \
+                            if len(c.operands) > 1 else None
+                        read += _shape_bytes(upd.type) if upd else full_bytes
+                else:
+                    return float(full_bytes)
+        if not next_frontier:
+            break
+        frontier = next_frontier
+    return min(read, float(full_bytes))
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_wire: float = 0.0
+    per_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    children: List[tuple] = dataclasses.field(default_factory=list)
+
+
+def _comp_stats(comp: Comp, comps: Dict[str, Comp]) -> CompStats:
+    st = CompStats()
+    for inst in comp.instrs:
+        op = inst.op
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base in _COLLECTIVES:
+            rb = _shape_bytes(inst.type)
+            if op.endswith("-start") and inst.type.startswith("("):
+                rb //= 2     # async tuple carries (operand, result)
+            g = _group_size(inst.line)
+            wire = _collective_wire_bytes(base, rb, g)
+            st.collective_wire += wire
+            st.per_kind[base] = st.per_kind.get(base, 0.0) + wire
+            st.bytes += rb
+            continue
+        if op == "while":
+            trip = 1
+            tm = _TRIP_RE.search(inst.line)
+            if tm:
+                trip = int(tm.group(1))
+            bm = _BODY_RE.search(inst.line)
+            if bm:
+                st.children.append((bm.group(1), trip))
+            cm = _COND_RE.search(inst.line)
+            if cm:
+                st.children.append((cm.group(1), trip + 1))
+            continue
+        if op == "conditional":
+            bm = _BRANCH_RE.search(inst.line)
+            if bm:
+                for branch in _OPERANDS_RE.findall(bm.group(1)):
+                    st.children.append((branch, 1))
+            continue
+        if op in ("call", "custom-call"):
+            cm = _CALLS_RE.search(inst.line)
+            if cm:
+                st.children.append((cm.group(1), 1))
+
+        if op == "dot":
+            out_dims = _shape_dims(inst.type) or []
+            out_n = 1
+            for d in out_dims:
+                out_n *= d
+            k = 1
+            cm = _CONTRACT_RE.search(inst.line)
+            if cm and inst.operands:
+                lhs = comp.by_name.get(inst.operands[0])
+                lhs_dims = _shape_dims(lhs.type) if lhs else None
+                if lhs_dims is not None:
+                    for ci in cm.group(1).split(","):
+                        if ci:
+                            idx = int(ci)
+                            if idx < len(lhs_dims):
+                                k *= lhs_dims[idx]
+            st.flops += 2.0 * out_n * k
+
+        if op not in _FREE_OPS:
+            st.bytes += _result_write_bytes(inst, comps)
+            st.bytes += _operand_read_bytes(comp, inst, comps)
+    return st
+
+
+def parse_hlo(text: str):
+    comps, entry = _split_computations(text)
+    stats = {name: _comp_stats(c, comps) for name, c in comps.items()}
+    # fusions' internal computations are charged at the call site; do not
+    # also walk them as standalone children
+    return stats, entry
+
+
+def analyze(text: str) -> dict:
+    """Whole-module totals with trip-count multiplication from ENTRY."""
+    stats, entry = parse_hlo(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: Dict[str, tuple] = {}
+
+    def total(name: str, depth=0) -> tuple:
+        if name in memo:
+            return memo[name]
+        if name not in stats or depth > 64:
+            return (0.0, 0.0, 0.0, {})
+        st = stats[name]
+        f, b, c = st.flops, st.bytes, st.collective_wire
+        per_kind = dict(st.per_kind)
+        for child, mult in st.children:
+            cf, cb, cc, ck = total(child, depth + 1)
+            f += mult * cf
+            b += mult * cb
+            c += mult * cc
+            for kind, v in ck.items():
+                per_kind[kind] = per_kind.get(kind, 0.0) + mult * v
+        memo[name] = (f, b, c, per_kind)
+        return memo[name]
+
+    f, b, c, per_kind = total(entry)
+    return {
+        "flops_per_device": f,
+        "bytes_per_device": b,
+        "collective_wire_bytes_per_device": c,
+        "collective_by_kind": per_kind,
+    }
+
+
+def roofline_terms(analysis: dict, hw: dict) -> dict:
+    """Seconds per step for the three roofline terms (per-device == global
+    wall-clock for an SPMD program)."""
+    compute = analysis["flops_per_device"] / hw["peak_flops_bf16"]
+    memory = analysis["bytes_per_device"] / hw["hbm_bw"]
+    collective = analysis["collective_wire_bytes_per_device"] / hw["ici_bw"]
+    dominant = max((compute, "compute"), (memory, "memory"),
+                   (collective, "collective"))[1]
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant,
+            "step_s_max": max(compute, memory, collective),
+            "step_s_sum": compute + memory + collective}
+
+
+if __name__ == "__main__":
+    import sys
+    with open(sys.argv[1]) as fh:
+        print(json.dumps(analyze(fh.read()), indent=2))

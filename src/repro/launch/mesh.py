@@ -1,0 +1,36 @@
+"""Production mesh construction (functions, not module constants, so the
+import never touches jax device state).
+
+  single-pod:  (16, 16)      axes (data, model)   — 256 chips (one v5e pod)
+  multi-pod:   (2, 16, 16)   axes (pod, data, model) — 512 chips
+
+Model code names only LOGICAL axes ("data"/"model"/"seq");
+distributed/sharding.py maps "data" to ("pod","data") when a pod axis
+exists, so the same program lowers on either mesh unchanged.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Mesh over whatever devices exist (CPU smoke / small runs)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+HW = {
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link
+    "hbm_bytes": 16 * 1024**3,   # 16 GiB
+}

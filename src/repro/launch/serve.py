@@ -1,0 +1,101 @@
+"""Batched serving driver: prefill + decode with KV/SSM caches, optional
+FireFly-P plastic adapter (the paper's Phase-2 online adaptation running
+inside an LM serving stack).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+        --batch 4 --prompt-len 32 --gen 16 --plastic
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import make_decode_step, make_prefill
+from repro.models import transformer as T
+
+
+def generate(cfg, params, prompts, max_len: int, gen: int,
+             temperature: float = 0.0, seed: int = 0):
+    """Greedy/temperature sampling loop.  prompts (B, S) int32.
+
+    Returns (tokens (B, gen), per-step latencies)."""
+    prefill = jax.jit(make_prefill(cfg, max_len))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+
+    logits, cache = prefill(params, prompts)
+    key = jax.random.PRNGKey(seed)
+    outs, lats = [], []
+    tok = _sample(logits, key, temperature)
+    for i in range(gen):
+        outs.append(tok)
+        t0 = time.perf_counter()
+        logits, cache = decode(params, cache, tok[:, None])
+        logits.block_until_ready()
+        lats.append(time.perf_counter() - t0)
+        key = jax.random.fold_in(key, i)
+        tok = _sample(logits, key, temperature)
+    return jnp.stack(outs, axis=1), lats
+
+
+def _sample(logits, key, temperature):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--plastic", action="store_true",
+                    help="attach the FireFly-P plastic adapter at decode")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (2.3x decode memory-roofline win)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if args.plastic:
+        cfg = cfg.with_(plastic_adapter=True,
+                        adapter_neurons=min(128, cfg.d_model))
+    if args.kv_quant:
+        cfg = cfg.with_(kv_quant=True)
+    mesh = make_local_mesh()
+    max_len = args.prompt_len + args.gen
+
+    with shd.use_mesh(mesh), mesh:
+        params = T.init(cfg, jax.random.PRNGKey(args.seed))
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(args.seed + 1),
+            (args.batch, args.prompt_len), 0, cfg.vocab)
+        if cfg.input_mode == "embeddings":
+            prompts_in = jax.nn.one_hot(prompts % cfg.d_model, cfg.d_model,
+                                        dtype=cfg.adtype)
+        else:
+            prompts_in = prompts
+        toks, lats = generate(cfg, params, prompts_in, max_len, args.gen,
+                              args.temperature, args.seed)
+
+    print(json.dumps({
+        "arch": cfg.name, "plastic": bool(cfg.plastic_adapter),
+        "batch": args.batch, "generated": int(toks.shape[1]),
+        "decode_ms_p50": sorted(lats)[len(lats) // 2] * 1e3,
+        "decode_ms_mean": sum(lats) / len(lats) * 1e3,
+        "tokens_per_s": args.batch * len(lats) / sum(lats),
+    }, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,191 @@
+"""GQA attention block: plan + apply (train/prefill) + cached decode.
+
+Features per assigned-arch needs: grouped KV heads, optional QKV bias
+(qwen1.5/qwen2), optional per-head q/k RMSNorm (qwen3), RoPE.
+
+Sharding: heads shard over "model"; the output projection contracts over
+the sharded head axis (XLA inserts the reduce-scatter/all-reduce); KV cache
+shards batch over "data" and kv-heads over "model" (for batch=1 long-context
+cells the cache seq axis takes "seq" instead — see plan_kv_cache).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_constraint
+from repro.kernels.attention import attention as attn_op
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamDesc, rms_norm, rope
+
+
+def plan(cfg: ModelConfig, stack: int = 0) -> dict:
+    """Parameter plan for one attention block (stacked `stack` deep if >0)."""
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.dtype
+
+    def st(shape, spec):
+        if stack:
+            return (stack, *shape), (None, *spec)
+        return shape, spec
+
+    def desc(shape, spec, **kw):
+        shape, spec = st(shape, spec)
+        return ParamDesc(shape, spec, dtype=dt, **kw)
+
+    p = {
+        "wq": desc((d, h * hd), ("data", "model"), fan_in=d),
+        "wk": desc((d, kv * hd), ("data", "model"), fan_in=d),
+        "wv": desc((d, kv * hd), ("data", "model"), fan_in=d),
+        "wo": desc((h * hd, d), ("model", "data"), fan_in=h * hd),
+        "norm": desc((d,), (None,), init="ones"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = desc((h * hd,), ("model",), init="zeros")
+        p["bk"] = desc((kv * hd,), ("model",), init="zeros")
+        p["bv"] = desc((kv * hd,), ("model",), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = desc((hd,), (None,), init="ones")
+        p["k_norm"] = desc((hd,), (None,), init="ones")
+    return p
+
+
+def _qkv(params, x, cfg: ModelConfig, positions):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dk->bsk", x, params["wq"])
+    k = jnp.einsum("bsd,dk->bsk", x, params["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q, k = rope(q, k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply(params, x, cfg: ModelConfig, positions=None,
+          impl: str = "xla_flash"):
+    """Full-sequence attention (train / prefill).  x (B,S,D) -> (B,S,D)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    q, k, v = _qkv(params, h, cfg, positions)
+    q = shard_constraint(q, ("data", None, "model", None))
+    k = shard_constraint(k, ("data", None, "model", None))
+    v = shard_constraint(v, ("data", None, "model", None))
+    o = attn_op(q, k, v, causal=True, impl=impl)
+    o = jnp.einsum("bsk,kd->bsd", o.reshape(b, s, -1), params["wo"])
+    # collected cache shards sequence over "model" so the stacked prefill
+    # buffer (L,B,S,KV,HD) never materializes unsharded per device
+    k = shard_constraint(k, ("data", "model", None, None))
+    v = shard_constraint(v, ("data", "model", None, None))
+    return x + shard_constraint(o, cfg.act_spec), (k, v)
+
+
+def quantize_kv(x):
+    """Symmetric int8 over the head_dim axis.  x (..., HD) ->
+    (q int8 (..., HD), scale f32 (...,))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def plan_kv_scale(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: int) -> ParamDesc:
+    """Scale plane for the int8 KV cache (same sharding as the cache)."""
+    spec_b = None if batch == 1 else "data"
+    spec_s = ("data", "model") if batch == 1 else "model"
+    return ParamDesc((n_layers, batch, max_len, cfg.n_kv_heads),
+                     (None, spec_b, spec_s, None),
+                     init="zeros", dtype="float32")
+
+
+def plan_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: int, seq_shard: bool = False) -> ParamDesc:
+    """KV cache descriptor for one attention stack (k and v identical).
+
+    The cache SEQUENCE axis shards over "model" (context-parallel decode):
+    kv-head counts (8, 24, 32, 40...) rarely divide a 16-way model axis, but
+    32k/524k sequences always do, and the decode attention's softmax
+    reductions partition cleanly over the sequence.  batch=1 long-context
+    cells spread sequence over data+model (all 256/512 chips)."""
+    spec_b = None if batch == 1 else "data"
+    spec_s = ("data", "model") if batch == 1 else "model"
+    return ParamDesc(
+        (n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd),
+        (None, spec_b, spec_s, None, None),
+        init="zeros", dtype=cfg.dtype)
+
+
+def decode_step(params, x, cache_k, cache_v, index, cfg: ModelConfig,
+                scale_k=None, scale_v=None):
+    """One-token cached attention.  x (B,1,D); cache (B,Smax,KV,HD); index ()
+    is the current length.  Returns (out (B,1,D), new_k, new_v) — plus
+    (new_scale_k, new_scale_v) appended when cfg.kv_quant."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), index, jnp.int32)
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    q, k, v = _qkv(params, h, cfg, positions)
+    if cfg.kv_quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, kq, (0, index, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, vq, (0, index, 0, 0))
+        scale_k = jax.lax.dynamic_update_slice(scale_k, ks, (0, index, 0))
+        scale_v = jax.lax.dynamic_update_slice(scale_v, vs, (0, index, 0))
+        # dequant fuses into the attention matmul on TPU; the resident cache
+        # (and its HBM reads) are int8 + one f32 scale per (pos, kv-head)
+        k_use = dequantize_kv(cache_k, scale_k, cfg.adtype)
+        v_use = dequantize_kv(cache_v, scale_v, cfg.adtype)
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, index, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, index, 0, 0))
+        k_use, v_use = cache_k, cache_v
+    # causal=False: every cached position is <= current; padding handled by
+    # masking positions >= index+1 via kv_len... kv_len must be static, so we
+    # mask inside via explicit iota compare (dynamic index).
+    o = _decode_attend(q, k_use, v_use, index, cfg)
+    o = jnp.einsum("bsk,kd->bsd", o.reshape(b, 1, -1), params["wo"])
+    out = x + shard_constraint(o, ("data", None, None))
+    if cfg.kv_quant:
+        return out, cache_k, cache_v, scale_k, scale_v
+    return out, cache_k, cache_v
+
+
+def _decode_attend(q, k, v, index, cfg: ModelConfig):
+    """q (B,1,H,HD) vs full cache with dynamic length mask.
+
+    MXU-style numerics: operands stay in their storage dtype (bf16) with
+    fp32 ACCUMULATION via preferred_element_type — upcasting k/v wholesale
+    would materialize an fp32 copy of the entire cache (gigabytes).
+    """
+    b, _, h, hd = q.shape
+    smax, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    valid = (jnp.arange(smax) <= index)[None, None, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, hd).astype(q.dtype)

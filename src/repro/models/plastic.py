@@ -1,0 +1,79 @@
+"""Plastic fast-weight adapter — FireFly-P's rule as an LM serving feature.
+
+A two-population spiking micro-network rides on the backbone's hidden state
+during DECODE (adaptation is a serve-time behavior, matching the paper's
+Phase 2).  Per decode step, per request:
+
+    drive   = h @ P_in                  (fixed random projection, D -> N)
+    s1      = LIF(v1, drive)            (presynaptic population)
+    s2      = LIF(v2, s1 @ W_fast)      (postsynaptic population)
+    h'      = h + scale * (s2 @ P_out)  (readout back into the residual)
+    W_fast += four-term rule(theta, trace(s1), trace(s2))   per request
+
+W_fast starts at ZERO and lives in the decode cache (B, N, N) — one plastic
+memory per request stream, continuously rewritten online.  theta is the
+offline-learned rule (ES / PEPG in core/), frozen at serve time.
+
+Applicability notes per arch family are in DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plasticity as P
+from repro.core.snn import LIFConfig, lif_step
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamDesc
+
+LIF = LIFConfig(tau_m=2.0, v_threshold=1.0, v_reset=0.0)
+
+
+def plan(cfg: ModelConfig) -> dict:
+    d, n = cfg.d_model, cfg.adapter_neurons
+    return {
+        "p_in": ParamDesc((d, n), ("data", "model"), fan_in=d, dtype=cfg.dtype),
+        "p_out": ParamDesc((n, d), ("model", "data"), fan_in=n, dtype=cfg.dtype),
+        "theta": ParamDesc((P.NUM_TERMS, n, n), (None, None, "model"),
+                           scale=0.3, fan_in=n, dtype="float32"),
+        "scale": ParamDesc((), (), init="zeros", dtype="float32"),
+    }
+
+
+def plan_cache(cfg: ModelConfig, batch: int) -> dict:
+    n = cfg.adapter_neurons
+    f32 = "float32"
+
+    def z(shape, spec):
+        return ParamDesc(shape, spec, init="zeros", dtype=f32)
+
+    return {
+        "w_fast": z((batch, n, n), ("data", None, "model")),
+        "v1": z((batch, n), ("data", "model")),
+        "v2": z((batch, n), ("data", "model")),
+        "tr1": z((batch, n), ("data", "model")),
+        "tr2": z((batch, n), ("data", "model")),
+    }
+
+
+def decode_step(params, state: dict, h, cfg: ModelConfig,
+                trace_decay: float = 0.8, w_clip: float = 4.0):
+    """h (B,1,D) -> (h', new_state).  One online plasticity step per token."""
+    b, _, d = h.shape
+    n = cfg.adapter_neurons
+    drive = jnp.einsum("bd,dn->bn", h[:, 0].astype(jnp.float32),
+                       params["p_in"].astype(jnp.float32))
+    v1, s1 = lif_step(state["v1"], drive, LIF)
+    cur2 = jnp.einsum("bn,bnm->bm", s1, state["w_fast"])
+    v2, s2 = lif_step(state["v2"], cur2, LIF)
+    tr1 = P.update_trace(state["tr1"], s1, trace_decay)
+    tr2 = P.update_trace(state["tr2"], s2, trace_decay)
+
+    # four-term rule, per request stream (vmap over batch)
+    dw = jax.vmap(P.delta_w, in_axes=(None, 0, 0))(
+        params["theta"].astype(jnp.float32), tr1, tr2)
+    w_fast = jnp.clip(state["w_fast"] + dw, -w_clip, w_clip)
+
+    out = jnp.einsum("bn,nd->bd", s2, params["p_out"].astype(jnp.float32))
+    h = h + (params["scale"] * out[:, None, :]).astype(h.dtype)
+    return h, {"w_fast": w_fast, "v1": v1, "v2": v2, "tr1": tr1, "tr2": tr2}

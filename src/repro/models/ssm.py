@@ -1,0 +1,148 @@
+"""Mamba2 (SSD) block: plan + apply (chunked train/prefill) + recurrent decode.
+
+Structure per Mamba2: in_proj -> [z | xBC | dt]; short causal conv over xBC;
+SSD scan over heads; gated RMSNorm; out_proj.  Heads shard over "model";
+the SSD state (B, H, S, P) is the decode cache — O(1) per token, which is
+what qualifies ssm/hybrid archs for the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_constraint
+from repro.kernels.ssd import ssd as ssd_op
+from repro.kernels.ssd import ssd_decode_step
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamDesc, rms_norm
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    d_xbc = d_inner + 2 * s.n_groups * s.state
+    return d_inner, n_heads, d_xbc
+
+
+def plan(cfg: ModelConfig, stack: int = 0) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, d_xbc = dims(cfg)
+    dt = cfg.dtype
+
+    def desc(shape, spec, **kw):
+        if stack:
+            shape, spec = (stack, *shape), (None, *spec)
+        kw.setdefault("dtype", dt)
+        return ParamDesc(shape, spec, **kw)
+
+    return {
+        "norm": desc((d,), (None,), init="ones"),
+        # fused input projection: z (d_inner) | xBC (d_xbc) | dt (n_heads)
+        "w_in": desc((d, d_inner + d_xbc + n_heads), ("data", "model"), fan_in=d),
+        "conv_w": desc((s.conv_width, d_xbc), (None, "model"),
+                       fan_in=s.conv_width),
+        "conv_b": desc((d_xbc,), ("model",), init="zeros"),
+        "a_log": desc((n_heads,), ("model",), init="zeros", dtype="float32"),
+        "dt_bias": desc((n_heads,), ("model",), init="zeros", dtype="float32"),
+        "d_skip": desc((n_heads,), ("model",), init="ones", dtype="float32"),
+        "out_norm": desc((d_inner,), ("model",), init="ones"),
+        "w_out": desc((d_inner, d), ("model", "data"), fan_in=d_inner),
+    }
+
+
+def _split(cfg, proj):
+    s = cfg.ssm
+    d_inner, n_heads, d_xbc = dims(cfg)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_xbc]
+    dt_raw = proj[..., d_inner + d_xbc:]
+    return z, xbc, dt_raw
+
+
+def _conv(xbc, conv_w, conv_b, conv_state=None):
+    """Short causal conv along sequence.  xbc (B,S,C); conv_w (W,C)."""
+    w = conv_w.shape[0]
+    if conv_state is not None:  # decode: xbc is (B,1,C)
+        window = jnp.concatenate([conv_state, xbc], axis=1)  # (B,W,C)
+        out = jnp.einsum("bwc,wc->bc", window, conv_w)[:, None, :]
+        new_state = window[:, 1:]
+        return jax.nn.silu(out + conv_b), new_state
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    stack = jnp.stack([pad[:, i:i + xbc.shape[1]] for i in range(w)], axis=2)
+    out = jnp.einsum("bswc,wc->bsc", stack, conv_w)
+    return jax.nn.silu(out + conv_b), None
+
+
+def _ssd_inputs(cfg, xbc, dt_raw, a_log, dt_bias):
+    s = cfg.ssm
+    d_inner, n_heads, _ = dims(cfg)
+    bsz, length = xbc.shape[0], xbc.shape[1]
+    x = xbc[..., :d_inner].reshape(bsz, length, n_heads, s.head_dim)
+    bc = xbc[..., d_inner:]
+    bmat = bc[..., :s.n_groups * s.state].reshape(bsz, length, s.n_groups, s.state)
+    cmat = bc[..., s.n_groups * s.state:].reshape(bsz, length, s.n_groups, s.state)
+    # broadcast groups -> heads
+    rep = n_heads // s.n_groups
+    bmat = jnp.repeat(bmat, rep, axis=2)
+    cmat = jnp.repeat(cmat, rep, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + dt_bias)  # (B,L,H)
+    a = -jnp.exp(a_log)                                         # (H,)
+    return x, dt, a, bmat, cmat
+
+
+def apply(params, x, cfg: ModelConfig, impl: str = "xla"):
+    """Full-sequence SSD (train/prefill).  x (B,S,D) ->
+    (out (B,S,D), final ssd state, conv tail (B,W-1,C))."""
+    s = cfg.ssm
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,dk->bsk", h, params["w_in"])
+    z, xbc, dt_raw = _split(cfg, proj)
+    conv_tail = xbc[:, -(s.conv_width - 1):]   # raw pre-conv window for decode
+    xbc, _ = _conv(xbc, params["conv_w"], params["conv_b"])
+    xs, dt, a, bmat, cmat = _ssd_inputs(cfg, xbc, dt_raw,
+                                        params["a_log"], params["dt_bias"])
+    xs = shard_constraint(xs, ("data", None, "model", None))
+    y, state = ssd_op(xs, dt, a, bmat, cmat, chunk=s.chunk, impl=impl)
+    y = y + (params["d_skip"][None, None, :, None]
+             * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(*y.shape[:2], -1)                              # (B,S,d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["w_out"]).astype(x.dtype)
+    return (x + shard_constraint(out, ("data", None, None)), state,
+            conv_tail.astype(x.dtype))
+
+
+def plan_cache(cfg: ModelConfig, batch: int, n_layers: int) -> dict:
+    """Decode cache: SSD state + conv window."""
+    s = cfg.ssm
+    d_inner, n_heads, d_xbc = dims(cfg)
+    return {
+        "ssm": ParamDesc((n_layers, batch, n_heads, s.state, s.head_dim),
+                         (None, "data", "model", None, None),
+                         init="zeros", dtype="float32"),
+        "conv": ParamDesc((n_layers, batch, s.conv_width - 1, d_xbc),
+                          (None, "data", None, "model"),
+                          init="zeros", dtype=cfg.dtype),
+    }
+
+
+def decode_step(params, x, ssm_state, conv_state, cfg: ModelConfig):
+    """One-token recurrent step.  x (B,1,D); ssm_state (B,H,S,P);
+    conv_state (B,W-1,C).  Returns (out, new_ssm_state, new_conv_state)."""
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,dk->bsk", h, params["w_in"])
+    z, xbc, dt_raw = _split(cfg, proj)
+    xbc, conv_state = _conv(xbc, params["conv_w"], params["conv_b"],
+                            conv_state)
+    xs, dt, a, bmat, cmat = _ssd_inputs(cfg, xbc, dt_raw,
+                                        params["a_log"], params["dt_bias"])
+    ssm_state, y = ssd_decode_step(ssm_state, xs[:, 0], dt[:, 0], a,
+                                   bmat[:, 0], cmat[:, 0])
+    y = y[:, None] + (params["d_skip"][None, None, :, None]
+                      * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(*y.shape[:2], -1)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["w_out"]).astype(x.dtype)
+    return x + out, ssm_state, conv_state

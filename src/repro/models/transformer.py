@@ -1,0 +1,467 @@
+"""Composable decoder-only LM covering the assigned architecture fleet.
+
+A model is a sequence of SEGMENTS, each a stack of identical blocks scanned
+with `lax.scan` (stacked params => small HLO, fast compile, layer-count-
+independent program size):
+
+  dense     — GQA attention + SwiGLU MLP           (qwen*, internlm2, musicgen,
+                                                    pixtral backbones)
+  dense_ff  — dense with an override FFN width      (deepseek-moe layer 0)
+  moe       — GQA attention + routed-expert FFN     (deepseek-moe, grok-1)
+  ssm       — Mamba2 SSD block                      (mamba2)
+  zsuper    — one SHARED transformer block + (attn_every-1) Mamba2 blocks
+              (zamba2; the shared block's params live once at top level)
+
+Entry points:
+  plan / init / abstract          — parameter plan machinery
+  forward                         — full-sequence logits (train/prefill)
+  loss_fn                         — next-token cross entropy
+  init_cache / prefill / decode_step — serving path with KV/SSM caches
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_constraint
+from repro.models import attention, moe as moe_mod, plastic, ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (ParamDesc, abstract_from_plan,
+                                 cross_entropy, init_from_plan, param_count,
+                                 rms_norm, shardings_from_plan,
+                                 specs_from_plan, swiglu)
+
+# ---------------------------------------------------------------------------
+# Segments
+# ---------------------------------------------------------------------------
+
+
+def segments(cfg: ModelConfig) -> list[tuple[str, int]]:
+    if cfg.layout == "dense":
+        return [("dense", cfg.n_layers)]
+    if cfg.layout == "moe":
+        fd = cfg.moe.first_dense
+        segs = []
+        if fd:
+            segs.append(("dense_ff", fd))
+        segs.append(("moe", cfg.n_layers - fd))
+        return segs
+    if cfg.layout == "ssm":
+        return [("ssm", cfg.n_layers)]
+    if cfg.layout == "hybrid":
+        per = cfg.ssm.attn_every
+        n_super = cfg.n_layers // per
+        rem = cfg.n_layers - n_super * per
+        segs: list[tuple[str, int]] = [("zsuper", n_super)]
+        if rem:
+            segs.append(("ssm", rem))
+        return segs
+    raise ValueError(cfg.layout)
+
+
+def _stack_plan(p, n: int):
+    """Prepend a stacking dim to every ParamDesc in a plan."""
+    return jax.tree.map(
+        lambda d: ParamDesc((n, *d.shape), (None, *d.spec), d.init, d.scale,
+                            d.fan_in, d.dtype),
+        p, is_leaf=lambda x: isinstance(x, ParamDesc))
+
+
+def _mlp_plan(cfg: ModelConfig, d_ff: int, stack: int = 0) -> dict:
+    d = cfg.d_model
+
+    def desc(shape, spec, **kw):
+        if stack:
+            shape, spec = (stack, *shape), (None, *spec)
+        return ParamDesc(shape, spec, dtype=cfg.dtype, **kw)
+
+    return {
+        "norm": desc((d,), (None,), init="ones"),
+        "w_gate": desc((d, d_ff), ("data", "model"), fan_in=d),
+        "w_up": desc((d, d_ff), ("data", "model"), fan_in=d),
+        "w_down": desc((d_ff, d), ("model", "data"), fan_in=d_ff),
+    }
+
+
+def _segment_plan(cfg: ModelConfig, kind: str, count: int):
+    if kind == "dense":
+        return {"attn": attention.plan(cfg, stack=count),
+                "mlp": _mlp_plan(cfg, cfg.d_ff, stack=count)}
+    if kind == "dense_ff":
+        return {"attn": attention.plan(cfg, stack=count),
+                "mlp": _mlp_plan(cfg, cfg.moe.first_dense_ff, stack=count)}
+    if kind == "moe":
+        return {"attn": attention.plan(cfg, stack=count),
+                "moe": moe_mod.plan(cfg, stack=count)}
+    if kind == "ssm":
+        return ssm_mod.plan(cfg, stack=count)
+    if kind == "zsuper":
+        inner = cfg.ssm.attn_every - 1
+        return {"ssm": _stack_plan(ssm_mod.plan(cfg, stack=inner), count)}
+    raise ValueError(kind)
+
+
+def plan(cfg: ModelConfig, fsdp: bool = True) -> dict:
+    d, v = cfg.d_model, cfg.vocab
+    p: dict[str, Any] = {
+        "embed": ParamDesc((v, d), ("model", "data"), scale=1.0, fan_in=d,
+                           dtype=cfg.dtype),
+        "segments": [_segment_plan(cfg, k, n) for k, n in segments(cfg)],
+        "final_norm": ParamDesc((d,), (None,), init="ones", dtype=cfg.dtype),
+    }
+    if cfg.layout == "hybrid":
+        p["shared_attn"] = attention.plan(cfg)
+        p["shared_mlp"] = _mlp_plan(cfg, cfg.d_ff)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ParamDesc((d, v), ("data", "model"), fan_in=d,
+                                 dtype=cfg.dtype)
+    if cfg.plastic_adapter:
+        p["adapter"] = plastic.plan(cfg)
+    if not fsdp:
+        p = jax.tree.map(
+            lambda pd: ParamDesc(
+                pd.shape,
+                tuple(None if s == "data" else s for s in pd.spec),
+                pd.init, pd.scale, pd.fan_in, pd.dtype),
+            p, is_leaf=lambda x: isinstance(x, ParamDesc))
+    return p
+
+
+def init(cfg: ModelConfig, key: jax.Array, fsdp: bool = True):
+    return init_from_plan(plan(cfg, fsdp), key)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _mlp_apply(p, x, cfg: ModelConfig):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    return x + shard_constraint(
+        swiglu(h, p["w_gate"], p["w_up"], p["w_down"]), cfg.act_spec)
+
+
+def _block_fn(cfg: ModelConfig, kind: str, *, collect_cache: bool,
+              attn_impl: str, ssd_impl: str, shared=None):
+    """Returns body(x, p) -> (x, cache_leaf) for one block of `kind`."""
+
+    def dense(x, p):
+        x, (k, v) = attention.apply(p["attn"], x, cfg, impl=attn_impl)
+        x = _mlp_apply(p["mlp"], x, cfg)
+        return x, ((k, v) if collect_cache else None)
+
+    def moe_block(x, p):
+        x, (k, v) = attention.apply(p["attn"], x, cfg, impl=attn_impl)
+        x = moe_mod.apply(p["moe"], x, cfg)
+        return x, ((k, v) if collect_cache else None)
+
+    def ssm_block(x, p):
+        x, state, conv = ssm_mod.apply(p, x, cfg, impl=ssd_impl)
+        return x, ((state, conv) if collect_cache else None)
+
+    def zsuper(x, p):
+        x, (k, v) = attention.apply(shared[0], x, cfg, impl=attn_impl)
+        x = _mlp_apply(shared[1], x, cfg)
+
+        def inner(h, pl):
+            h, state, conv = ssm_mod.apply(pl, h, cfg, impl=ssd_impl)
+            return h, ((state, conv) if collect_cache else None)
+
+        x, inner_cache = jax.lax.scan(inner, x, p["ssm"])
+        return x, (((k, v), inner_cache) if collect_cache else None)
+
+    return {"dense": dense, "dense_ff": dense, "moe": moe_block,
+            "ssm": ssm_block, "zsuper": zsuper}[kind]
+
+
+_REMAT_POLICIES = {
+    "none": None,   # no remat
+    "nothing": "nothing_saveable",
+    "dots": "dots_with_no_batch_dims_saveable",
+}
+
+
+def _maybe_remat(fn, cfg: ModelConfig, remat_policy: str):
+    if not cfg.remat or remat_policy == "none":
+        return fn
+    pol = getattr(jax.checkpoint_policies, _REMAT_POLICIES[remat_policy])
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, inputs, cfg: ModelConfig, *, collect_cache: bool = False,
+            attn_impl: str = "xla_flash", ssd_impl: str = "xla",
+            remat_policy: str = "nothing", head: bool = True):
+    """inputs: tokens (B,S) int32 or embeddings (B,S,D) per cfg.input_mode.
+
+    Returns (logits (B,S,V), per-segment caches or Nones); with head=False
+    the first element is the final hidden state (B,S,D) instead (prefill
+    uses this to avoid materializing all-position logits).
+    """
+    if cfg.input_mode == "embeddings" and inputs.ndim == 3:
+        h = inputs.astype(cfg.adtype)
+    else:
+        h = jnp.take(params["embed"], inputs, axis=0)
+    h = shard_constraint(h, cfg.act_spec)
+
+    shared = ((params["shared_attn"], params["shared_mlp"])
+              if cfg.layout == "hybrid" else None)
+    caches = []
+    for seg_idx, (kind, count) in enumerate(segments(cfg)):
+        blk = _block_fn(cfg, kind, collect_cache=collect_cache,
+                        attn_impl=attn_impl, ssd_impl=ssd_impl, shared=shared)
+
+        def body(x, p, _blk=blk):
+            return _blk(x, p)
+
+        body = _maybe_remat(body, cfg, remat_policy)
+        h, cache = jax.lax.scan(body, h, params["segments"][seg_idx])
+        caches.append(cache)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if not head:
+        return h, caches
+    head_w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", h, head_w)
+    return shard_constraint(logits, ("data", None, "model")), caches
+
+
+def loss_fn(params, batch, cfg: ModelConfig, **fw):
+    """batch: {"inputs": tokens|embeddings, "labels": (B,S) int32 (-1 = pad)}."""
+    logits, _ = forward(params, batch["inputs"], cfg, **fw)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    return cross_entropy(logits, jnp.maximum(labels, 0), mask)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache plan, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def cache_plan(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Descriptor pytree for the decode cache (shardable, eval_shape-able)."""
+    import dataclasses as _dc
+    seq_shard = batch == 1  # long-context: shard sequence, not batch
+    segs = segments(cfg)
+
+    def attn_cache(count):
+        kv = attention.plan_kv_cache(cfg, batch, max_len, count, seq_shard)
+        if not cfg.kv_quant:
+            return {"k": kv, "v": kv}
+        kv8 = _dc.replace(kv, dtype="int8")
+        sc = attention.plan_kv_scale(cfg, batch, max_len, count)
+        return {"k": kv8, "v": kv8, "k_scale": sc, "v_scale": sc}
+
+    seg_caches: list[Any] = []
+    for kind, count in segs:
+        if kind in ("dense", "dense_ff", "moe"):
+            seg_caches.append(attn_cache(count))
+        elif kind == "ssm":
+            seg_caches.append(ssm_mod.plan_cache(cfg, batch, count))
+        elif kind == "zsuper":
+            inner = cfg.ssm.attn_every - 1
+            c = attn_cache(count)
+            c["ssm"] = _stack_plan(ssm_mod.plan_cache(cfg, batch, inner),
+                                   count)
+            seg_caches.append(c)
+    out = {"segments": seg_caches,
+           "index": ParamDesc((), (), init="zeros", dtype="int32")}
+    if cfg.plastic_adapter:
+        out["adapter"] = plastic.plan_cache(cfg, batch)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return init_from_plan(cache_plan(cfg, batch, max_len),
+                          jax.random.PRNGKey(0))
+
+
+def prefill(params, inputs, cfg: ModelConfig, max_len: int, *,
+            attn_impl: str = "xla_flash", ssd_impl: str = "xla"):
+    """Run the prompt through the model, building the decode cache.
+
+    Returns (last-position logits (B,V), cache).
+    """
+    bsz = inputs.shape[0]
+    s = inputs.shape[1]
+    hidden, caches = forward(params, inputs, cfg, collect_cache=True,
+                             attn_impl=attn_impl, ssd_impl=ssd_impl,
+                             remat_policy="none", head=False)
+    head_w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bd,dv->bv", hidden[:, -1], head_w)
+    logits = shard_constraint(logits, ("data", "model"))
+    segs = segments(cfg)
+
+    def pack_kv(k, v):
+        out = {}
+        if cfg.kv_quant:
+            kq, ks = attention.quantize_kv(k)
+            vq, vs = attention.quantize_kv(v)
+            out = {"k": _embed_kv(kq, bsz, max_len, cfg),
+                   "v": _embed_kv(vq, bsz, max_len, cfg),
+                   "k_scale": _embed_kv(ks, bsz, max_len, cfg),
+                   "v_scale": _embed_kv(vs, bsz, max_len, cfg)}
+        else:
+            out = {"k": _embed_kv(k, bsz, max_len, cfg),
+                   "v": _embed_kv(v, bsz, max_len, cfg)}
+        return out
+
+    seg_caches = []
+    for (kind, count), c in zip(segs, caches):
+        if kind in ("dense", "dense_ff", "moe"):
+            k, v = c
+            seg_caches.append(pack_kv(k, v))
+        elif kind == "ssm":
+            state, conv = c
+            seg_caches.append({"ssm": state, "conv": conv})
+        else:  # zsuper
+            (k, v), (state, conv) = c
+            sc = pack_kv(k, v)
+            sc["ssm"] = {"ssm": state, "conv": conv}
+            seg_caches.append(sc)
+    cache = {"segments": seg_caches, "index": jnp.asarray(s, jnp.int32)}
+    if cfg.plastic_adapter:
+        cache["adapter"] = init_from_plan(plastic.plan_cache(cfg, bsz),
+                                          jax.random.PRNGKey(0))
+    return logits, cache
+
+
+def _embed_kv(k, bsz, max_len, cfg):
+    """Place prefilled (L,B,S,...) into a (L,B,max_len,...) buffer."""
+    if k.shape[2] == max_len:
+        return k
+    buf = jnp.zeros((*k.shape[:2], max_len, *k.shape[3:]), k.dtype)
+    return jax.lax.dynamic_update_slice(buf, k, (0,) * k.ndim)
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One decode step.  tokens (B,1) int32.
+
+    Returns (logits (B,V), new_cache).  cache["index"] is the number of
+    tokens already resident; the new token is written at that position.
+    """
+    index = cache["index"]
+    h = jnp.take(params["embed"], tokens, axis=0)       # (B,1,D)
+    h = shard_constraint(h, ("data", None, None))
+
+    new_segs = []
+    for seg_idx, (kind, count) in enumerate(segments(cfg)):
+        seg_p = params["segments"][seg_idx]
+        c = cache["segments"][seg_idx]
+        if kind in ("dense", "dense_ff", "moe"):
+            def body(x, xs, _kind=kind):
+                if cfg.kv_quant:
+                    p, k_l, v_l, sk_l, sv_l = xs
+                    x, kn, vn, skn, svn = attention.decode_step(
+                        p["attn"], x, k_l, v_l, index, cfg,
+                        scale_k=sk_l, scale_v=sv_l)
+                else:
+                    p, k_l, v_l = xs
+                    x, kn, vn = attention.decode_step(p["attn"], x, k_l, v_l,
+                                                      index, cfg)
+                    skn = svn = None
+                if _kind == "moe":
+                    x = moe_mod.apply(p["moe"], x, cfg)
+                else:
+                    x = _mlp_apply(p["mlp"], x, cfg)
+                if cfg.kv_quant:
+                    return x, (kn, vn, skn, svn)
+                return x, (kn, vn)
+
+            if cfg.kv_quant:
+                h, (ks, vs, sks, svs) = jax.lax.scan(
+                    body, h, (seg_p, c["k"], c["v"],
+                              c["k_scale"], c["v_scale"]))
+                new_segs.append({"k": ks, "v": vs,
+                                 "k_scale": sks, "v_scale": svs})
+            else:
+                h, (ks, vs) = jax.lax.scan(body, h, (seg_p, c["k"], c["v"]))
+                new_segs.append({"k": ks, "v": vs})
+        elif kind == "ssm":
+            def body(x, xs):
+                p, st, cv = xs
+                x, st, cv = ssm_mod.decode_step(p, x, st, cv, cfg)
+                return x, (st, cv)
+
+            h, (sts, cvs) = jax.lax.scan(body, h, (seg_p, c["ssm"], c["conv"]))
+            new_segs.append({"ssm": sts, "conv": cvs})
+        else:  # zsuper
+            shared_p = (params["shared_attn"], params["shared_mlp"])
+
+            def super_body(x, xs):
+                if cfg.kv_quant:
+                    p, k_l, v_l, sk_l, sv_l, st_l = xs
+                    x, kn, vn, skn, svn = attention.decode_step(
+                        shared_p[0], x, k_l, v_l, index, cfg,
+                        scale_k=sk_l, scale_v=sv_l)
+                else:
+                    p, k_l, v_l, st_l = xs
+                    x, kn, vn = attention.decode_step(shared_p[0], x, k_l,
+                                                      v_l, index, cfg)
+                    skn = svn = None
+                x = _mlp_apply(shared_p[1], x, cfg)
+
+                def inner(xx, ys):
+                    pl, st, cv = ys
+                    xx, st, cv = ssm_mod.decode_step(pl, xx, st, cv, cfg)
+                    return xx, (st, cv)
+
+                x, (sts, cvs) = jax.lax.scan(
+                    inner, x, (p["ssm"], st_l["ssm"], st_l["conv"]))
+                if cfg.kv_quant:
+                    return x, (kn, vn, skn, svn, sts, cvs)
+                return x, (kn, vn, sts, cvs)
+
+            if cfg.kv_quant:
+                h, (ks, vs, sks, svs, sts, cvs) = jax.lax.scan(
+                    super_body, h,
+                    (seg_p, c["k"], c["v"], c["k_scale"], c["v_scale"],
+                     c["ssm"]))
+                new_segs.append({"k": ks, "v": vs, "k_scale": sks,
+                                 "v_scale": svs,
+                                 "ssm": {"ssm": sts, "conv": cvs}})
+            else:
+                h, (ks, vs, sts, cvs) = jax.lax.scan(
+                    super_body, h, (seg_p, c["k"], c["v"], c["ssm"]))
+                new_segs.append({"k": ks, "v": vs,
+                                 "ssm": {"ssm": sts, "conv": cvs}})
+
+    new_cache = {"segments": new_segs, "index": index + 1}
+    if cfg.plastic_adapter:
+        h, new_cache["adapter"] = plastic.decode_step(
+            params["adapter"], cache["adapter"], h, cfg)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", h, head)[:, 0]
+    return shard_constraint(logits, ("data", "model")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Introspection
+# ---------------------------------------------------------------------------
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return param_count(plan(cfg))
+
+
+def abstract(cfg: ModelConfig, mesh=None, fsdp: bool = True):
+    return abstract_from_plan(plan(cfg, fsdp), mesh)
+
+
+def shardings(cfg: ModelConfig, mesh, fsdp: bool = True):
+    return shardings_from_plan(plan(cfg, fsdp), mesh)
+
+
+def pspecs(cfg: ModelConfig, mesh, fsdp: bool = True):
+    return specs_from_plan(plan(cfg, fsdp), mesh)

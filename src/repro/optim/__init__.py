@@ -1,0 +1,18 @@
+"""From-scratch optimizers (no optax in the container).
+
+  adamw / sgd      — init/update pairs over arbitrary pytrees
+  schedules        — warmup-cosine, linear, constant
+  clip_by_global_norm
+  compression      — error-feedback int8 gradient compression (opt-in
+                     all-reduce replacement for bandwidth-bound meshes)
+"""
+from repro.optim.optimizers import (OptState, adamw, clip_by_global_norm,
+                                    global_norm, sgd)
+from repro.optim.schedules import constant, linear_warmup, warmup_cosine
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     ef_compress_update, init_ef_state)
+
+__all__ = ["OptState", "adamw", "sgd", "clip_by_global_norm", "global_norm",
+           "constant", "linear_warmup", "warmup_cosine",
+           "compress_int8", "decompress_int8", "ef_compress_update",
+           "init_ef_state"]

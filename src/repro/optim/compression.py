@@ -1,0 +1,51 @@
+"""Error-feedback int8 gradient compression (distributed-optimization trick).
+
+For collective-bound meshes the gradient all-reduce can run over int8 with a
+per-leaf fp32 scale (4x byte reduction on the wire) at no convergence cost
+when the quantization error is fed back into the next step (Seide et al.'14;
+1-bit Adam lineage).  Usage inside a shard_map'd step:
+
+    ef = init_ef_state(grads)                # once
+    q, scale = compress_int8(grad + ef)      # per leaf
+    q_sum = lax.psum(q.astype(int32), axis)  # wire bytes: 1/4 of fp32
+    g_hat = decompress_int8(q_sum, scale_avg)
+    ef    = (grad + ef) - local_dequant      # residual carried forward
+
+`ef_compress_update` packages the per-leaf round trip; the all-reduce itself
+stays in the caller so the same code serves psum (shard_map) and jit-visible
+collectives (sharding constraints).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization.  Returns (q int8, scale f32)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_ef_state(grads):
+    """Zeroed error-feedback residuals, grads-shaped (fp32)."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compress_update(grad: jax.Array, ef: jax.Array):
+    """One leaf's compress step with error feedback.
+
+    Returns (q int8, scale, new_ef).  The caller all-reduces q (int32 psum)
+    and averages scale, then `decompress_int8(q_sum / n, scale_mean)`.
+    """
+    target = grad.astype(jnp.float32) + ef
+    q, scale = compress_int8(target)
+    new_ef = target - decompress_int8(q, scale)
+    return q, scale, new_ef

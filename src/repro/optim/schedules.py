@@ -1,0 +1,28 @@
+"""Learning-rate schedules as step -> lr callables (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    """Linear warmup then cosine decay to final_frac * lr."""
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, lr * cos)
+    return fn

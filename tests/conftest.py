@@ -1,0 +1,5 @@
+# NOTE: no XLA_FLAGS here on purpose — tests and benches run on ONE device;
+# only launch/dryrun.py forces 512 placeholder devices (in its own process).
+import jax
+
+jax.config.update("jax_enable_x64", False)

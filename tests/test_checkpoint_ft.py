@@ -1,0 +1,129 @@
+"""Checkpointing, fault tolerance, elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.distributed.ft import (FaultTolerantRunner, StragglerMonitor,
+                                  loss_is_bad)
+
+
+@pytest.fixture
+def tree():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "opt": {"mu": jnp.ones((3, 4)), "step": jnp.asarray(7)}}
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tree, tmp_path):
+        save_checkpoint(str(tmp_path), 3, tree, extra={"k": 1})
+        out, step, extra = load_checkpoint(str(tmp_path), tree)
+        assert step == 3 and extra == {"k": 1}
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_keep_k_gc(self, tree, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, tree)
+        assert mgr.all_steps() == [3, 4]
+
+    def test_async_save(self, tree, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(5, tree, blocking=False)
+        mgr.wait()
+        assert mgr.latest_step() == 5
+
+    def test_partial_dir_ignored(self, tree, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(1, tree)
+        os.makedirs(tmp_path / "step_000000099.tmp")   # crashed writer
+        assert mgr.latest_step() == 1
+        mgr.gc()
+        assert not (tmp_path / "step_000000099.tmp").exists()
+
+    def test_shape_mismatch_rejected(self, tree, tmp_path):
+        save_checkpoint(str(tmp_path), 1, tree)
+        bad = dict(tree, w=jnp.zeros((5, 5)))
+        with pytest.raises(ValueError):
+            load_checkpoint(str(tmp_path), bad)
+
+    def test_reshard_on_load(self, tree, tmp_path):
+        """Restore places leaves onto explicit shardings (elastic path)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        save_checkpoint(str(tmp_path), 1, tree)
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+        out, _, _ = load_checkpoint(str(tmp_path), tree, shardings=sh)
+        assert out["w"].sharding == NamedSharding(mesh, P())
+
+
+class TestStraggler:
+    def test_flags_outlier(self):
+        mon = StragglerMonitor(warmup=3, k=3.0)
+        flagged = [mon.observe(0.1 + 0.001 * i) for i in range(10)]
+        assert not any(flagged)
+        assert mon.observe(10.0)
+
+    def test_warmup_never_flags(self):
+        mon = StragglerMonitor(warmup=5)
+        assert not any(mon.observe(t) for t in (0.1, 99.0, 0.1, 50.0, 0.1))
+
+
+class TestFaultTolerantRunner:
+    def _runner(self, tmp_path, poison_at=None):
+        calls = {"n": 0}
+
+        def step(state, batch):
+            calls["n"] += 1
+            x = state["x"] + batch
+            loss = jnp.where(
+                jnp.asarray(poison_at == int(batch)), jnp.nan, x.sum())
+            return {"x": x}, {"loss": loss}
+
+        ckpt = CheckpointManager(str(tmp_path), keep=3)
+        return FaultTolerantRunner(step, ckpt, save_every=2,
+                                   max_rollbacks=3), calls
+
+    def test_runs_and_checkpoints(self, tmp_path):
+        runner, _ = self._runner(tmp_path)
+        state, hist = runner.run({"x": jnp.zeros(())},
+                                 lambda s: jnp.asarray(float(s)), 6)
+        assert len(hist) == 6
+        assert runner.ckpt.latest_step() == 6
+        assert float(state["x"]) == sum(range(6))
+
+    def test_nan_rollback_skips_poisoned_batch(self, tmp_path):
+        runner, _ = self._runner(tmp_path, poison_at=3)
+        state, hist = runner.run({"x": jnp.zeros(())},
+                                 lambda s: jnp.asarray(float(s)), 6)
+        assert runner.rollbacks == 1
+        assert 3 in runner.skipped_steps
+        assert all(np.isfinite(h["loss"]) for h in hist)
+
+    def test_resume_from_checkpoint(self, tmp_path):
+        runner, _ = self._runner(tmp_path)
+        state, _ = runner.run({"x": jnp.zeros(())},
+                              lambda s: jnp.asarray(1.0), 4)
+        runner2, _ = self._runner(tmp_path)
+        state2, start = runner2.restore_or_init({"x": jnp.zeros(())})
+        assert start == 4
+        assert float(state2["x"]) == 4.0
+
+    def test_rollback_budget_enforced(self, tmp_path):
+        def bad_step(state, batch):
+            return state, {"loss": jnp.nan}
+
+        ckpt = CheckpointManager(str(tmp_path), keep=2)
+        runner = FaultTolerantRunner(bad_step, ckpt, save_every=10,
+                                     max_rollbacks=2)
+        with pytest.raises(RuntimeError):
+            runner.run({"x": jnp.zeros(())}, lambda s: jnp.zeros(()), 5)
+
+
+def test_loss_is_bad():
+    assert loss_is_bad(float("nan")) and loss_is_bad(float("inf"))
+    assert not loss_is_bad(3.5)

@@ -1,0 +1,117 @@
+"""Control environments + the two-phase learning loop (paper Secs. II-B, IV)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import envs
+from repro.core import adaptation, es, snn
+
+
+@pytest.mark.parametrize("name", ["direction", "velocity", "position"])
+class TestEnvs:
+    def test_reset_step_shapes(self, name):
+        env = envs.make(name)
+        state = env.reset(jax.random.PRNGKey(0), env.train_tasks()[0])
+        obs = env.observe(state)
+        assert obs.shape == (env.obs_dim,)
+        state, r = env.step(state, jnp.zeros((env.act_dim,)))
+        assert jnp.isfinite(r)
+
+    def test_task_protocol_8_train_72_eval(self, name):
+        env = envs.make(name)
+        assert env.train_tasks().shape[0] == 8
+        assert env.eval_tasks().shape[0] == 72
+
+    def test_actuator_mask_disables(self, name):
+        env = envs.make(name)
+        mask = jnp.zeros((env.act_dim,))
+        state = env.reset(jax.random.PRNGKey(0), env.train_tasks()[0],
+                          actuator_mask=mask)
+        s1, _ = env.step(state, jnp.ones((env.act_dim,)))
+        s2, _ = env.step(state, -jnp.ones((env.act_dim,)))
+        np.testing.assert_allclose(np.asarray(s1.phys), np.asarray(s2.phys),
+                                   atol=1e-6)
+
+    @given(seed=st.integers(0, 100))
+    @settings(max_examples=5, deadline=None)
+    def test_rollout_finite(self, name, seed):
+        env = envs.make(name)
+        state = env.reset(jax.random.PRNGKey(seed), env.train_tasks()[0])
+
+        def body(s, t):
+            a = jnp.sin(t * jnp.ones((env.act_dim,)))
+            s, r = env.step(s, a)
+            return s, r
+
+        _, rs = jax.lax.scan(body, state, jnp.arange(50))
+        assert bool(jnp.isfinite(rs).all())
+
+
+class TestPEPG:
+    def test_optimizes_quadratic(self):
+        cfg = es.PEPGConfig(num_params=4, pop_pairs=16, lr_mu=0.3,
+                            sigma_init=0.3, rank_shaping=True)
+        target = jnp.asarray([1.0, -2.0, 0.5, 3.0])
+
+        def fitness(pop, key):
+            return -jnp.sum((pop - target) ** 2, axis=-1)
+
+        state, hist = es.run(cfg, fitness, jax.random.PRNGKey(0), 150)
+        assert float(jnp.sum((state.mu - target) ** 2)) < 0.5
+        assert float(hist[-1]) > float(hist[0])
+
+    def test_antithetic_layout(self):
+        cfg = es.PEPGConfig(num_params=3, pop_pairs=5)
+        state = es.init(cfg, jax.random.PRNGKey(0))
+        pop, eps = es.ask(cfg, state, jax.random.PRNGKey(1))
+        assert pop.shape == (10, 3)
+        np.testing.assert_allclose(
+            np.asarray(pop[:5] + pop[5:]),
+            np.broadcast_to(np.asarray(2 * state.mu[None]), (5, 3)),
+            atol=1e-6)
+
+    def test_elitism_tracks_best(self):
+        cfg = es.PEPGConfig(num_params=2, pop_pairs=4)
+        state = es.init(cfg, jax.random.PRNGKey(0))
+        pop, eps = es.ask(cfg, state, jax.random.PRNGKey(1))
+        fit = jnp.arange(8.0)
+        state = es.tell(cfg, state, eps, fit)
+        assert float(state.best_fitness) == 7.0
+        np.testing.assert_allclose(np.asarray(state.best_theta),
+                                   np.asarray(pop[7]), atol=1e-6)
+
+
+class TestTwoPhase:
+    def test_phase1_improves_fitness(self):
+        """A short offline ES run on the direction task must improve mean
+        return (the paper's Phase 1, miniaturized)."""
+        env = envs.make("direction", episode_len=40)
+        cfg = adaptation.AdaptationConfig(hidden=16, timesteps=2,
+                                          pop_pairs=8, generations=8)
+        theta, hist, scfg = adaptation.optimize_rule(env, cfg)
+        assert float(hist[-1]) > float(hist[0])
+
+    def test_phase2_zero_shot_generalization(self):
+        """The learned rule (not weights) transfers to unseen tasks with
+        weights starting from zero."""
+        env = envs.make("direction", episode_len=40)
+        cfg = adaptation.AdaptationConfig(hidden=16, timesteps=2,
+                                          pop_pairs=8, generations=8)
+        theta, _, scfg = adaptation.optimize_rule(env, cfg)
+        rets = adaptation.evaluate_generalization(env, scfg, theta)
+        assert rets.shape == (72,)
+        assert bool(jnp.isfinite(rets).all())
+
+    def test_actuator_failure_mask_applies(self):
+        env = envs.make("direction", episode_len=30)
+        cfg = adaptation.AdaptationConfig(hidden=8, timesteps=2)
+        scfg = adaptation.make_snn_config(env, cfg)
+        theta = snn.flatten_theta(snn.init_theta(scfg, jax.random.PRNGKey(0)))
+        mask = jnp.ones((env.act_dim,)).at[0].set(0.0)
+        r = adaptation.episode_return(env, scfg, theta,
+                                      env.train_tasks()[0],
+                                      jax.random.PRNGKey(1),
+                                      actuator_mask=mask, mask_after=10)
+        assert jnp.isfinite(r)

@@ -1,0 +1,161 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import attention, dual_engine_step, lif_forward, ssd
+from repro.kernels.ssd import ssd_decode_step
+from repro.kernels.ssd.ref import ssd_scan_ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# plasticity: fused dual-engine step (the paper's core kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,n,m", [(1, 8, 8), (4, 32, 48), (2, 100, 130),
+                                   (8, 128, 128), (3, 17, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dual_engine_matches_oracle(b, n, m, dtype):
+    key = jax.random.PRNGKey(b * 1000 + n + m)
+    ks = jax.random.split(key, 6)
+    x = (jax.random.uniform(ks[0], (b, n)) > 0.5).astype(dtype)
+    w = _rand(ks[1], (n, m), dtype) * 0.1
+    theta = _rand(ks[2], (4, n, m), dtype) * 0.01
+    v = _rand(ks[3], (b, m), dtype) * 0.1
+    tp = jax.random.uniform(ks[4], (b, n)).astype(dtype)
+    tq = jax.random.uniform(ks[5], (b, m)).astype(dtype)
+
+    ref = dual_engine_step(x, w, theta, v, tp, tq, impl="xla")
+    pal = dual_engine_step(x, w, theta, v, tp, tq, impl="pallas",
+                           interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    for r, p, name in zip(ref, pal, ["spikes", "v", "trace", "w"]):
+        np.testing.assert_allclose(
+            np.asarray(r, np.float32), np.asarray(p, np.float32),
+            rtol=tol, atol=tol, err_msg=name)
+
+
+def test_dual_engine_plastic_flag():
+    key = jax.random.PRNGKey(0)
+    x = (jax.random.uniform(key, (2, 16)) > 0.5).astype(jnp.float32)
+    w = 0.1 * jax.random.normal(key, (16, 16))
+    th = jnp.ones((4, 16, 16))
+    v = jnp.zeros((2, 16))
+    tp = tq = jnp.ones((2, 16))
+    _, _, _, w_off = dual_engine_step(x, w, th, v, tp, tq, plastic=False,
+                                      impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(w_off), np.asarray(w), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lif: psum-stationary forward engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,k,m", [(2, 16, 16), (4, 200, 64), (1, 784, 1024),
+                                   (8, 130, 250)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lif_forward_matches_oracle(b, k, m, dtype):
+    key = jax.random.PRNGKey(k + m)
+    ks = jax.random.split(key, 4)
+    x = (jax.random.uniform(ks[0], (b, k)) > 0.5).astype(dtype)
+    w = _rand(ks[1], (k, m), dtype) * (k ** -0.5)
+    v = _rand(ks[2], (b, m), dtype) * 0.1
+    tr = jax.random.uniform(ks[3], (b, m)).astype(dtype)
+    ref = lif_forward(x, w, v, tr, impl="xla")
+    pal = lif_forward(x, w, v, tr, impl="pallas", interpret=True,
+                      block_m=64, block_k=64)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    for r, p, name in zip(ref, pal, ["spikes", "v", "trace"]):
+        np.testing.assert_allclose(
+            np.asarray(r, np.float32), np.asarray(p, np.float32),
+            rtol=tol, atol=tol, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# attention: flash kernel + blocked-XLA path vs dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,sq,skv,h,hkv,d", [
+    (1, 64, 64, 4, 4, 32),      # MHA square
+    (2, 128, 128, 8, 2, 16),    # GQA
+    (1, 100, 100, 4, 1, 64),    # ragged seq (padding path)
+    (2, 1, 96, 4, 2, 32),       # decode-like (sq=1)
+])
+@pytest.mark.parametrize("impl", ["pallas", "xla_flash"])
+def test_attention_matches_oracle(b, sq, skv, h, hkv, d, impl):
+    key = jax.random.PRNGKey(sq + skv)
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], (b, sq, h, d), jnp.float32)
+    k = _rand(ks[1], (b, skv, hkv, d), jnp.float32)
+    v = _rand(ks[2], (b, skv, hkv, d), jnp.float32)
+    ref = attention(q, k, v, causal=True, impl="xla")
+    out = attention(q, k, v, causal=True, impl=impl,
+                    interpret=True, block_q=32, block_kv=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_attention_kv_len_mask():
+    """kv_len masks trailing cache positions (decode semantics)."""
+    key = jax.random.PRNGKey(7)
+    q = _rand(key, (1, 1, 2, 16), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (1, 32, 2, 16), jnp.float32)
+    v = _rand(jax.random.fold_in(key, 2), (1, 32, 2, 16), jnp.float32)
+    full = attention(q, k[:, :10], v[:, :10], causal=False, impl="xla")
+    masked = attention(q, k, v, causal=False, kv_len=10, impl="xla_flash")
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(full),
+                               rtol=2e-3, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd: chunked scan vs literal recurrence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,l,h,p,s,chunk", [
+    (1, 16, 2, 8, 4, 8), (2, 64, 4, 16, 8, 16),
+    (1, 100, 2, 32, 16, 32),    # non-multiple length (padding path)
+])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_ssd_matches_scan(b, l, h, p, s, chunk, impl):
+    key = jax.random.PRNGKey(l + h)
+    ks = jax.random.split(key, 4)
+    x = _rand(ks[0], (b, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(_rand(ks[1], (b, l, h), jnp.float32))
+    a = -jnp.exp(0.1 * jax.random.normal(ks[2], (h,)))
+    bm = _rand(ks[3], (b, l, h, s), jnp.float32)
+    cm = _rand(jax.random.fold_in(key, 9), (b, l, h, s), jnp.float32)
+    y_ref, s_ref = ssd(x, dt, a, bm, cm, impl="scan")
+    y, s_f = ssd(x, dt, a, bm, cm, impl=impl, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_f), np.asarray(s_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_decode_step_matches_scan():
+    """Token-by-token decode reproduces the full-sequence scan."""
+    key = jax.random.PRNGKey(3)
+    b, l, h, p, s = 2, 12, 2, 8, 4
+    ks = jax.random.split(key, 5)
+    x = _rand(ks[0], (b, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(_rand(ks[1], (b, l, h), jnp.float32))
+    a = -jnp.exp(0.1 * jax.random.normal(ks[2], (h,)))
+    bm = _rand(ks[3], (b, l, h, s), jnp.float32)
+    cm = _rand(ks[4], (b, l, h, s), jnp.float32)
+    y_ref, s_ref = ssd_scan_ref(x, dt, a, bm, cm)
+    state = jnp.zeros((b, h, s, p))
+    ys = []
+    for t in range(l):
+        state, y = ssd_decode_step(state, x[:, t], dt[:, t], a,
+                                   bm[:, t], cm[:, t])
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_ref), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_ref),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,113 @@
+"""Optimizers, schedules, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (adamw, clip_by_global_norm, compress_int8,
+                         decompress_int8, ef_compress_update, global_norm,
+                         init_ef_state, linear_warmup, sgd, warmup_cosine)
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        opt = adamw(lr=0.1, weight_decay=0.0)
+        params = {"x": jnp.asarray([5.0, -3.0])}
+        state = opt.init(params)
+        loss = lambda p: jnp.sum(p["x"] ** 2)
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            params, state = opt.update(g, state, params)
+        assert float(loss(params)) < 1e-3
+
+    def test_master_weights_beat_bf16_underflow(self):
+        """Tiny updates vanish in bf16 without a master copy."""
+        params = {"x": jnp.ones((4,), jnp.bfloat16)}
+        g = {"x": jnp.full((4,), 1e-4, jnp.float32)}
+        for master in (False, True):
+            opt = adamw(lr=1e-4, weight_decay=0.0, master_weights=master)
+            state = opt.init(params)
+            p = params
+            for _ in range(50):
+                p, state = opt.update(g, state, p)
+            moved = float(jnp.abs(p["x"].astype(jnp.float32) - 1.0).max())
+            if master:
+                assert float(
+                    jnp.abs(state.master["x"] - 1.0).max()) > 1e-4
+            # bf16 storage may or may not move; master path must track
+        assert state.master is not None
+
+    def test_bf16_moments(self):
+        opt = adamw(lr=0.1, moment_dtype="bfloat16")
+        params = {"x": jnp.asarray([1.0])}
+        state = opt.init(params)
+        assert state.mu["x"].dtype == jnp.bfloat16
+        g = {"x": jnp.asarray([0.5])}
+        _, state = opt.update(g, state, params)
+        assert state.nu["x"].dtype == jnp.bfloat16
+
+    def test_sgd_momentum(self):
+        opt = sgd(lr=0.05, momentum=0.9)
+        params = jnp.asarray([4.0])
+        state = opt.init(params)
+        for _ in range(200):
+            g = 2 * params
+            params, state = opt.update(g, state, params)
+        assert abs(float(params[0])) < 5e-2
+
+
+class TestClip:
+    def test_clip_rescales(self):
+        tree = {"a": jnp.asarray([3.0, 4.0])}       # norm 5
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert abs(float(norm) - 5.0) < 1e-5
+        assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+    def test_noop_below_threshold(self):
+        tree = {"a": jnp.asarray([0.3])}
+        clipped, _ = clip_by_global_norm(tree, 1.0)
+        np.testing.assert_allclose(np.asarray(clipped["a"]), [0.3], rtol=1e-6)
+
+
+class TestSchedules:
+    def test_warmup_cosine_shape(self):
+        fn = warmup_cosine(1.0, 10, 100, final_frac=0.1)
+        assert float(fn(jnp.asarray(0))) < 0.2
+        assert abs(float(fn(jnp.asarray(10))) - 1.0) < 0.1
+        assert float(fn(jnp.asarray(100))) <= 0.11
+
+    def test_linear_warmup_monotone(self):
+        fn = linear_warmup(1.0, 5)
+        vals = [float(fn(jnp.asarray(i))) for i in range(8)]
+        assert vals == sorted(vals)
+        assert vals[-1] == 1.0
+
+
+class TestCompression:
+    @given(st.integers(0, 2**32 - 1), st.floats(0.01, 100.0))
+    @settings(max_examples=20, deadline=None)
+    def test_int8_roundtrip_error_bounded(self, seed, scale):
+        g = scale * jax.random.normal(jax.random.PRNGKey(seed), (256,))
+        q, s = compress_int8(g)
+        assert q.dtype == jnp.int8
+        err = jnp.abs(decompress_int8(q, s) - g).max()
+        assert float(err) <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_converges(self):
+        """With EF, the *accumulated* compressed stream tracks the true
+        gradient sum (the residual stays bounded)."""
+        key = jax.random.PRNGKey(0)
+        g_true = jax.random.normal(key, (64,)) * 0.01
+        ef = jnp.zeros((64,))
+        acc = jnp.zeros((64,))
+        for i in range(50):
+            q, s, ef = ef_compress_update(g_true, ef)
+            acc = acc + decompress_int8(q, s)
+        total_err = jnp.abs(acc - 50 * g_true).max()
+        # without EF the bias would grow linearly; with EF it stays ~1 quantum
+        assert float(total_err) <= float(jnp.abs(g_true).max()) * 5
+
+    def test_init_ef_state_shapes(self):
+        grads = {"w": jnp.ones((3, 3), jnp.bfloat16)}
+        ef = init_ef_state(grads)
+        assert ef["w"].shape == (3, 3) and ef["w"].dtype == jnp.float32

@@ -1,0 +1,97 @@
+"""Unit + property tests for the four-term plasticity rule (paper Sec. II-A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import plasticity as P
+
+
+def _theta(key, n_pre, n_post, scale=0.1):
+    return scale * jax.random.normal(key, (P.NUM_TERMS, n_pre, n_post))
+
+
+class TestTrace:
+    def test_update_matches_formula(self):
+        tr = jnp.array([0.5, 1.0, 0.0])
+        s = jnp.array([1.0, 0.0, 1.0])
+        out = P.update_trace(tr, s, 0.8)
+        np.testing.assert_allclose(out, [1.4, 0.8, 1.0], rtol=1e-6)
+
+    @given(lam=st.floats(0.0, 0.99), steps=st.integers(1, 50))
+    @settings(max_examples=25, deadline=None)
+    def test_trace_bounded(self, lam, steps):
+        """S(t) <= 1/(1-lam) for binary spikes — no unbounded growth."""
+        tr = jnp.zeros(())
+        for _ in range(steps):
+            tr = P.update_trace(tr, jnp.ones(()), lam)
+        assert float(tr) <= 1.0 / (1.0 - lam) + 1e-4
+
+
+class TestDeltaW:
+    def test_four_terms_decompose(self):
+        """dw == alpha-term + beta-term + gamma-term + delta-term exactly."""
+        key = jax.random.PRNGKey(0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        th = _theta(k1, 4, 3)
+        sp = jax.random.uniform(k2, (4,))
+        so = jax.random.uniform(k3, (3,))
+        dw = P.delta_w(th, sp, so)
+        expect = (th[P.ALPHA] * np.outer(sp, so)
+                  + th[P.BETA] * np.asarray(sp)[:, None]
+                  + th[P.GAMMA] * np.asarray(so)[None, :]
+                  + th[P.DELTA])
+        np.testing.assert_allclose(np.asarray(dw), expect, rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_zero_traces_leave_only_decay(self):
+        th = _theta(jax.random.PRNGKey(1), 5, 2)
+        dw = P.delta_w(th, jnp.zeros((5,)), jnp.zeros((2,)))
+        np.testing.assert_allclose(np.asarray(dw), np.asarray(th[P.DELTA]),
+                                   atol=1e-7)
+
+    def test_batch_averaging(self):
+        """Batched traces average: dw(batch) == mean over per-sample dw."""
+        key = jax.random.PRNGKey(2)
+        th = _theta(key, 3, 3)
+        sp = jax.random.uniform(jax.random.fold_in(key, 1), (8, 3))
+        so = jax.random.uniform(jax.random.fold_in(key, 2), (8, 3))
+        batched = P.delta_w(th, sp, so)
+        per = jnp.stack([P.delta_w(th, sp[i], so[i]) for i in range(8)])
+        np.testing.assert_allclose(np.asarray(batched),
+                                   np.asarray(per.mean(0)), rtol=1e-4,
+                                   atol=1e-6)
+
+    @given(st.integers(1, 16), st.integers(1, 16))
+    @settings(max_examples=15, deadline=None)
+    def test_shapes(self, n_pre, n_post):
+        th = _theta(jax.random.PRNGKey(3), n_pre, n_post)
+        dw = P.delta_w(th, jnp.ones((n_pre,)), jnp.ones((n_post,)))
+        assert dw.shape == (n_pre, n_post)
+
+    def test_linearity_in_theta(self):
+        """dw is linear in theta (it is literally a contraction)."""
+        key = jax.random.PRNGKey(4)
+        th1, th2 = _theta(key, 4, 4), _theta(jax.random.fold_in(key, 1), 4, 4)
+        sp = jax.random.uniform(jax.random.fold_in(key, 2), (4,))
+        so = jax.random.uniform(jax.random.fold_in(key, 3), (4,))
+        lhs = P.delta_w(th1 + 2.0 * th2, sp, so)
+        rhs = P.delta_w(th1, sp, so) + 2.0 * P.delta_w(th2, sp, so)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestApply:
+    def test_clip_bounds_weights(self):
+        cfg = P.PlasticityConfig(n_pre=2, n_post=2, w_clip=1.0)
+        th = 100.0 * jnp.ones((P.NUM_TERMS, 2, 2))
+        w = jnp.zeros((2, 2))
+        for _ in range(5):
+            w = P.apply_plasticity(w, th, jnp.ones((2,)), jnp.ones((2,)), cfg)
+        assert float(jnp.abs(w).max()) <= 1.0 + 1e-6
+
+    def test_spikify_binary(self):
+        x = jnp.array([-1.0, 0.0, 0.5, 2.0])
+        s = P.spikify(x)
+        np.testing.assert_array_equal(np.asarray(s), [0, 0, 1, 1])

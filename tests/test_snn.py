@@ -1,0 +1,87 @@
+"""LIF dynamics + SNN controller behaviour (paper Secs. II, III-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import plasticity as P, snn
+
+
+class TestLIF:
+    def test_tau2_halves_gap(self):
+        """tau_m = 2: V moves half-way toward I each step (the
+        multiplier-free FPGA trick)."""
+        cfg = snn.LIFConfig(tau_m=2.0, v_threshold=10.0)
+        v, s = snn.lif_step(jnp.zeros(()), jnp.asarray(1.0), cfg)
+        assert float(v) == 0.5 and float(s) == 0.0
+
+    def test_spike_and_reset(self):
+        cfg = snn.LIFConfig(tau_m=2.0, v_threshold=1.0, v_reset=0.0)
+        v, s = snn.lif_step(jnp.asarray(0.9), jnp.asarray(2.0), cfg)
+        assert float(s) == 1.0 and float(v) == 0.0
+
+    @given(st.floats(-4, 4), st.floats(-4, 4))
+    @settings(max_examples=30, deadline=None)
+    def test_subthreshold_never_spikes(self, v0, i0):
+        cfg = snn.LIFConfig(v_threshold=100.0)
+        v, s = snn.lif_step(jnp.asarray(v0), jnp.asarray(i0), cfg)
+        assert float(s) == 0.0
+        # convex combination stays inside [min, max]
+        assert min(v0, i0) - 1e-5 <= float(v) <= max(v0, i0) + 1e-5
+
+
+class TestController:
+    def _cfg(self, plastic=True):
+        return snn.SNNConfig(layer_sizes=(6, 16, 4), timesteps=3,
+                             plastic=plastic)
+
+    def test_zero_weight_start(self):
+        cfg = self._cfg()
+        st_ = snn.init_state(cfg)
+        assert all(float(jnp.abs(w).sum()) == 0.0 for w in st_["w"])
+
+    def test_controller_step_shapes_finite(self):
+        cfg = self._cfg()
+        state = snn.init_state(cfg)
+        theta = snn.init_theta(cfg, jax.random.PRNGKey(0))
+        obs = jnp.linspace(-1, 1, 6)
+        state, action = snn.controller_step(cfg, state, theta, obs)
+        assert action.shape == (4,)
+        assert bool(jnp.isfinite(action).all())
+        assert float(jnp.abs(action).max()) <= 1.0  # tanh readout
+
+    def test_plasticity_rewrites_weights(self):
+        cfg = self._cfg(plastic=True)
+        state = snn.init_state(cfg)
+        theta = snn.init_theta(cfg, jax.random.PRNGKey(0), scale=0.5)
+        obs = jnp.ones((6,))
+        state, _ = snn.controller_step(cfg, state, theta, obs)
+        assert any(float(jnp.abs(w).sum()) > 0 for w in state["w"])
+
+    def test_fixed_weights_stay_fixed(self):
+        cfg = self._cfg(plastic=False)
+        state = snn.init_state(cfg)
+        state["w"] = [jnp.ones_like(w) for w in state["w"]]
+        theta = snn.init_theta(cfg, jax.random.PRNGKey(0), scale=0.5)
+        new_state, _ = snn.controller_step(cfg, state, theta, jnp.ones((6,)))
+        for w0, w1 in zip(state["w"], new_state["w"]):
+            np.testing.assert_array_equal(np.asarray(w0), np.asarray(w1))
+
+    def test_theta_flatten_roundtrip(self):
+        cfg = self._cfg()
+        theta = snn.init_theta(cfg, jax.random.PRNGKey(1))
+        flat = snn.flatten_theta(theta)
+        assert flat.shape == (snn.theta_size(cfg),)
+        back = snn.unflatten_theta(cfg, flat)
+        for a, b in zip(theta, back):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)
+
+    def test_classify_window_counts_spikes(self):
+        cfg = snn.SNNConfig(layer_sizes=(10, 12, 3), timesteps=5,
+                            spiking_readout=True)
+        state = snn.init_state(cfg)
+        theta = snn.init_theta(cfg, jax.random.PRNGKey(2), scale=0.5)
+        state, scores = snn.classify_window(cfg, state, theta, jnp.ones((10,)))
+        assert scores.shape == (3,)
+        assert float(scores.min()) >= 0.0  # spike counts are non-negative

@@ -22,7 +22,7 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
 
 def run(env_name: str, generations: int = 30, hidden: int = 32,
-        episode_len: int = 60, seed: int = 0) -> dict:
+        episode_len: int = 60, seed: int = 0, impl: str = "xla") -> dict:
     env = envs.make(env_name, episode_len=episode_len)
     out = {"env": env_name}
     # actuator-failure stress: actuator 0 dies 1/3 into every eval episode
@@ -31,7 +31,7 @@ def run(env_name: str, generations: int = 30, hidden: int = 32,
     for method, plastic in (("fireflyp", True), ("weight-trained", False)):
         cfg = adaptation.AdaptationConfig(
             hidden=hidden, timesteps=2, pop_pairs=12,
-            generations=generations, seed=seed)
+            generations=generations, seed=seed, impl=impl)
         t0 = time.time()
         params, hist, scfg = adaptation.optimize_rule(env, cfg,
                                                       plastic=plastic)
@@ -51,14 +51,14 @@ def run(env_name: str, generations: int = 30, hidden: int = 32,
     return out
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, impl: str = "xla"):
     os.makedirs(RESULTS, exist_ok=True)
     gens = 10 if quick else 30
     rows = []
     print("env,method,gens,final_train_fitness,eval72_mean,eval72_std,"
           "damaged_mean,damage_delta")
     for env_name in ("direction", "velocity", "position"):
-        r = run(env_name, generations=gens)
+        r = run(env_name, generations=gens, impl=impl)
         rows.append(r)
         for method in ("fireflyp", "weight-trained"):
             m = r[method]
@@ -72,5 +72,10 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    import sys
-    main(quick="--quick" in sys.argv)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--impl", default="xla",
+                    choices=["xla", "pallas", "pallas-interpret"])
+    args = ap.parse_args()
+    main(quick=args.quick, impl=args.impl)

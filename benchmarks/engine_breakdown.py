@@ -6,12 +6,15 @@ fused dual-engine step, derived from the kernel's actual shapes at the
 paper's controller scale (L1: obs->128, L2: 128->act) and at MNIST scale
 (784-1024-10).
 
-Also measures CPU wall time of the fused kernel (interpret) vs the XLA
-oracle, and — the paper's architectural claim — FUSED dual-engine vs
-SEQUENTIAL forward-then-plasticity HBM traffic.
+Also measures CPU wall time of the PRODUCT layer step —
+`core.engine.layer_step`, the same entry point `snn.timestep` and serving
+run — under the "xla" backend (and "pallas-interpret" with --interpret),
+and — the paper's architectural claim — FUSED dual-engine vs SEQUENTIAL
+forward-then-plasticity HBM traffic.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import time
@@ -19,7 +22,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import dual_engine_step
+from repro.core import engine
 from repro.launch.mesh import HW
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
@@ -54,41 +57,45 @@ def stage_model(b: int, n: int, m: int, plastic: bool = True) -> dict:
     return out
 
 
-def measure_wall(b, n, m, iters=5) -> dict:
+def measure_wall(b, n, m, iters=5, impls=("xla",)) -> dict:
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 6)
     x = (jax.random.uniform(ks[0], (b, n)) > 0.5).astype(jnp.float32)
-    w = 0.1 * jax.random.normal(ks[1], (n, m))
-    th = 0.01 * jax.random.normal(ks[2], (4, n, m))
-    v = jnp.zeros((b, m))
-    tp = jax.random.uniform(ks[4], (b, n))
-    tq = jax.random.uniform(ks[5], (b, m))
-    args = (x, w, th, v, tp, tq)
+    layer = engine.LayerState(
+        w=0.1 * jax.random.normal(ks[1], (n, m)),
+        v=jnp.zeros((b, m)),
+        trace_pre=jax.random.uniform(ks[4], (b, n)),
+        trace_post=jax.random.uniform(ks[5], (b, m)),
+        theta=0.01 * jax.random.normal(ks[2], (4, n, m)))
+    step = jax.jit(functools.partial(engine.layer_step,
+                                     params=engine.EngineParams()),
+                   static_argnames=("impl",))
 
     res = {}
-    for impl in ("xla",):
-        out = dual_engine_step(*args, impl=impl)       # warm up / compile
+    for impl in impls:
+        out = step(layer, x, impl=impl)                # warm up / compile
         jax.block_until_ready(out)
         t0 = time.perf_counter()
         for _ in range(iters):
-            out = dual_engine_step(*args, impl=impl)
+            out = step(layer, x, impl=impl)
             jax.block_until_ready(out)
         res[f"{impl}_us"] = (time.perf_counter() - t0) / iters * 1e6
     return res
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, interpret: bool = False):
     os.makedirs(RESULTS, exist_ok=True)
     # paper scales: control (8-128-8 @ batch 1), MNIST (784-1024-10)
     layers = {
         "control_L1": (1, 8, 128), "control_L2": (1, 128, 8),
         "mnist_L1": (1, 784, 1024), "mnist_L2": (1, 1024, 10),
     }
+    impls = ("xla", "pallas-interpret") if interpret else ("xla",)
     rows = {}
     print("layer,engine,flops,bytes,roofline_us,cpu_xla_us")
     for name, (b, n, m) in layers.items():
         sm = stage_model(b, n, m)
-        wall = measure_wall(b, n, m, iters=2 if quick else 5)
+        wall = measure_wall(b, n, m, iters=2 if quick else 5, impls=impls)
         rows[name] = {"model": sm, "wall": wall}
         for eng in ("forward", "plasticity"):
             s = sm[eng]
@@ -110,4 +117,4 @@ def main(quick: bool = False):
 
 if __name__ == "__main__":
     import sys
-    main(quick="--quick" in sys.argv)
+    main(quick="--quick" in sys.argv, interpret="--interpret" in sys.argv)

@@ -4,7 +4,9 @@ The FPGA completes one control step (inference + plasticity, both layers,
 all timesteps pipelined) in 8 µs at 0.713 W.  On TPU v5e the same
 controller is minuscule; the honest comparison is the ROOFLINE latency of
 the fused dual-engine program at controller scale plus measured CPU wall
-time (an upper bound — the CPU interpreter is not the target).
+time of the PRODUCT path — `snn.controller_step`, every layer routed
+through the PlasticEngine (--impl selects the backend; "xla" default, an
+upper bound — CPU is not the target).
 
 Prints a CSV: scale,roofline_us,cpu_wall_us,paper_fpga_us.
 """
@@ -49,15 +51,15 @@ def measured_wall_us(cfg: snn.SNNConfig, iters: int = 20) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, impl: str = "xla"):
     os.makedirs(RESULTS, exist_ok=True)
-    rows = {}
+    rows = {"impl": impl}
     print("scale,roofline_us,cpu_wall_us,paper_fpga_us")
     for name, (o, h, a, t) in {
         "control_8_128_8": (8, 128, 8, 4),
         "mnist_784_1024_10": (784, 1024, 10, 8),
     }.items():
-        cfg = snn.SNNConfig(layer_sizes=(o, h, a), timesteps=t)
+        cfg = snn.SNNConfig(layer_sizes=(o, h, a), timesteps=t, impl=impl)
         roof = controller_roofline_us(o, h, a, t)
         wall = measured_wall_us(cfg, iters=5 if quick else 20)
         rows[name] = {"roofline_us": roof, "cpu_wall_us": wall,
@@ -69,5 +71,10 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    import sys
-    main(quick="--quick" in sys.argv)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--impl", default="xla",
+                    choices=["xla", "pallas", "pallas-interpret"])
+    args = ap.parse_args()
+    main(quick=args.quick, impl=args.impl)

@@ -3,16 +3,19 @@
 The paper's claim is ARCHITECTURAL: pipelining inference with plasticity
 gives end-to-end FPS ~= forward-only FPS, where prior hardware ran the two
 stages sequentially (A/B FPS split in Table II).  We reproduce the
-methodology on the 784-1024-10 network: measure forward-only steps vs
-fused forward+plasticity steps (one jit program — the XLA analogue of the
-dual-engine overlap) vs explicitly sequential forward-then-update (two
-programs, weights re-fetched).
+methodology on the 784-1024-10 network: the fused path is the PRODUCT path
+— `snn.timestep` routed through the PlasticEngine (`--impl` selects the
+backend) — measured against a forward-only stack and an explicitly
+sequential forward-then-update baseline (plasticity re-reads the weights,
+the unfused architecture the paper improves on).
 
 Accuracy uses the PROCEDURAL digit set (see data/mnist.py) — not
 comparable to real-MNIST numbers; the throughput ratio is the deliverable.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import json
 import os
 import time
@@ -22,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import plasticity as P, snn
 from repro.data import mnist_batch, spike_encode
-from repro.kernels import dual_engine_step, lif_forward
+from repro.kernels import lif_forward
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 CFG = snn.SNNConfig(layer_sizes=(784, 1024, 10), timesteps=8,
@@ -33,38 +36,41 @@ def _setup(batch: int, key):
     imgs, labels = mnist_batch(key, batch)
     spikes = jax.vmap(lambda k, im: spike_encode(k, im, CFG.timesteps))(
         jax.random.split(key, batch), imgs)          # (B, T, 784)
-    state = snn.init_state(CFG, batch=1)             # kernels take (B, N)
+    state = snn.init_state(CFG, batch=1)             # engine takes (B, N)
     theta = snn.init_theta(CFG, key, scale=0.05)
     return spikes, labels, state, theta
 
 
-@jax.jit
-def fused_step(w1, w2, th1, th2, v1, v2, tr0, tr1, tr2, x):
-    """One timestep through both layers, forward AND plasticity fused."""
-    tr0 = P.update_trace(tr0, x, CFG.trace_decay)
-    s1, v1, tr1, w1 = dual_engine_step(x, w1, th1, v1, tr0, tr1)
-    s2, v2, tr2, w2 = dual_engine_step(s1, w2, th2, v2, tr1, tr2)
-    return w1, w2, v1, v2, tr0, tr1, tr2, s2
+@functools.partial(jax.jit, static_argnames=("impl",))
+def fused_step(state, theta, x, impl="xla"):
+    """One PRODUCT timestep: all layers through the fused PlasticEngine."""
+    cfg = dataclasses.replace(CFG, impl=impl)
+    return snn.timestep(cfg, state, theta, x)
 
 
 @jax.jit
-def forward_only_step(w1, w2, v1, v2, tr1, tr2, x):
-    s1, v1, tr1 = lif_forward(x, w1, v1, tr1)
-    s2, v2, tr2 = lif_forward(s1, w2, v2, tr2)
-    return v1, v2, tr1, tr2, s2
+def forward_only_step(state, x):
+    """Inference-only baseline: generic layer stack, no plasticity engine."""
+    v, tr = list(state.v), list(state.trace)
+    for i in range(CFG.num_layers):
+        x, v[i], tr[i + 1] = lif_forward(x, state.w[i], v[i], tr[i + 1])
+    return dataclasses.replace(state, v=tuple(v), trace=tuple(tr),
+                               t=state.t + 1), x
 
 
 @jax.jit
-def sequential_step(w1, w2, th1, th2, v1, v2, tr0, tr1, tr2, x):
-    """Forward pass fully completes, THEN plasticity re-reads weights."""
-    tr0 = P.update_trace(tr0, x, CFG.trace_decay)
-    s1, v1n, tr1n = lif_forward(x, w1, v1, tr1)
-    s2, v2n, tr2n = lif_forward(s1, w2, v2, tr2)
-    pcfg1 = CFG.layer_plasticity_cfg(0)
-    pcfg2 = CFG.layer_plasticity_cfg(1)
-    w1 = P.apply_plasticity(w1, th1, tr0, tr1n, pcfg1)
-    w2 = P.apply_plasticity(w2, th2, tr1n, tr2n, pcfg2)
-    return w1, w2, v1n, v2n, tr0, tr1n, tr2n, s2
+def sequential_step(state, theta, x):
+    """Unfused baseline: forward fully completes, THEN plasticity re-reads
+    every weight matrix (the two-pass architecture the paper eliminates)."""
+    w, v, tr = list(state.w), list(state.v), list(state.trace)
+    tr[0] = P.update_trace(tr[0], x, CFG.trace_decay)
+    for i in range(CFG.num_layers):
+        x, v[i], tr[i + 1] = lif_forward(x, w[i], v[i], tr[i + 1])
+    for i in range(CFG.num_layers):
+        w[i] = P.apply_plasticity(w[i], theta[i], tr[i], tr[i + 1],
+                                  CFG.layer_plasticity_cfg(i))
+    return dataclasses.replace(state, w=tuple(w), v=tuple(v), trace=tuple(tr),
+                               t=state.t + 1), x
 
 
 def _time(fn, args, iters):
@@ -199,22 +205,17 @@ def online_accuracy(n_samples: int, key, teach_amp: float = 2.0) -> float:
     return correct / (n_samples - n_samples // 5)
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, impl: str = "xla"):
     os.makedirs(RESULTS, exist_ok=True)
     key = jax.random.PRNGKey(0)
     spikes, labels, state, theta = _setup(4, key)
     x = spikes[0, 0][None]                           # (1, 784)
-    w1, w2 = state["w"]
-    th1, th2 = theta
-    v1, v2 = state["v"]
-    tr0, tr1, tr2 = state["trace"]
 
     iters = 3 if quick else 10
-    t_fused = _time(fused_step, (w1, w2, th1, th2, v1, v2, tr0, tr1, tr2, x),
-                    iters)
-    t_fwd = _time(forward_only_step, (w1, w2, v1, v2, tr1, tr2, x), iters)
-    t_seq = _time(sequential_step, (w1, w2, th1, th2, v1, v2, tr0, tr1, tr2,
-                                    x), iters)
+    t_fused = _time(functools.partial(fused_step, impl=impl),
+                    (state, theta, x), iters)
+    t_fwd = _time(forward_only_step, (state, x), iters)
+    t_seq = _time(sequential_step, (state, theta, x), iters)
 
     # FPS = 1 / (timesteps * per-timestep latency)
     fps = {k: 1.0 / (CFG.timesteps * t)
@@ -222,6 +223,7 @@ def main(quick: bool = False):
                         ("sequential", t_seq))}
     acc = online_accuracy(40 if quick else 120, key)
     out = {
+        "impl": impl,
         "per_timestep_ms": {"fused": t_fused * 1e3,
                             "forward_only": t_fwd * 1e3,
                             "sequential": t_seq * 1e3},
@@ -257,5 +259,12 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    import sys
-    main(quick="--quick" in sys.argv)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--impl", default="xla",
+                    choices=["xla", "pallas", "pallas-interpret"])
+    ap.add_argument("--es", action="store_true",
+                    help="run the small PEPG rule search too")
+    args = ap.parse_args()
+    main(quick=args.quick, impl=args.impl)

@@ -8,6 +8,8 @@ actuator failure, while a weight-trained controller cannot adapt.
 
 Pipeline: Phase-1 PEPG rule search on the direction task (8 headings) ->
 Phase-2 deployment on unseen headings -> actuator-failure stress test.
+Every rollout layer step runs through the PlasticEngine (`--impl` picks the
+backend: "xla" CPU oracle, "pallas" TPU, "pallas-interpret" validation).
 """
 import argparse
 import json
@@ -24,6 +26,9 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="paper-scale run (slower)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--impl", default="xla",
+                    choices=["xla", "pallas", "pallas-interpret"],
+                    help="PlasticEngine backend for every rollout")
     args = ap.parse_args()
 
     gens = 60 if args.full else 12
@@ -33,7 +38,7 @@ def main():
     env = envs.make("direction", episode_len=ep_len)
     cfg = adaptation.AdaptationConfig(hidden=hidden, timesteps=2,
                                       pop_pairs=16, generations=gens,
-                                      seed=args.seed)
+                                      seed=args.seed, impl=args.impl)
 
     results = {}
     for label, plastic in (("fireflyp", True), ("weight-trained", False)):

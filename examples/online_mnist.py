@@ -1,40 +1,44 @@
-"""Online learning on streaming digits via the dual-engine pipeline.
+"""Online learning on streaming digits via the PlasticEngine pipeline.
 
-    PYTHONPATH=src python examples/online_mnist.py
+    PYTHONPATH=src python examples/online_mnist.py [--impl pallas-interpret]
 
-The paper's Table II scenario: the 784-1024-10 network processes a digit
-stream while its synapses update online — forward and plasticity execute
-as ONE fused program per timestep (the dual-engine overlap), so learning
-adds no separate pass over the weights.
+The paper's Table II scenario at reduced demo scale (784-256-10 here vs
+the paper's 784-1024-10 — see benchmarks/mnist_throughput.py for full
+scale): the network processes a digit stream while its synapses update
+online — `snn.timestep` routes every layer through the fused dual-engine
+step (forward AND plasticity in ONE program per layer), so learning adds
+no separate pass over the weights.  `--impl` selects the engine backend
+("xla" CPU oracle by default; "pallas" is the TPU kernel,
+"pallas-interpret" validates it on CPU).
 """
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import plasticity as P, snn
+from repro.core import snn
 from repro.data import mnist_batch, spike_encode
-from repro.kernels import dual_engine_step
+
+_ap = argparse.ArgumentParser()
+_ap.add_argument("--impl", default="xla",
+                 choices=["xla", "pallas", "pallas-interpret"])
+IMPL = _ap.parse_args().impl
 
 CFG = snn.SNNConfig(layer_sizes=(784, 256, 10), timesteps=6,
-                    spiking_readout=True)
+                    spiking_readout=True, impl=IMPL)
 
 
 @jax.jit
-def fused_timestep(carry, x):
-    w1, w2, th1, th2, v1, v2, tr0, tr1, tr2 = carry
-    tr0 = P.update_trace(tr0, x, CFG.trace_decay)
-    s1, v1, tr1, w1 = dual_engine_step(x, w1, th1, v1, tr0, tr1)
-    s2, v2, tr2, w2 = dual_engine_step(s1, w2, th2, v2, tr1, tr2)
-    return (w1, w2, th1, th2, v1, v2, tr0, tr1, tr2), s2
+def fused_timestep(state, theta, x):
+    """One product timestep: all layers through the fused engine."""
+    return snn.timestep(CFG, state, theta, x)
 
 
 def main():
     key = jax.random.PRNGKey(0)
     state = snn.init_state(CFG, batch=1)
     theta = snn.init_theta(CFG, key, scale=0.05)
-    carry = (state["w"][0], state["w"][1], theta[0], theta[1],
-             state["v"][0], state["v"][1], *state["trace"])
 
     imgs, labels = mnist_batch(key, 32)
     t0 = time.time()
@@ -43,15 +47,15 @@ def main():
     for i in range(imgs.shape[0]):
         sp = spike_encode(jax.random.fold_in(key, i), imgs[i], CFG.timesteps)
         counts = jnp.zeros((10,))
-        w_before = carry[0]
+        w_before = state.w[0]
         for t in range(CFG.timesteps):
-            carry, s2 = fused_timestep(carry, sp[t][None])
+            state, s2 = fused_timestep(state, theta, sp[t][None])
             counts = counts + s2[0]
-        drift.append(float(jnp.abs(carry[0] - w_before).mean()))
+        drift.append(float(jnp.abs(state.w[0] - w_before).mean()))
         frames += 1
     dt = time.time() - t0
     print(f"processed {frames} digits in {dt:.2f}s "
-          f"({frames/dt:.1f} FPS end-to-end incl. learning, CPU)")
+          f"({frames/dt:.1f} FPS end-to-end incl. learning, impl={IMPL})")
     print(f"mean |dW| per frame (online plasticity active): "
           f"{sum(drift)/len(drift):.5f}")
     print("weights started at zero; the stream itself built the synapses.")

@@ -5,15 +5,17 @@
 1. Build a plastic SNN controller (zero-initialized weights).
 2. Optimize the RULE (not the weights) offline with PEPG on 8 directions.
 3. Deploy frozen rule on 72 unseen directions — weights rewrite online.
-4. Run the same rule through the fused dual-engine kernel (TPU target,
-   validated here in interpret mode).
+4. Re-run the deployed controller through the PlasticEngine's Pallas
+   backend (the fused dual-engine TPU kernel, validated here in interpret
+   mode) — the SAME `controller_step` code path, one `impl=` flip away.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from repro import envs
-from repro.core import adaptation, snn
-from repro.kernels import dual_engine_step
+from repro.core import adaptation, engine, snn
 
 # ---------------------------------------------------------------- phase 1
 env = envs.make("direction", episode_len=40)
@@ -28,16 +30,25 @@ print("Phase 2: frozen rule, ZERO weights, 72 unseen directions...")
 returns = adaptation.evaluate_generalization(env, scfg, theta)
 print(f"  mean return on unseen tasks: {float(returns.mean()):.2f}")
 
-# -------------------------------------------------- the hardware kernel
-print("Fused dual-engine step (Pallas TPU kernel, interpret mode):")
-key = jax.random.PRNGKey(0)
-x = (jax.random.uniform(key, (1, 8)) > 0.5).astype(jnp.float32)
-w = jnp.zeros((8, 16))
-th = 0.05 * jax.random.normal(key, (4, 8, 16))
-v = jnp.zeros((1, 16))
-tp, tq = jnp.ones((1, 8)), jnp.zeros((1, 16))
-spikes, v2, tr2, w2 = dual_engine_step(x, w, th, v, tp, tq,
-                                       impl="pallas", interpret=True)
-print(f"  spikes={int(spikes.sum())}, |dW|={float(jnp.abs(w2 - w).sum()):.4f}"
-      f"  (forward + four-term plasticity in ONE kernel)")
+# -------------------------------------------------- the hardware backend
+print("Same controller through the Pallas dual-engine kernel (interpret):")
+pcfg = dataclasses.replace(scfg, impl="pallas-interpret")
+state = snn.init_state(pcfg)
+rule = snn.unflatten_theta(pcfg, theta)
+obs = env.observe(env.reset(jax.random.PRNGKey(0), env.eval_tasks()[0]))
+state, action = snn.controller_step(pcfg, state, rule, obs)
+dw = sum(float(jnp.abs(w).sum()) for w in state.w)
+print(f"  action={[round(float(a), 3) for a in action]}, |W| grown online="
+      f"{dw:.4f}  (forward + four-term plasticity in ONE kernel per layer)")
+
+# or drive a single layer directly through the engine API:
+layer = engine.LayerState(w=jnp.zeros((8, 16)), v=jnp.zeros((16,)),
+                          trace_pre=jnp.ones((8,)),
+                          trace_post=jnp.zeros((16,)),
+                          theta=0.05 * jax.random.normal(
+                              jax.random.PRNGKey(0), (4, 8, 16)))
+x = (jax.random.uniform(jax.random.PRNGKey(1), (8,)) > 0.5).astype(jnp.float32)
+layer, spikes = engine.layer_step(layer, x, impl="pallas-interpret")
+print(f"  layer_step: spikes={int(spikes.sum())}, "
+      f"|dW|={float(jnp.abs(layer.w).sum()):.4f}")
 print("done.")

@@ -1,4 +1,4 @@
-"""FireFly-P core: four-term plasticity rule, LIF SNN, PEPG, two-phase learning."""
-from repro.core import adaptation, es, plasticity, snn
+"""FireFly-P core: four-term rule, PlasticEngine, LIF SNN, PEPG, two-phase learning."""
+from repro.core import adaptation, engine, es, plasticity, snn
 
-__all__ = ["adaptation", "es", "plasticity", "snn"]
+__all__ = ["adaptation", "engine", "es", "plasticity", "snn"]

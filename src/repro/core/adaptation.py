@@ -33,13 +33,14 @@ class AdaptationConfig:
     episodes_per_task: int = 1
     theta_scale: float = 0.05          # PEPG sigma_init over theta space
     seed: int = 0
+    impl: str = "xla"                  # PlasticEngine backend for rollouts
 
 
 def make_snn_config(env: Env, cfg: AdaptationConfig, plastic: bool = True) -> snn.SNNConfig:
     return snn.SNNConfig(
         layer_sizes=(env.obs_dim, cfg.hidden, env.act_dim),
         timesteps=cfg.timesteps, trace_decay=cfg.trace_decay,
-        plastic=plastic)
+        plastic=plastic, impl=cfg.impl)
 
 
 def episode_return(env: Env, scfg: snn.SNNConfig, theta_or_w: jax.Array,
@@ -61,7 +62,8 @@ def episode_return(env: Env, scfg: snn.SNNConfig, theta_or_w: jax.Array,
         theta = snn.unflatten_theta(scfg, theta_or_w)
     else:
         theta = snn.init_theta(scfg, jax.random.PRNGKey(0), scale=0.0)
-        state["w"] = unflatten_weights(scfg, theta_or_w)
+        state = dataclasses.replace(
+            state, w=tuple(unflatten_weights(scfg, theta_or_w)))
 
     est = env.reset(k_env, task)
     full_mask = jnp.ones((env.act_dim,))

@@ -1,0 +1,146 @@
+"""PlasticEngine: the backend-dispatched fused layer step (product hot path).
+
+One `layer_step` = one SNN timestep for ONE synaptic layer, running the
+Forward Engine (psum matmul -> neuron dynamics -> trace update) and the
+Plasticity Engine (four-term dw, weights rewritten in place) as a single
+fused program — the FireFly-P dual-engine overlap (Secs. III-B/C).
+
+Every consumer of the rule — `core/snn.timestep`, the adaptation loops, the
+LM plastic adapter, serving, examples, and benchmarks — routes layer steps
+through this module, so the Pallas kernel is the single source of truth for
+the hot path rather than a benchmark artifact.
+
+Backends (`impl`):
+
+  * ``"xla"``              — pure-jnp oracle (kernels/plasticity/ref).  What
+                             CPU runs and dry-runs lower; bit-stable with the
+                             historical hand-rolled jnp layer loop.
+  * ``"pallas"``           — the fused Pallas TPU kernel
+                             (kernels/plasticity/kernel).
+  * ``"pallas-interpret"`` — same kernel body executed by the Pallas
+                             interpreter; validates the TPU program on CPU.
+
+`layer_step` accepts unbatched ``(N,)`` or batched ``(B, N)`` state.  Shared
+weights batch-average the update (delta_w semantics); per-sample plastic
+networks (e.g. the per-request LM adapter) `jax.vmap` `layer_step` with
+``in_axes=(LayerState(w=0, v=0, trace_pre=0, trace_post=0, theta=None), 0)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.plasticity import kernel as _kernel
+from repro.kernels.plasticity import ref as _ref
+
+IMPLS = ("xla", "pallas", "pallas-interpret")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LayerState:
+    """State slice the dual-engine step reads and rewrites for one layer.
+
+    ``trace_pre`` is the *already-updated* presynaptic trace for the current
+    timestep (the predecessor layer's Trace Update Unit runs upstream);
+    ``trace_post`` is the previous timestep's postsynaptic trace, which
+    `layer_step` advances and returns.  ``theta`` is the packed
+    ``(4, n_pre, n_post)`` rule; ``None`` for non-plastic layers.
+    """
+
+    w: jax.Array                        # (N, M) synaptic weights
+    v: jax.Array                        # (M,) | (B, M) membrane potential
+    trace_pre: jax.Array                # (N,) | (B, N)
+    trace_post: jax.Array               # (M,) | (B, M)
+    theta: Optional[jax.Array] = None   # (4, N, M) packed rule coefficients
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class NetworkState:
+    """Whole-network state: per-layer weights/membranes, per-population traces.
+
+    Replaces the historical raw ``{"w": [...], "v": [...], "trace": [...]}``
+    dict; registered as a pytree so it threads through jit/scan/vmap.
+    ``trace`` has ``num_layers + 1`` entries — ``trace[i]`` is layer i's
+    presynaptic population (``trace[0]`` is the input drive's trace).
+    """
+
+    w: Tuple[jax.Array, ...]
+    v: Tuple[jax.Array, ...]
+    trace: Tuple[jax.Array, ...]
+    t: jax.Array
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.w)
+
+    def layer(self, i: int, theta=None) -> LayerState:
+        """View layer i as a LayerState (traces must be current-timestep)."""
+        return LayerState(w=self.w[i], v=self.v[i], trace_pre=self.trace[i],
+                          trace_post=self.trace[i + 1], theta=theta)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineParams:
+    """Static per-layer parameters of the fused step (hashable; jit-static)."""
+
+    tau_m: float = 2.0
+    v_th: float = 1.0
+    v_reset: float = 0.0
+    trace_decay: float = 0.8
+    w_clip: float = 4.0
+    plastic: bool = True
+    spiking: bool = True        # False => leaky readout (event = tanh(V))
+    block_m: int = 128          # Pallas postsynaptic tile width
+
+
+def layer_step(state: LayerState, x: jax.Array, *,
+               params: EngineParams = EngineParams(),
+               impl: str = "xla",
+               teach: Optional[jax.Array] = None
+               ) -> tuple[LayerState, jax.Array]:
+    """One fused forward+plasticity step for one layer.
+
+    Args:
+      state: layer state; rewritten functionally (w, v, trace_post advance).
+      x:     presynaptic events ``(N,)`` or ``(B, N)``.
+      params: static engine parameters.
+      impl:  ``"xla"`` | ``"pallas"`` | ``"pallas-interpret"``.
+      teach: optional teaching current added to the psum ``(M,)``/``(B, M)``
+             (supervised online learning on the output layer).
+
+    Returns:
+      ``(new_state, out)`` — ``out`` is the layer's output events: spikes for
+      spiking layers, the membrane potential for the leaky readout.
+    """
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    plastic = params.plastic and state.theta is not None
+    kw = dict(tau_m=params.tau_m, v_th=params.v_th, v_reset=params.v_reset,
+              trace_decay=params.trace_decay, w_clip=params.w_clip,
+              plastic=plastic, spiking=params.spiking)
+
+    if impl == "xla":
+        spikes, v, tpost, w = _ref.dual_engine_step(
+            x, state.w, state.theta, state.v, state.trace_pre,
+            state.trace_post, teach=teach, **kw)
+    else:
+        # The Pallas kernel is rank-(B, N); promote unbatched state to B=1.
+        unbatched = x.ndim == 1
+        up = (lambda a: a[None]) if unbatched else (lambda a: a)
+        spikes, v, tpost, w = _kernel.dual_engine_step_pallas(
+            up(x), state.w, state.theta, up(state.v), up(state.trace_pre),
+            up(state.trace_post),
+            teach=None if teach is None else up(teach),
+            block_m=params.block_m, interpret=(impl == "pallas-interpret"),
+            **kw)
+        if unbatched:
+            spikes, v, tpost = spikes[0], v[0], tpost[0]
+
+    new_state = dataclasses.replace(state, w=w, v=v, trace_post=tpost)
+    out = spikes if params.spiking else v
+    return new_state, out

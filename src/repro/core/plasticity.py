@@ -91,16 +91,12 @@ def delta_w(theta: jax.Array, s_pre: jax.Array, s_post: jax.Array) -> jax.Array:
     hebb = jnp.einsum("bi,bj->ij", sp, so) / b
     pre_m = jnp.mean(sp, axis=0)    # (n_pre,)
     post_m = jnp.mean(so, axis=0)   # (n_post,)
-    if theta.ndim == 1:  # scalar rule (shared across synapses)
-        dw = (th[ALPHA] * hebb
-              + th[BETA] * pre_m[:, None]
-              + th[GAMMA] * post_m[None, :]
-              + th[DELTA])
-    else:
-        dw = (th[ALPHA] * hebb
-              + th[BETA] * pre_m[:, None]
-              + th[GAMMA] * post_m[None, :]
-              + th[DELTA])
+    # Same contraction for the per-synapse (4, n_pre, n_post) and the
+    # scalar-rule (4,) theta: broadcasting handles both.
+    dw = (th[ALPHA] * hebb
+          + th[BETA] * pre_m[:, None]
+          + th[GAMMA] * post_m[None, :]
+          + th[DELTA])
     return dw.astype(theta.dtype)
 
 

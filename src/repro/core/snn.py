@@ -1,6 +1,13 @@
 """LIF spiking network with online plasticity (FireFly-P forward engine).
 
-Implements the paper's Forward Engine semantics functionally:
+The network is a generic N-layer stack iterated through the backend-
+dispatched PlasticEngine (`core.engine.layer_step`): every layer timestep —
+psum matmul, neuron dynamics, trace update, AND the four-term plasticity
+update — executes as ONE fused program per layer, on whichever backend
+``SNNConfig.impl`` selects ("xla" oracle, "pallas" TPU kernel,
+"pallas-interpret" CPU validation of the TPU kernel).
+
+Forward Engine semantics (paper Sec. III-B):
 
   * psum stage:     I(t) = W^T s_in(t)              (matmul)
   * neuron stage:   V(t) = V(t-1) + (I - V(t-1))/tau_m,  tau_m = 2
@@ -10,9 +17,10 @@ Implements the paper's Forward Engine semantics functionally:
 and the Scheduler's main-loop dataflow (Sec. III-C): within a timestep, layer
 L's plasticity update consumes the *current* timestep's (pre, post) traces
 while layer L+1's forward pass consumes layer L's fresh spikes.  On the FPGA
-these overlap in time; functionally the order below is exactly the data
-dependence the write-priority scheme enforces (forward always reads
-up-to-date weights: w_{t+1} = w_t + dw_t threaded through the scan carry).
+these overlap in time; functionally the per-layer `engine.layer_step` calls
+below are exactly the data dependence the write-priority scheme enforces
+(forward always reads up-to-date weights: w_{t+1} = w_t + dw_t threaded
+through the scan carry).
 """
 from __future__ import annotations
 
@@ -22,7 +30,9 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core import plasticity as P
+from repro.core.engine import NetworkState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,10 +58,11 @@ def leaky_readout(v: jax.Array, current: jax.Array, cfg: LIFConfig) -> jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class SNNConfig:
-    """Three-layer fully-connected controller (paper Sec. IV-A).
+    """Fully-connected plastic controller (paper Sec. IV-A).
 
-    layer_sizes = (obs_dim, hidden, act_dim); hidden = 128 for control,
-    1024 for the MNIST task.
+    layer_sizes = (obs_dim, *hidden..., act_dim); the stack depth is generic
+    — (16, 128, 8) is the paper's control net, (784, 1024, 10) MNIST.
+    ``impl`` selects the PlasticEngine backend every layer step runs on.
     """
     layer_sizes: Sequence[int] = (16, 128, 8)
     timesteps: int = 4                      # SNN timesteps per control step
@@ -62,6 +73,8 @@ class SNNConfig:
     w_clip: float = 4.0
     dtype: jnp.dtype = jnp.float32
     plastic: bool = True                    # False => fixed (weight-trained) SNN
+    impl: str = "xla"                       # engine backend (see engine.IMPLS)
+    block_m: int = 128                      # Pallas postsynaptic tile width
 
     @property
     def num_layers(self) -> int:
@@ -72,8 +85,17 @@ class SNNConfig:
             n_pre=self.layer_sizes[i], n_post=self.layer_sizes[i + 1],
             trace_decay=self.trace_decay, w_clip=self.w_clip, dtype=self.dtype)
 
+    def engine_params(self, i: int) -> engine.EngineParams:
+        """Static PlasticEngine parameters for layer i."""
+        last = i == self.num_layers - 1
+        return engine.EngineParams(
+            tau_m=self.lif.tau_m, v_th=self.lif.v_threshold,
+            v_reset=self.lif.v_reset, trace_decay=self.trace_decay,
+            w_clip=self.w_clip, plastic=self.plastic,
+            spiking=(not last) or self.spiking_readout, block_m=self.block_m)
 
-def init_state(cfg: SNNConfig, batch: Optional[int] = None):
+
+def init_state(cfg: SNNConfig, batch: Optional[int] = None) -> NetworkState:
     """Network state: per-layer membrane V, per-population traces, weights.
 
     Phase-2 deployment starts from ZERO weights (paper Sec. II-B): the rule,
@@ -84,13 +106,13 @@ def init_state(cfg: SNNConfig, batch: Optional[int] = None):
         return jnp.zeros(s, cfg.dtype)
 
     sizes = cfg.layer_sizes
-    return {
-        "w": [jnp.zeros((sizes[i], sizes[i + 1]), cfg.dtype)
-              for i in range(cfg.num_layers)],
-        "v": [z(sizes[i + 1]) for i in range(cfg.num_layers)],
-        "trace": [z(sizes[i]) for i in range(len(sizes))],
-        "t": jnp.zeros((), jnp.int32),
-    }
+    return NetworkState(
+        w=tuple(jnp.zeros((sizes[i], sizes[i + 1]), cfg.dtype)
+                for i in range(cfg.num_layers)),
+        v=tuple(z(sizes[i + 1]) for i in range(cfg.num_layers)),
+        trace=tuple(z(sizes[i]) for i in range(len(sizes))),
+        t=jnp.zeros((), jnp.int32),
+    )
 
 
 def init_theta(cfg: SNNConfig, key: jax.Array, scale: float = 0.01):
@@ -127,58 +149,49 @@ def encode(cfg: SNNConfig, obs: jax.Array, key: Optional[jax.Array], t: jax.Arra
     return obs.astype(cfg.dtype)  # analog current injection
 
 
-def timestep(cfg: SNNConfig, state: dict, theta, drive: jax.Array,
-             teach: Optional[jax.Array] = None) -> tuple[dict, jax.Array]:
-    """One SNN timestep through all layers with (optional) plasticity.
+def timestep(cfg: SNNConfig, state: NetworkState, theta, drive: jax.Array,
+             teach: Optional[jax.Array] = None) -> tuple[NetworkState, jax.Array]:
+    """One SNN timestep: every layer routed through the PlasticEngine.
 
-    Mirrors the Scheduler main loop: each layer's forward consumes the fresh
-    spikes of its predecessor; its plasticity update consumes the traces of
-    the *current* timestep (Phase A/B of Sec. III-C collapsed to dataflow).
-    Returns (new_state, output) where output is the readout activity.
+    Mirrors the Scheduler main loop: each layer's fused `engine.layer_step`
+    consumes the fresh spikes of its predecessor; its plasticity update
+    consumes the traces of the *current* timestep (Phase A/B of Sec. III-C
+    collapsed to dataflow).  Returns (new_state, output) where output is the
+    readout activity (spikes, or membrane potential for the leaky readout).
 
     `teach`: optional teaching current injected into the OUTPUT layer
     (supervised online learning — drives the postsynaptic trace so the
     Hebbian term binds features to the labelled class, the standard
     supervised-STDP protocol used for the paper's MNIST task).
     """
-    w, v, tr = list(state["w"]), list(state["v"]), list(state["trace"])
+    w, v, tr = list(state.w), list(state.v), list(state.trace)
     x = drive
     # input trace: input drive acts as the presynaptic event for L1
     tr[0] = P.update_trace(tr[0], x, cfg.trace_decay)
     out = None
     for i in range(cfg.num_layers):
-        current = x @ w[i]
-        if teach is not None and i == cfg.num_layers - 1:
-            current = current + teach.astype(current.dtype)
         last = i == cfg.num_layers - 1
-        if last and not cfg.spiking_readout:
-            v[i] = leaky_readout(v[i], current, cfg.lif)
-            spikes = jnp.tanh(v[i])  # bounded continuous activity as "event"
-            out = v[i]
-        else:
-            v[i], spikes = lif_step(v[i], current, cfg.lif)
-            out = spikes
-        tr[i + 1] = P.update_trace(tr[i + 1], spikes, cfg.trace_decay)
-        if cfg.plastic:
-            pcfg = cfg.layer_plasticity_cfg(i)
-            # delta_w batch-averages internally when traces are batched
-            # (shared-weight mode, e.g. batched MNIST online learning);
-            # per-agent plastic nets vmap the whole controller instead.
-            w[i] = P.apply_plasticity(w[i], theta[i], tr[i], tr[i + 1], pcfg)
-        x = spikes
-    new_state = {"w": w, "v": v, "trace": tr, "t": state["t"] + 1}
-    return new_state, out
+        layer = engine.LayerState(
+            w=w[i], v=v[i], trace_pre=tr[i], trace_post=tr[i + 1],
+            theta=theta[i] if cfg.plastic else None)
+        layer, out = engine.layer_step(
+            layer, x, params=cfg.engine_params(i), impl=cfg.impl,
+            teach=teach if last else None)
+        w[i], v[i], tr[i + 1] = layer.w, layer.v, layer.trace_post
+        x = out
+    return NetworkState(w=tuple(w), v=tuple(v), trace=tuple(tr),
+                        t=state.t + 1), out
 
 
-def controller_step(cfg: SNNConfig, state: dict, theta, obs: jax.Array,
-                    key: Optional[jax.Array] = None) -> tuple[dict, jax.Array]:
+def controller_step(cfg: SNNConfig, state: NetworkState, theta, obs: jax.Array,
+                    key: Optional[jax.Array] = None) -> tuple[NetworkState, jax.Array]:
     """One control step = cfg.timesteps SNN timesteps on a held observation.
 
     Returns (state, action) with action = mean readout over the window.
     """
     def body(carry, t):
         st = carry
-        drive = encode(cfg, obs, key, st["t"])
+        drive = encode(cfg, obs, key, st.t)
         st, out = timestep(cfg, st, theta, drive)
         return st, out
 
@@ -189,16 +202,16 @@ def controller_step(cfg: SNNConfig, state: dict, theta, obs: jax.Array,
     return state, action
 
 
-def classify_window(cfg: SNNConfig, state: dict, theta, x: jax.Array,
+def classify_window(cfg: SNNConfig, state: NetworkState, theta, x: jax.Array,
                     key: Optional[jax.Array] = None,
-                    teach: Optional[jax.Array] = None) -> tuple[dict, jax.Array]:
+                    teach: Optional[jax.Array] = None) -> tuple[NetworkState, jax.Array]:
     """Present x for cfg.timesteps; return (state, class scores = spike counts).
 
     With `teach` (e.g. `label_onehot * amplitude`) the output population is
     driven toward the labelled class during the window, so the plasticity
     rule performs supervised online learning."""
     def body(st, t):
-        drive = encode(cfg, x, key, st["t"])
+        drive = encode(cfg, x, key, st.t)
         st, out = timestep(cfg, st, theta, drive, teach=teach)
         return st, out
 

@@ -1,8 +1,10 @@
 """Fused dual-engine Pallas TPU kernel (FireFly-P Secs. III-B/C on TPU).
 
 One kernel invocation = one SNN timestep for one synaptic layer: the Forward
-Engine (psum matmul -> LIF -> trace) AND the Plasticity Engine (four-term
-dw) execute on the SAME VMEM-resident weight/coefficient tiles.
+Engine (psum matmul -> neuron dynamics -> trace) AND the Plasticity Engine
+(four-term dw) execute on the SAME VMEM-resident weight/coefficient tiles.
+This is the hot path behind `core.engine.layer_step` — every network-level
+timestep in the product routes here when ``impl="pallas"``.
 
 FPGA -> TPU adaptation (DESIGN.md Sec. 2):
   * psum-stationary PE registers  -> fp32 accumulation inside the MXU dot;
@@ -14,6 +16,15 @@ FPGA -> TPU adaptation (DESIGN.md Sec. 2):
     consumed by both engines before leaving VMEM; there is no second pass
     over HBM for the update (the FPGA hides update latency in time, we
     eliminate the traffic instead).
+
+Layer modes mirror the network semantics:
+  * ``spiking=True``  — LIF with hard reset; events are binary spikes.
+  * ``spiking=False`` — leaky-integrator readout; the event driving the
+    postsynaptic trace is ``tanh(V)`` (bounded continuous activity).
+  * ``teach``         — optional teaching current added to the psum
+    (supervised online learning on the output layer).
+  * ``plastic=False`` — the theta/trace_pre operands are dropped entirely;
+    no coefficient DMA is issued and weights pass through unchanged.
 
 Grid: (M // bm,) — one program per block of postsynaptic neurons.  Every
 block sees the whole batch and the whole fan-in, so both matmuls (forward
@@ -30,18 +41,30 @@ from jax.experimental import pallas as pl
 from repro.core.plasticity import ALPHA, BETA, GAMMA, DELTA
 
 
-def _dual_engine_kernel(x_ref, w_ref, theta_ref, v_ref, tpre_ref, tpost_ref,
-                        s_out, v_out, tpost_out, w_out,
-                        *, tau_m, v_th, v_reset, trace_decay, w_clip,
-                        plastic, batch):
+def _dual_engine_kernel(x_ref, w_ref, v_ref, tpost_ref, *refs,
+                        tau_m, v_th, v_reset, trace_decay, w_clip,
+                        plastic, spiking, has_teach, batch):
+    # Optional operands, in order: theta/tpre (plastic), teach.
+    rest = list(refs)
+    theta_ref = rest.pop(0) if plastic else None
+    tpre_ref = rest.pop(0) if plastic else None
+    teach_ref = rest.pop(0) if has_teach else None
+    s_out, v_out, tpost_out, w_out = rest
+
     # ---- Forward Engine ----------------------------------------------------
     x = x_ref[...].astype(jnp.float32)          # (B, N)
     w = w_ref[...].astype(jnp.float32)          # (N, bm)
     current = jnp.dot(x, w, preferred_element_type=jnp.float32)   # psum (MXU)
+    if has_teach:
+        current = current + teach_ref[...].astype(jnp.float32)
     v = v_ref[...].astype(jnp.float32)
-    v_new = v + (current - v) * (1.0 / tau_m)   # LIF, tau_m = 2
-    spikes = (v_new >= v_th).astype(jnp.float32)
-    v_upd = jnp.where(spikes > 0, v_reset, v_new)
+    v_new = v + (current - v) * (1.0 / tau_m)   # leaky integration, tau_m = 2
+    if spiking:
+        spikes = (v_new >= v_th).astype(jnp.float32)
+        v_upd = jnp.where(spikes > 0, v_reset, v_new)
+    else:                                        # non-spiking leaky readout
+        spikes = jnp.tanh(v_new)
+        v_upd = v_new
     tpost = tpost_ref[...].astype(jnp.float32)
     tpost_new = trace_decay * tpost + spikes    # Trace Update Unit
 
@@ -69,31 +92,44 @@ def dual_engine_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
                             tau_m: float = 2.0, v_th: float = 1.0,
                             v_reset: float = 0.0, trace_decay: float = 0.8,
                             w_clip: float = 4.0, plastic: bool = True,
+                            spiking: bool = True, teach=None,
                             block_m: int = 128, interpret: bool = False):
-    """Pallas-call wrapper.  Shapes as in ref.dual_engine_step."""
+    """Pallas-call wrapper.  Shapes as in ref.dual_engine_step (batched)."""
     b, n = x.shape
     n2, m = w.shape
     assert n == n2, (x.shape, w.shape)
     bm = min(block_m, m)
     grid = (pl.cdiv(m, bm),)
+    has_teach = teach is not None
 
     kernel = functools.partial(
         _dual_engine_kernel, tau_m=tau_m, v_th=v_th, v_reset=v_reset,
-        trace_decay=trace_decay, w_clip=w_clip, plastic=plastic, batch=b)
+        trace_decay=trace_decay, w_clip=w_clip, plastic=plastic,
+        spiking=spiking, has_teach=has_teach, batch=b)
+
+    in_specs = [
+        pl.BlockSpec((b, n), lambda j: (0, 0)),        # x: full batch/fan-in
+        pl.BlockSpec((n, bm), lambda j: (0, j)),       # w tile
+        pl.BlockSpec((b, bm), lambda j: (0, j)),       # v tile
+        pl.BlockSpec((b, bm), lambda j: (0, j)),       # post trace tile
+    ]
+    operands = [x, w, v, trace_post]
+    if plastic:
+        in_specs += [
+            pl.BlockSpec((4, n, bm), lambda j: (0, 0, j)),  # packed theta
+            pl.BlockSpec((b, n), lambda j: (0, 0)),         # pre trace
+        ]
+        operands += [theta, trace_pre]
+    if has_teach:
+        in_specs.append(pl.BlockSpec((b, bm), lambda j: (0, j)))
+        operands.append(teach)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((b, n), lambda j: (0, 0)),        # x: full batch/fan-in
-            pl.BlockSpec((n, bm), lambda j: (0, j)),       # w tile
-            pl.BlockSpec((4, n, bm), lambda j: (0, 0, j)),  # packed theta tile
-            pl.BlockSpec((b, bm), lambda j: (0, j)),       # v tile
-            pl.BlockSpec((b, n), lambda j: (0, 0)),        # pre trace
-            pl.BlockSpec((b, bm), lambda j: (0, j)),       # post trace tile
-        ],
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((b, bm), lambda j: (0, j)),       # spikes
+            pl.BlockSpec((b, bm), lambda j: (0, j)),       # events
             pl.BlockSpec((b, bm), lambda j: (0, j)),       # v out
             pl.BlockSpec((b, bm), lambda j: (0, j)),       # post trace out
             pl.BlockSpec((n, bm), lambda j: (0, j)),       # w out
@@ -105,4 +141,4 @@ def dual_engine_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
             jax.ShapeDtypeStruct((n, m), w.dtype),
         ],
         interpret=interpret,
-    )(x, w, theta, v, trace_pre, trace_post)
+    )(*operands)

@@ -1,7 +1,14 @@
 """Jit'd public wrapper for the fused dual-engine step.
 
-`impl` selects: "pallas" (TPU target; `interpret=True` for CPU validation)
-or "xla" (the ref oracle — what the dry-run and CPU benchmarks lower).
+`impl` selects the backend: "xla" (the ref oracle — what dry-runs and CPU
+benchmarks lower), "pallas" (TPU target), or "pallas-interpret" (the Pallas
+kernel body executed by the interpreter for CPU validation; equivalent to
+``impl="pallas", interpret=True``).
+
+Network-level code should not call this directly — `core.engine.layer_step`
+is the product entry point and adds LayerState plumbing and unbatched-state
+support.  This wrapper is the kernel-level API used by kernel tests and
+one-off comparisons.
 """
 from __future__ import annotations
 
@@ -16,17 +23,18 @@ from repro.kernels.plasticity import ref as _ref
 @functools.partial(
     jax.jit,
     static_argnames=("tau_m", "v_th", "v_reset", "trace_decay", "w_clip",
-                     "plastic", "impl", "interpret", "block_m"))
-def dual_engine_step(x, w, theta, v, trace_pre, trace_post, *,
+                     "plastic", "spiking", "impl", "interpret", "block_m"))
+def dual_engine_step(x, w, theta, v, trace_pre, trace_post, teach=None, *,
                      tau_m: float = 2.0, v_th: float = 1.0,
                      v_reset: float = 0.0, trace_decay: float = 0.8,
                      w_clip: float = 4.0, plastic: bool = True,
-                     impl: str = "xla", interpret: bool = False,
-                     block_m: int = 128):
+                     spiking: bool = True, impl: str = "xla",
+                     interpret: bool = False, block_m: int = 128):
     kw = dict(tau_m=tau_m, v_th=v_th, v_reset=v_reset,
-              trace_decay=trace_decay, w_clip=w_clip, plastic=plastic)
-    if impl == "pallas":
+              trace_decay=trace_decay, w_clip=w_clip, plastic=plastic,
+              spiking=spiking, teach=teach)
+    if impl in ("pallas", "pallas-interpret"):
         return _kernel.dual_engine_step_pallas(
-            x, w, theta, v, trace_pre, trace_post,
-            block_m=block_m, interpret=interpret, **kw)
+            x, w, theta, v, trace_pre, trace_post, block_m=block_m,
+            interpret=interpret or impl == "pallas-interpret", **kw)
     return _ref.dual_engine_step(x, w, theta, v, trace_pre, trace_post, **kw)

@@ -1,12 +1,13 @@
 """Pure-jnp oracle for the fused dual-engine step (forward + plasticity).
 
-Semantics of one SNN timestep for one synaptic layer, matching
-core/snn.timestep for a spiking layer:
+Semantics of one SNN timestep for one synaptic layer — the single source of
+truth the engine's ``impl="xla"`` backend runs and the Pallas kernel is
+validated against:
 
-    I        = x @ w                       # psum stage (Forward Engine)
-    v_new    = v + (I - v) / tau_m         # neuron dynamics, tau_m = 2
-    s        = v_new >= v_th               # spike
-    v_out    = v_reset where s else v_new
+    I        = x @ w (+ teach)             # psum stage (Forward Engine)
+    v_new    = v + (I - v) * (1/tau_m)     # neuron dynamics, tau_m = 2
+    spiking:   s = v_new >= v_th ; v_out = v_reset where s else v_new
+    readout:   s = tanh(v_new)   ; v_out = v_new       (leaky integrator)
     tp_new   = lam * trace_post + s        # trace update
     hebb     = trace_pre^T @ tp_new / B    # Plasticity Engine (4 terms)
     dw       = a*hebb + b*mean(pre)[:,N] + g*mean(tp_new)[N,:] + d
@@ -14,6 +15,9 @@ core/snn.timestep for a spiking layer:
 
 `trace_pre` is the *already-updated* presynaptic trace for this timestep
 (the Forward Engine's Trace Update Unit runs upstream of this layer).
+
+Inputs may be unbatched ``(N,)`` or batched ``(B, N)``; shared weights
+batch-average the update, matching ``core.plasticity.delta_w``.
 """
 from __future__ import annotations
 
@@ -25,25 +29,38 @@ from repro.core.plasticity import ALPHA, BETA, GAMMA, DELTA
 def dual_engine_step(x, w, theta, v, trace_pre, trace_post, *,
                      tau_m: float = 2.0, v_th: float = 1.0,
                      v_reset: float = 0.0, trace_decay: float = 0.8,
-                     w_clip: float = 4.0, plastic: bool = True):
-    """Oracle.  Shapes: x (B,N), w (N,M), theta (4,N,M), v (B,M),
-    trace_pre (B,N), trace_post (B,M).
+                     w_clip: float = 4.0, plastic: bool = True,
+                     spiking: bool = True, teach=None):
+    """Oracle.  Shapes: x (B,N)|(N,), w (N,M), theta (4,N,M)|None,
+    v (B,M)|(M,), trace_pre (B,N)|(N,), trace_post (B,M)|(M,),
+    teach (B,M)|(M,)|None.
 
-    Returns (spikes (B,M), v_out (B,M), trace_post_new (B,M), w_new (N,M)).
+    Returns (events, v_out, trace_post_new, w_new) with batch rank preserved.
     """
     compute = jnp.float32
-    b = x.shape[0]
     current = jnp.dot(x.astype(compute), w.astype(compute))
-    v_new = v.astype(compute) + (current - v.astype(compute)) / tau_m
-    spikes = (v_new >= v_th).astype(compute)
-    v_out = jnp.where(spikes > 0, v_reset, v_new)
+    if teach is not None:
+        current = current + teach.astype(compute)
+    v32 = v.astype(compute)
+    v_new = v32 + (current - v32) * (1.0 / tau_m)
+    if spiking:
+        spikes = (v_new >= v_th).astype(compute)
+        v_out = jnp.where(spikes > 0, v_reset, v_new)
+    else:
+        spikes = jnp.tanh(v_new)
+        v_out = v_new
     tp_new = trace_decay * trace_post.astype(compute) + spikes
 
     if plastic:
+        tpre = trace_pre.astype(compute)
+        tpo = tp_new
+        if tpre.ndim == 1:
+            tpre, tpo = tpre[None], tpo[None]
+        b = tpre.shape[0]
         th = theta.astype(compute)
-        hebb = jnp.dot(trace_pre.astype(compute).T, tp_new) / b
-        pre_m = trace_pre.astype(compute).mean(0)
-        post_m = tp_new.mean(0)
+        hebb = jnp.einsum("bi,bj->ij", tpre, tpo) / b
+        pre_m = tpre.mean(0)
+        post_m = tpo.mean(0)
         dw = (th[ALPHA] * hebb + th[BETA] * pre_m[:, None]
               + th[GAMMA] * post_m[None, :] + th[DELTA])
         w_new = jnp.clip(w.astype(compute) + dw, -w_clip, w_clip)

@@ -3,7 +3,11 @@ FireFly-P plastic adapter (the paper's Phase-2 online adaptation running
 inside an LM serving stack).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-        --batch 4 --prompt-len 32 --gen 16 --plastic
+        --batch 4 --prompt-len 32 --gen 16 --plastic [--plastic-impl pallas]
+
+With --plastic every decode step runs the fused dual-engine program
+(core.engine.layer_step) once per request stream; --plastic-impl picks the
+backend ("xla" oracle, "pallas" TPU kernel, "pallas-interpret" validation).
 """
 from __future__ import annotations
 
@@ -59,6 +63,10 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--plastic", action="store_true",
                     help="attach the FireFly-P plastic adapter at decode")
+    ap.add_argument("--plastic-impl", default="xla",
+                    choices=["xla", "pallas", "pallas-interpret"],
+                    help="PlasticEngine backend for the adapter's fused "
+                         "dual-engine step (pallas on TPU)")
     ap.add_argument("--kv-quant", action="store_true",
                     help="int8 KV cache (2.3x decode memory-roofline win)")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -68,7 +76,8 @@ def main(argv=None):
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if args.plastic:
         cfg = cfg.with_(plastic_adapter=True,
-                        adapter_neurons=min(128, cfg.d_model))
+                        adapter_neurons=min(128, cfg.d_model),
+                        adapter_impl=args.plastic_impl)
     if args.kv_quant:
         cfg = cfg.with_(kv_quant=True)
     mesh = make_local_mesh()

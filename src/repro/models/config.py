@@ -61,6 +61,8 @@ class ModelConfig:
     # plastic adapter (the paper's technique as an LM serving feature)
     plastic_adapter: bool = False
     adapter_neurons: int = 512
+    adapter_impl: str = "xla"     # PlasticEngine backend for the adapter
+                                  # ("xla" | "pallas" | "pallas-interpret")
     # int8 KV cache (beyond-paper: halves decode cache reads — the memory
     # roofline term of every decode cell; per-(position, kv-head) scales)
     kv_quant: bool = False

@@ -6,9 +6,14 @@ Phase 2).  Per decode step, per request:
 
     drive   = h @ P_in                  (fixed random projection, D -> N)
     s1      = LIF(v1, drive)            (presynaptic population)
-    s2      = LIF(v2, s1 @ W_fast)      (postsynaptic population)
+    s2, W_fast <- PlasticEngine.layer_step(s1)   (fused forward + rule)
     h'      = h + scale * (s2 @ P_out)  (readout back into the residual)
-    W_fast += four-term rule(theta, trace(s1), trace(s2))   per request
+
+The synaptic layer between the two populations is a per-request
+`core.engine.layer_step` (vmapped over the batch: each decode stream owns an
+independent plastic W_fast), so the serving hot path runs the SAME fused
+dual-engine program as the SNN controller; ``cfg.adapter_impl`` selects the
+backend ("xla" | "pallas" | "pallas-interpret").
 
 W_fast starts at ZERO and lives in the decode cache (B, N, N) — one plastic
 memory per request stream, continuously rewritten online.  theta is the
@@ -21,6 +26,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core import plasticity as P
 from repro.core.snn import LIFConfig, lif_step
 from repro.models.config import ModelConfig
@@ -59,21 +65,26 @@ def plan_cache(cfg: ModelConfig, batch: int) -> dict:
 def decode_step(params, state: dict, h, cfg: ModelConfig,
                 trace_decay: float = 0.8, w_clip: float = 4.0):
     """h (B,1,D) -> (h', new_state).  One online plasticity step per token."""
-    b, _, d = h.shape
-    n = cfg.adapter_neurons
     drive = jnp.einsum("bd,dn->bn", h[:, 0].astype(jnp.float32),
                        params["p_in"].astype(jnp.float32))
     v1, s1 = lif_step(state["v1"], drive, LIF)
-    cur2 = jnp.einsum("bn,bnm->bm", s1, state["w_fast"])
-    v2, s2 = lif_step(state["v2"], cur2, LIF)
     tr1 = P.update_trace(state["tr1"], s1, trace_decay)
-    tr2 = P.update_trace(state["tr2"], s2, trace_decay)
 
-    # four-term rule, per request stream (vmap over batch)
-    dw = jax.vmap(P.delta_w, in_axes=(None, 0, 0))(
-        params["theta"].astype(jnp.float32), tr1, tr2)
-    w_fast = jnp.clip(state["w_fast"] + dw, -w_clip, w_clip)
+    # Plastic synaptic layer: one fused dual-engine step per request stream
+    # (vmap over batch — every stream rewrites its own W_fast).
+    ep = engine.EngineParams(
+        tau_m=LIF.tau_m, v_th=LIF.v_threshold, v_reset=LIF.v_reset,
+        trace_decay=trace_decay, w_clip=w_clip, plastic=True, spiking=True)
+    impl = cfg.adapter_impl
+    layer = engine.LayerState(
+        w=state["w_fast"], v=state["v2"], trace_pre=tr1,
+        trace_post=state["tr2"], theta=params["theta"].astype(jnp.float32))
+    layer, s2 = jax.vmap(
+        lambda l, x: engine.layer_step(l, x, params=ep, impl=impl),
+        in_axes=(engine.LayerState(w=0, v=0, trace_pre=0, trace_post=0,
+                                   theta=None), 0))(layer, s1)
 
     out = jnp.einsum("bn,nd->bd", s2, params["p_out"].astype(jnp.float32))
     h = h + (params["scale"] * out[:, None, :]).astype(h.dtype)
-    return h, {"w_fast": w_fast, "v1": v1, "v2": v2, "tr1": tr1, "tr2": tr2}
+    return h, {"w_fast": layer.w, "v1": v1, "v2": layer.v,
+               "tr1": tr1, "tr2": layer.trace_post}

@@ -1,0 +1,85 @@
+"""Offline-friendly hypothesis shim.
+
+Test modules import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly.  When hypothesis is installed (the `test` extra in
+pyproject.toml) the real library is re-exported unchanged; in network-less
+environments a small deterministic fallback runs each property test over a
+fixed set of examples (strategy bounds + seeded pseudo-random fill), so the
+full tier-1 suite collects and runs without the dependency.
+
+The fallback supports exactly the strategy surface this repo uses:
+``st.floats(min, max)`` and ``st.integers(min, max)``, positional or
+keyword ``@given``, stacked with ``@settings`` and pytest parametrize.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _NUM_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, lo, hi, cast):
+            self.lo, self.hi, self.cast = lo, hi, cast
+
+        def example(self, rng: random.Random, i: int):
+            # corners first, then seeded pseudo-random interior points
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            if i == 2:
+                return self.cast((self.lo + self.hi) / 2)
+            return self.cast(self.lo + rng.random() * (self.hi - self.lo))
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(float(min_value), float(max_value), float)
+
+        @staticmethod
+        def integers(min_value, max_value, **_kw):
+            return _Strategy(int(min_value), int(max_value),
+                             lambda x: int(round(x)))
+
+    st = _Strategies()
+
+    def settings(*_args, **_kw):
+        """No-op stand-in for hypothesis.settings used as a decorator."""
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*pos_strategies, **kw_strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            if pos_strategies:
+                # hypothesis maps positional strategies onto the trailing
+                # parameters of the test function
+                names = [p.name for p in params[-len(pos_strategies):]]
+                strategies = dict(zip(names, pos_strategies))
+            else:
+                strategies = dict(kw_strategies)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xF1EF)
+                for i in range(_NUM_EXAMPLES):
+                    drawn = {name: s.example(rng, i)
+                             for name, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # hide the strategy-supplied params from pytest's fixture
+            # resolution, as hypothesis does
+            wrapper.__signature__ = sig.replace(
+                parameters=[p for p in params if p.name not in strategies])
+            return wrapper
+        return deco

@@ -1,0 +1,244 @@
+"""PlasticEngine parity and stability (the tentpole refactor's contract).
+
+Three guarantees:
+  1. `engine.layer_step` under ``impl="pallas-interpret"`` matches
+     ``impl="xla"`` within tolerance across shapes (block-multiples and
+     not), dtypes (fp32/bf16), plastic on/off, spiking/readout, teach,
+     and batched vs unbatched state.
+  2. A refactored `snn.controller_step` rollout is BIT-stable vs the
+     pre-refactor hand-rolled jnp layer loop under ``impl="xla"``.
+  3. A full `controller_step`/`classify_window` rollout agrees between
+     backends end-to-end.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, plasticity as P, snn
+
+
+def _layer(key, b, n, m, dtype, plastic=True):
+    ks = jax.random.split(key, 6)
+    shp = (lambda *s: s) if b is None else (lambda *s: (b, *s))
+    x = (jax.random.uniform(ks[0], shp(n)) > 0.5).astype(dtype)
+    state = engine.LayerState(
+        w=(0.1 * jax.random.normal(ks[1], (n, m))).astype(dtype),
+        v=(0.1 * jax.random.normal(ks[2], shp(m))).astype(dtype),
+        trace_pre=jax.random.uniform(ks[3], shp(n)).astype(dtype),
+        trace_post=jax.random.uniform(ks[4], shp(m)).astype(dtype),
+        theta=(0.01 * jax.random.normal(ks[5], (4, n, m))).astype(dtype)
+        if plastic else None)
+    return state, x
+
+
+def _assert_step_parity(state, x, params, teach=None, tol=1e-5):
+    ref_s, ref_out = engine.layer_step(state, x, params=params, impl="xla",
+                                       teach=teach)
+    pal_s, pal_out = engine.layer_step(state, x, params=params,
+                                       impl="pallas-interpret", teach=teach)
+    pairs = [(ref_out, pal_out, "out"), (ref_s.w, pal_s.w, "w"),
+             (ref_s.v, pal_s.v, "v"),
+             (ref_s.trace_post, pal_s.trace_post, "trace_post")]
+    for r, p, name in pairs:
+        assert r.shape == p.shape, name
+        np.testing.assert_allclose(
+            np.asarray(r, np.float32), np.asarray(p, np.float32),
+            rtol=tol, atol=tol, err_msg=name)
+
+
+class TestLayerStepParity:
+    # shapes that are and are not multiples of the 128-wide Pallas block
+    @pytest.mark.parametrize("b,n,m", [(1, 8, 8), (4, 32, 48), (2, 100, 130),
+                                       (8, 128, 128), (3, 17, 257)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_batched(self, b, n, m, dtype):
+        state, x = _layer(jax.random.PRNGKey(b * 997 + n + m), b, n, m, dtype)
+        tol = 1e-5 if dtype == jnp.float32 else 3e-2
+        _assert_step_parity(state, x, engine.EngineParams(), tol=tol)
+
+    @pytest.mark.parametrize("n,m", [(8, 16), (100, 130)])
+    def test_unbatched(self, n, m):
+        state, x = _layer(jax.random.PRNGKey(n + m), None, n, m, jnp.float32)
+        _assert_step_parity(state, x, engine.EngineParams())
+
+    def test_unbatched_equals_batch_of_one(self):
+        state, x = _layer(jax.random.PRNGKey(5), None, 24, 40, jnp.float32)
+        b1 = jax.tree_util.tree_map(
+            lambda a: a[None] if a.ndim < 2 else a, state)
+        b1 = dataclasses.replace(b1, w=state.w, theta=state.theta)
+        for impl in ("xla", "pallas-interpret"):
+            s0, o0 = engine.layer_step(state, x, impl=impl)
+            s1, o1 = engine.layer_step(b1, x[None], impl=impl)
+            np.testing.assert_allclose(np.asarray(o0), np.asarray(o1[0]),
+                                       rtol=1e-6, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(s0.w), np.asarray(s1.w),
+                                       rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("plastic", [True, False])
+    def test_plastic_flag(self, plastic):
+        state, x = _layer(jax.random.PRNGKey(1), 2, 16, 16, jnp.float32,
+                          plastic=plastic)
+        params = engine.EngineParams(plastic=plastic)
+        _assert_step_parity(state, x, params)
+        new_s, _ = engine.layer_step(state, x, params=params,
+                                     impl="pallas-interpret")
+        if not plastic:
+            np.testing.assert_array_equal(np.asarray(new_s.w),
+                                          np.asarray(state.w))
+
+    def test_readout_mode(self):
+        state, x = _layer(jax.random.PRNGKey(2), 2, 12, 20, jnp.float32)
+        params = engine.EngineParams(spiking=False)
+        _assert_step_parity(state, x, params)
+        # readout emits the membrane potential, not binary spikes
+        _, out = engine.layer_step(state, x, params=params, impl="xla")
+        assert not np.array_equal(np.unique(np.asarray(out)),
+                                  np.asarray([0.0, 1.0]))
+
+    def test_teach_current(self):
+        state, x = _layer(jax.random.PRNGKey(3), 2, 10, 30, jnp.float32)
+        teach = 2.0 * jax.random.normal(jax.random.PRNGKey(4), (2, 30))
+        _assert_step_parity(state, x, engine.EngineParams(), teach=teach)
+        # the teaching current must actually change the outcome
+        _, out0 = engine.layer_step(state, x, impl="xla")
+        _, out1 = engine.layer_step(state, x, impl="xla", teach=teach)
+        assert not np.array_equal(np.asarray(out0), np.asarray(out1))
+
+    def test_bad_impl_raises(self):
+        state, x = _layer(jax.random.PRNGKey(6), 1, 4, 4, jnp.float32)
+        with pytest.raises(ValueError):
+            engine.layer_step(state, x, impl="cuda")
+
+
+# ---------------------------------------------------------------------------
+# Bit-stability vs the pre-refactor hand-rolled jnp layer loop.
+# ---------------------------------------------------------------------------
+
+def _legacy_timestep(cfg, state, theta, drive, teach=None):
+    """The pre-PlasticEngine `snn.timestep` (hand-wired jnp), verbatim."""
+    w, v, tr = list(state["w"]), list(state["v"]), list(state["trace"])
+    x = drive
+    tr[0] = P.update_trace(tr[0], x, cfg.trace_decay)
+    out = None
+    for i in range(cfg.num_layers):
+        current = x @ w[i]
+        if teach is not None and i == cfg.num_layers - 1:
+            current = current + teach.astype(current.dtype)
+        last = i == cfg.num_layers - 1
+        if last and not cfg.spiking_readout:
+            v[i] = snn.leaky_readout(v[i], current, cfg.lif)
+            spikes = jnp.tanh(v[i])
+            out = v[i]
+        else:
+            v[i], spikes = snn.lif_step(v[i], current, cfg.lif)
+            out = spikes
+        tr[i + 1] = P.update_trace(tr[i + 1], spikes, cfg.trace_decay)
+        if cfg.plastic:
+            pcfg = cfg.layer_plasticity_cfg(i)
+            w[i] = P.apply_plasticity(w[i], theta[i], tr[i], tr[i + 1], pcfg)
+        x = spikes
+    return {"w": w, "v": v, "trace": tr, "t": state["t"] + 1}, out
+
+
+def _legacy_controller_step(cfg, state, theta, obs, key=None):
+    def body(st, t):
+        drive = snn.encode(cfg, obs, key, st["t"])
+        st, out = _legacy_timestep(cfg, st, theta, drive)
+        return st, out
+
+    state, outs = jax.lax.scan(body, state, jnp.arange(cfg.timesteps))
+    action = outs.mean(axis=0)
+    if not cfg.spiking_readout:
+        action = jnp.tanh(action)
+    return state, action
+
+
+def _as_legacy(state):
+    return {"w": list(state.w), "v": list(state.v),
+            "trace": list(state.trace), "t": state.t}
+
+
+class TestRolloutStability:
+    @pytest.mark.parametrize("spiking_readout", [False, True])
+    @pytest.mark.parametrize("plastic", [True, False])
+    def test_controller_step_bit_stable_vs_legacy(self, spiking_readout,
+                                                  plastic):
+        cfg = snn.SNNConfig(layer_sizes=(6, 16, 4), timesteps=4,
+                            plastic=plastic, spiking_readout=spiking_readout,
+                            impl="xla")
+        theta = snn.init_theta(cfg, jax.random.PRNGKey(0), scale=0.5)
+        obs = jnp.linspace(-1.0, 1.0, 6)
+        new_state, new_action = snn.controller_step(
+            cfg, snn.init_state(cfg), theta, obs)
+        old_state, old_action = _legacy_controller_step(
+            cfg, _as_legacy(snn.init_state(cfg)), theta, obs)
+        np.testing.assert_array_equal(np.asarray(new_action),
+                                      np.asarray(old_action))
+        for a, b in zip(new_state.w, old_state["w"]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(new_state.trace, old_state["trace"]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_classify_window_teach_bit_stable_vs_legacy(self):
+        cfg = snn.SNNConfig(layer_sizes=(10, 12, 3), timesteps=5,
+                            spiking_readout=True)
+        theta = snn.init_theta(cfg, jax.random.PRNGKey(2), scale=0.5)
+        x = jnp.ones((10,))
+        teach = 2.0 * jax.nn.one_hot(1, 3)
+
+        def body(st, t):
+            st, out = _legacy_timestep(cfg, st, theta,
+                                       snn.encode(cfg, x, None, st["t"]),
+                                       teach=teach)
+            return st, out
+
+        _, outs = jax.lax.scan(body, _as_legacy(snn.init_state(cfg)),
+                               jnp.arange(cfg.timesteps))
+        _, scores = snn.classify_window(cfg, snn.init_state(cfg), theta, x,
+                                        teach=teach)
+        np.testing.assert_array_equal(np.asarray(scores),
+                                      np.asarray(outs.sum(axis=0)))
+
+    def test_controller_rollout_backend_parity(self):
+        """xla vs pallas-interpret agree over a full multi-step rollout."""
+        actions, weights = {}, {}
+        for impl in ("xla", "pallas-interpret"):
+            cfg = snn.SNNConfig(layer_sizes=(6, 16, 4), timesteps=3,
+                                impl=impl)
+            state = snn.init_state(cfg)
+            theta = snn.init_theta(cfg, jax.random.PRNGKey(0), scale=0.5)
+            acts = []
+            for k in range(3):
+                obs = jnp.sin(jnp.linspace(0, 2 + k, 6))
+                state, a = snn.controller_step(cfg, state, theta, obs)
+                acts.append(a)
+            actions[impl] = jnp.stack(acts)
+            weights[impl] = state.w
+        np.testing.assert_allclose(np.asarray(actions["xla"]),
+                                   np.asarray(actions["pallas-interpret"]),
+                                   rtol=1e-5, atol=1e-5)
+        for a, b in zip(weights["xla"], weights["pallas-interpret"]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+
+
+class TestNetworkState:
+    def test_pytree_roundtrip(self):
+        cfg = snn.SNNConfig(layer_sizes=(5, 7, 2))
+        state = snn.init_state(cfg)
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        back = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert isinstance(back, engine.NetworkState)
+        assert back.num_layers == 2
+        assert len(back.trace) == 3
+
+    def test_layer_view(self):
+        cfg = snn.SNNConfig(layer_sizes=(5, 7, 2))
+        state = snn.init_state(cfg)
+        layer = state.layer(1)
+        assert layer.w.shape == (7, 2)
+        assert layer.trace_pre.shape == (7,)
+        assert layer.trace_post.shape == (2,)

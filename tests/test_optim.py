@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.optim import (adamw, clip_by_global_norm, compress_int8,
                          decompress_int8, ef_compress_update, global_norm,

@@ -1,8 +1,10 @@
 """LIF dynamics + SNN controller behaviour (paper Secs. II, III-B)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import plasticity as P, snn
 
@@ -38,7 +40,7 @@ class TestController:
     def test_zero_weight_start(self):
         cfg = self._cfg()
         st_ = snn.init_state(cfg)
-        assert all(float(jnp.abs(w).sum()) == 0.0 for w in st_["w"])
+        assert all(float(jnp.abs(w).sum()) == 0.0 for w in st_.w)
 
     def test_controller_step_shapes_finite(self):
         cfg = self._cfg()
@@ -56,15 +58,16 @@ class TestController:
         theta = snn.init_theta(cfg, jax.random.PRNGKey(0), scale=0.5)
         obs = jnp.ones((6,))
         state, _ = snn.controller_step(cfg, state, theta, obs)
-        assert any(float(jnp.abs(w).sum()) > 0 for w in state["w"])
+        assert any(float(jnp.abs(w).sum()) > 0 for w in state.w)
 
     def test_fixed_weights_stay_fixed(self):
         cfg = self._cfg(plastic=False)
         state = snn.init_state(cfg)
-        state["w"] = [jnp.ones_like(w) for w in state["w"]]
+        state = dataclasses.replace(
+            state, w=tuple(jnp.ones_like(w) for w in state.w))
         theta = snn.init_theta(cfg, jax.random.PRNGKey(0), scale=0.5)
         new_state, _ = snn.controller_step(cfg, state, theta, jnp.ones((6,)))
-        for w0, w1 in zip(state["w"], new_state["w"]):
+        for w0, w1 in zip(state.w, new_state.w):
             np.testing.assert_array_equal(np.asarray(w0), np.asarray(w1))
 
     def test_theta_flatten_roundtrip(self):

@@ -1,0 +1,158 @@
+"""Fleet-mode throughput: native batched-weights launch vs the vmap recipe.
+
+The many-user serving path steps B independent plastic memories — one per
+request stream — every decode/control step.  Historically that was
+``jax.vmap(engine.layer_step)``: vmapping a `pallas_call` stamps out B
+logical kernel instances and broadcasts the shared rule theta to
+``(B, 4, N, M)``.  Fleet mode instead gives the kernel first-class
+per-request weights ``(B, N, M)`` and launches ONE program over a
+``(cdiv(M, bm), B)`` grid with theta fetched once per tile.
+
+This benchmark sweeps the fleet size B and times both paths on the SAME
+fused dual-engine step (weights evolve under the rule across iterations,
+as in production).  ``--impl pallas-interpret`` (default) validates the
+TPU program on CPU; on TPU pass ``--impl pallas``.
+
+Baseline honesty notes:
+
+  * On the Pallas backends the vmap baseline MUST materialize theta per
+    stream (``in_axes theta=0``): jax 0.4.37's pallas_call batching rule
+    cannot carry an unmapped operand — ``in_axes=None`` fails to lower
+    ("ValueError: Block shape for refs[...] must have the same number of
+    dimensions as the array shape (B, 4, N, M)"), i.e. the historical
+    recipe was never runnable on pallas/pallas-interpret at all, and the
+    broadcast is what its batching rule attempts internally anyway.
+  * On ``--impl xla`` the two paths are the SAME lowering by construction
+    (the fleet oracle in kernels/plasticity/ref.py is defined as the vmap
+    of the unbatched step), so expect parity there — the kernel-launch and
+    theta-broadcast win this benchmark measures is a Pallas-path property.
+
+    PYTHONPATH=src python benchmarks/fleet_throughput.py [--smoke] [--impl ...]
+
+Writes benchmarks/results/fleet_throughput.json:
+    {"sweep": [{"batch": B, "native_steps_per_s": ..., "vmap_steps_per_s":
+    ..., "native_speedup": ...}, ...]}
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def make_fleet(b: int, n: int, m: int, key: jax.Array):
+    """B request streams: per-stream weights/membranes/traces, shared rule."""
+    ks = jax.random.split(key, 5)
+    x = (jax.random.uniform(ks[0], (b, n)) > 0.5).astype(jnp.float32)
+    state = engine.LayerState(
+        w=jnp.zeros((b, n, m), jnp.float32),           # zero-start (Phase 2)
+        v=0.1 * jax.random.normal(ks[1], (b, m)),
+        trace_pre=jax.random.uniform(ks[2], (b, n)),
+        trace_post=jax.random.uniform(ks[3], (b, m)),
+        theta=0.05 * jax.random.normal(ks[4], (4, n, m)))
+    return state, x
+
+
+def _native_step(state, x, params, impl):
+    return engine.layer_step(state, x, params=params, impl=impl)
+
+
+def _vmap_step(state, x, params, impl):
+    # The historical recipe.  theta is materialized per stream because the
+    # pallas_call batching rule rejects unmapped operands outright in this
+    # JAX version (see module docstring) — and broadcasting is what the
+    # rule attempts for mapped operands anyway; that B-fold coefficient
+    # traffic is exactly what fleet mode eliminates.
+    b = x.shape[0]
+    vstate = engine.LayerState(
+        w=state.w, v=state.v, trace_pre=state.trace_pre,
+        trace_post=state.trace_post,
+        theta=jnp.broadcast_to(state.theta, (b, *state.theta.shape)))
+    new_state, out = jax.vmap(
+        lambda l, xx: engine.layer_step(l, xx, params=params, impl=impl),
+        in_axes=(engine.LayerState(w=0, v=0, trace_pre=0, trace_post=0,
+                                   theta=0), 0))(vstate, x)
+    # Hand back the shared rule so iterations don't re-broadcast a broadcast.
+    return dataclasses.replace(new_state, theta=state.theta), out
+
+
+def bench_steps_per_s(step_fn, state, x, iters: int) -> float:
+    """Steady-state fused-step rate; weights thread through (plasticity on)."""
+    fn = jax.jit(step_fn)
+    state, out = fn(state, x)                  # compile + warm-up
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state, out = fn(state, x)
+    jax.block_until_ready(out)
+    return iters / (time.perf_counter() - t0)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (seconds, not minutes)")
+    ap.add_argument("--impl", default="pallas-interpret",
+                    choices=["xla", "pallas", "pallas-interpret"])
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--m", type=int, default=64)
+    ap.add_argument("--block-m", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="cap the B sweep (the aggregate benchmarks/run.py "
+                         "harness uses 256 to bound interpret-mode wall "
+                         "time; the B=1024 point is minutes on CPU)")
+    ap.add_argument("--out", default=None,
+                    help="results path; defaults to results/"
+                         "fleet_throughput.json, or a separate _smoke file "
+                         "under --smoke so CI/quick runs never clobber the "
+                         "checked-in full-sweep artifact")
+    args = ap.parse_args(argv)
+    if args.out is None:
+        capped = args.max_batch is not None and args.max_batch < 1024
+        name = ("fleet_throughput_smoke.json" if args.smoke else
+                "fleet_throughput_capped.json" if capped else
+                "fleet_throughput.json")
+        args.out = os.path.join(RESULTS, name)
+
+    batches = [1, 16] if args.smoke else [1, 16, 64, 256, 1024]
+    if args.max_batch is not None:
+        batches = [b for b in batches if b <= args.max_batch]
+    params = engine.EngineParams(block_m=args.block_m)
+    sweep = []
+    print("batch,native_steps_per_s,vmap_steps_per_s,native_speedup")
+    for b in batches:
+        state, x = make_fleet(b, args.n, args.m, jax.random.PRNGKey(b))
+        iters = max(2, min(30, 4096 // b)) if not args.smoke else 2
+        native = bench_steps_per_s(
+            functools.partial(_native_step, params=params, impl=args.impl),
+            state, x, iters)
+        vmapped = bench_steps_per_s(
+            functools.partial(_vmap_step, params=params, impl=args.impl),
+            state, x, iters)
+        row = {"batch": b, "native_steps_per_s": native,
+               "vmap_steps_per_s": vmapped,
+               "native_speedup": native / vmapped,
+               "native_controller_steps_per_s": native * b}
+        sweep.append(row)
+        print(f"{b},{native:.2f},{vmapped:.2f},{native / vmapped:.2f}")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"impl": args.impl, "n": args.n, "m": args.m,
+                   "block_m": args.block_m, "smoke": bool(args.smoke),
+                   "sweep": sweep}, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

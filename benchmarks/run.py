@@ -6,6 +6,7 @@
   engine_breakdown  Table I  per-engine FLOPs/bytes/roofline latency
   mnist_throughput  Table II pipelined fwd+learn FPS methodology
   latency           8 us     controller end-to-end latency analogue
+  fleet_throughput  serving  native batched-weights launch vs vmap recipe
   roofline          Roofline table from the dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -20,14 +21,17 @@ def main(argv=None):
     t0 = time.time()
     failures = []
 
-    from benchmarks import (adaptation, engine_breakdown, latency,
-                            mnist_throughput, roofline)
+    from benchmarks import (adaptation, engine_breakdown, fleet_throughput,
+                            latency, mnist_throughput, roofline)
 
     for name, fn in (
         ("engine_breakdown", lambda: engine_breakdown.main(quick=quick)),
         ("latency", lambda: latency.main(quick=quick)),
         ("mnist_throughput", lambda: mnist_throughput.main(quick=quick)),
         ("adaptation", lambda: adaptation.main(quick=quick)),
+        ("fleet_throughput",
+         lambda: fleet_throughput.main(
+             ["--smoke"] if quick else ["--max-batch", "256"])),
         ("roofline_single", lambda: roofline.main(["--mesh", "single"])),
         ("roofline_multi", lambda: roofline.main(["--mesh", "multi"])),
     ):

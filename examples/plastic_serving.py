@@ -5,8 +5,9 @@
 Each decode stream carries its own fast-weight matrix W_fast (zero-init)
 that the four-term rule rewrites every generated token — the paper's
 Phase-2 online adaptation as a serving feature.  The adapter's synaptic
-layer is a per-stream `core.engine.layer_step` (the fused dual-engine
-program; `ModelConfig.adapter_impl` selects the backend).  This example
+layer is ONE fleet-mode `core.engine.layer_step` over all streams (the
+fused dual-engine program with per-request weights; `ModelConfig.
+adapter_impl` selects the backend).  This example
 serves two archs (dense + SSM) with and without the adapter and reports
 the decode overhead and the fast-weight drift per stream.
 """

@@ -98,8 +98,16 @@ def weight_size(scfg: snn.SNNConfig) -> int:
                for i in range(scfg.num_layers))
 
 
-def make_fitness_fn(env: Env, scfg: snn.SNNConfig, tasks: jax.Array):
-    """Mean return across training tasks, vmapped over the ES population."""
+def make_fitness_fn(env: Env, scfg: snn.SNNConfig, tasks: jax.Array,
+                    crn: bool = False):
+    """Mean return across training tasks, vmapped over the ES population.
+
+    Each candidate gets its OWN PRNG key (independent env resets / encoding
+    noise).  The historical behaviour — broadcasting ONE key so the whole
+    population shares identical episode randomness — was an accident; it is
+    now the explicit ``crn=True`` option (common random numbers, a variance-
+    reduction choice that couples every candidate's evaluation noise).
+    """
 
     def single(param_vec: jax.Array, key: jax.Array) -> jax.Array:
         keys = jax.random.split(key, tasks.shape[0])
@@ -109,7 +117,10 @@ def make_fitness_fn(env: Env, scfg: snn.SNNConfig, tasks: jax.Array):
         return rets.mean()
 
     def fitness(pop: jax.Array, key: jax.Array) -> jax.Array:
-        keys = jnp.broadcast_to(key, (pop.shape[0], *key.shape))
+        if crn:
+            keys = jnp.broadcast_to(key, (pop.shape[0], *key.shape))
+        else:
+            keys = jax.random.split(key, pop.shape[0])
         return jax.vmap(single)(pop, keys)
 
     return fitness

@@ -20,10 +20,19 @@ Backends (`impl`):
   * ``"pallas-interpret"`` — same kernel body executed by the Pallas
                              interpreter; validates the TPU program on CPU.
 
-`layer_step` accepts unbatched ``(N,)`` or batched ``(B, N)`` state.  Shared
-weights batch-average the update (delta_w semantics); per-sample plastic
-networks (e.g. the per-request LM adapter) `jax.vmap` `layer_step` with
-``in_axes=(LayerState(w=0, v=0, trace_pre=0, trace_post=0, theta=None), 0)``.
+`layer_step` accepts unbatched ``(N,)`` or batched ``(B, N)`` state.  Two
+batched semantics, selected by the weight rank:
+
+  * SHARED weights ``w (N, M)`` with batched activations — the dw is
+    batch-averaged (delta_w semantics; e.g. batched MNIST online learning).
+  * FLEET mode, ``w (B, N, M)`` — every request stream owns and rewrites
+    its OWN synapses with a per-sample dw under one shared rule theta.
+    All three backends run the whole fleet as ONE fused program (the Pallas
+    kernel launches a ``(cdiv(M, bm), B)`` grid, streams innermost so the
+    shared theta tile is fetched once per tile); this replaces the old
+    recipe of `jax.vmap`-ing `layer_step` per stream, which broadcast the
+    shared rule theta B-fold and never lowered through `pallas_call` at
+    all (the batching rule rejects unmapped operands).
 """
 from __future__ import annotations
 
@@ -31,7 +40,6 @@ import dataclasses
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.plasticity import kernel as _kernel
 from repro.kernels.plasticity import ref as _ref
@@ -49,9 +57,12 @@ class LayerState:
     ``trace_post`` is the previous timestep's postsynaptic trace, which
     `layer_step` advances and returns.  ``theta`` is the packed
     ``(4, n_pre, n_post)`` rule; ``None`` for non-plastic layers.
+
+    A leading batch rank on ``w`` (``(B, N, M)``) puts the layer in FLEET
+    mode: per-request weights, per-sample dw (see `layer_step`).
     """
 
-    w: jax.Array                        # (N, M) synaptic weights
+    w: jax.Array                        # (N, M) | (B, N, M) synaptic weights
     v: jax.Array                        # (M,) | (B, M) membrane potential
     trace_pre: jax.Array                # (N,) | (B, N)
     trace_post: jax.Array               # (M,) | (B, M)
@@ -107,11 +118,14 @@ def layer_step(state: LayerState, x: jax.Array, *,
 
     Args:
       state: layer state; rewritten functionally (w, v, trace_post advance).
+             ``state.w`` of rank 3 (``(B, N, M)``) selects FLEET mode: one
+             fused launch steps B per-request weight sets with per-sample dw.
       x:     presynaptic events ``(N,)`` or ``(B, N)``.
       params: static engine parameters.
       impl:  ``"xla"`` | ``"pallas"`` | ``"pallas-interpret"``.
       teach: optional teaching current added to the psum ``(M,)``/``(B, M)``
-             (supervised online learning on the output layer).
+             (supervised online learning on the output layer).  In fleet
+             mode an unbatched ``(M,)`` teach broadcasts to every stream.
 
     Returns:
       ``(new_state, out)`` — ``out`` is the layer's output events: spikes for
@@ -124,15 +138,27 @@ def layer_step(state: LayerState, x: jax.Array, *,
               trace_decay=params.trace_decay, w_clip=params.w_clip,
               plastic=plastic, spiking=params.spiking)
 
+    fleet = state.w.ndim == 3                   # fleet: per-request weights
+    if fleet:
+        if x.ndim != 2 or x.shape[0] != state.w.shape[0]:
+            raise ValueError(
+                f"fleet mode needs x of shape (B, N) matching w (B, N, M); "
+                f"got x {x.shape} vs w {state.w.shape}")
+        # an unbatched (M,) teach broadcasts to every stream inside the
+        # fleet wrappers (ref.dual_engine_fleet_step / the Pallas wrapper)
+
     if impl == "xla":
-        spikes, v, tpost, w = _ref.dual_engine_step(
+        fn = _ref.dual_engine_fleet_step if fleet else _ref.dual_engine_step
+        spikes, v, tpost, w = fn(
             x, state.w, state.theta, state.v, state.trace_pre,
             state.trace_post, teach=teach, **kw)
     else:
-        # The Pallas kernel is rank-(B, N); promote unbatched state to B=1.
-        unbatched = x.ndim == 1
+        # The Pallas kernels are rank-(B, N); promote unbatched state to B=1.
+        unbatched = not fleet and x.ndim == 1
         up = (lambda a: a[None]) if unbatched else (lambda a: a)
-        spikes, v, tpost, w = _kernel.dual_engine_step_pallas(
+        fn = (_kernel.dual_engine_fleet_step_pallas if fleet
+              else _kernel.dual_engine_step_pallas)
+        spikes, v, tpost, w = fn(
             up(x), state.w, state.theta, up(state.v), up(state.trace_pre),
             up(state.trace_post),
             teach=None if teach is None else up(teach),

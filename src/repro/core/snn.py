@@ -95,20 +95,31 @@ class SNNConfig:
             spiking=(not last) or self.spiking_readout, block_m=self.block_m)
 
 
-def init_state(cfg: SNNConfig, batch: Optional[int] = None) -> NetworkState:
+def init_state(cfg: SNNConfig, batch: Optional[int] = None,
+               fleet: bool = False) -> NetworkState:
     """Network state: per-layer membrane V, per-population traces, weights.
 
     Phase-2 deployment starts from ZERO weights (paper Sec. II-B): the rule,
     not the initialization, builds the connectivity.
+
+    ``batch`` batches membranes/traces over B streams with SHARED weights
+    (plasticity batch-averages the dw).  ``fleet=True`` additionally gives
+    every stream its OWN weights ``(B, N, M)`` — B independent controllers
+    stepped as one NetworkState, each request rewriting its own synapses in
+    a single fused launch per layer (`engine.layer_step` fleet mode).
     """
+    if fleet and batch is None:
+        raise ValueError("fleet=True requires batch (one weight set per "
+                         "request stream)")
+
     def z(*shape):
         s = shape if batch is None else (batch, *shape)
         return jnp.zeros(s, cfg.dtype)
 
+    wz = z if fleet else (lambda *shape: jnp.zeros(shape, cfg.dtype))
     sizes = cfg.layer_sizes
     return NetworkState(
-        w=tuple(jnp.zeros((sizes[i], sizes[i + 1]), cfg.dtype)
-                for i in range(cfg.num_layers)),
+        w=tuple(wz(sizes[i], sizes[i + 1]) for i in range(cfg.num_layers)),
         v=tuple(z(sizes[i + 1]) for i in range(cfg.num_layers)),
         trace=tuple(z(sizes[i]) for i in range(len(sizes))),
         t=jnp.zeros((), jnp.int32),
@@ -140,9 +151,22 @@ def unflatten_theta(cfg: SNNConfig, flat: jax.Array):
     return out
 
 
+def _check_encode_key(cfg: SNNConfig, key: Optional[jax.Array]) -> None:
+    """Entry-level guard: stochastic rate encoding needs a PRNG key.
+
+    Without this, ``jax.random.fold_in(None, t)`` fails deep inside the
+    scan body with an opaque error."""
+    if cfg.encoding == "rate" and key is None:
+        raise ValueError(
+            'encoding="rate" draws Bernoulli spike trains and requires a '
+            "PRNG key; pass key=jax.random.PRNGKey(...) to this call "
+            '(or use encoding="current" for deterministic analog drive)')
+
+
 def encode(cfg: SNNConfig, obs: jax.Array, key: Optional[jax.Array], t: jax.Array) -> jax.Array:
     """Observation -> input drive for one timestep."""
     if cfg.encoding == "rate":
+        _check_encode_key(cfg, key)
         p = jnp.clip(jnp.abs(obs), 0.0, 1.0)
         u = jax.random.uniform(jax.random.fold_in(key, t), obs.shape)
         return (u < p).astype(cfg.dtype) * jnp.sign(obs).astype(cfg.dtype)
@@ -163,6 +187,10 @@ def timestep(cfg: SNNConfig, state: NetworkState, theta, drive: jax.Array,
     (supervised online learning — drives the postsynaptic trace so the
     Hebbian term binds features to the labelled class, the standard
     supervised-STDP protocol used for the paper's MNIST task).
+
+    Fleet states (``init_state(batch=B, fleet=True)``: per-request weights
+    ``(B, N, M)``) take the same code path — the engine detects the weight
+    rank and runs all B controllers as one fused launch per layer.
     """
     w, v, tr = list(state.w), list(state.v), list(state.trace)
     x = drive
@@ -189,6 +217,8 @@ def controller_step(cfg: SNNConfig, state: NetworkState, theta, obs: jax.Array,
 
     Returns (state, action) with action = mean readout over the window.
     """
+    _check_encode_key(cfg, key)
+
     def body(carry, t):
         st = carry
         drive = encode(cfg, obs, key, st.t)
@@ -210,6 +240,8 @@ def classify_window(cfg: SNNConfig, state: NetworkState, theta, x: jax.Array,
     With `teach` (e.g. `label_onehot * amplitude`) the output population is
     driven toward the labelled class during the window, so the plasticity
     rule performs supervised online learning."""
+    _check_encode_key(cfg, key)
+
     def body(st, t):
         drive = encode(cfg, x, key, st.t)
         st, out = timestep(cfg, st, theta, drive, teach=teach)

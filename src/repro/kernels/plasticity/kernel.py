@@ -29,6 +29,16 @@ Layer modes mirror the network semantics:
 Grid: (M // bm,) — one program per block of postsynaptic neurons.  Every
 block sees the whole batch and the whole fan-in, so both matmuls (forward
 x@w and Hebbian trace_pre^T@trace_post) are single MXU calls per tile.
+
+FLEET MODE (`dual_engine_fleet_step_pallas`): weights carry a leading
+request-stream rank (B, N, M) and the grid becomes (cdiv(M, bm), B) — one
+program per stream x postsynaptic tile, iterating streams INNERMOST so the
+shared theta block's index is constant across the whole fleet and the
+Pallas pipeline's block-revisit elision fetches each (4, N, bm) coefficient
+tile from HBM once per tile, not once per stream.  Each stream rewrites its
+OWN synapses with a per-sample dw (no batch averaging).  This is the
+many-user serving path: B independent plastic memories advance in ONE
+kernel launch instead of `vmap` stamping out B launches.
 """
 from __future__ import annotations
 
@@ -41,21 +51,17 @@ from jax.experimental import pallas as pl
 from repro.core.plasticity import ALPHA, BETA, GAMMA, DELTA
 
 
-def _dual_engine_kernel(x_ref, w_ref, v_ref, tpost_ref, *refs,
-                        tau_m, v_th, v_reset, trace_decay, w_clip,
-                        plastic, spiking, has_teach, batch):
-    # Optional operands, in order: theta/tpre (plastic), teach.
-    rest = list(refs)
-    theta_ref = rest.pop(0) if plastic else None
-    tpre_ref = rest.pop(0) if plastic else None
-    teach_ref = rest.pop(0) if has_teach else None
-    s_out, v_out, tpost_out, w_out = rest
+def _forward_engine(x, w, v_ref, tpost_ref, teach_ref, s_out, v_out,
+                    tpost_out, *, tau_m, v_th, v_reset, trace_decay,
+                    spiking):
+    """Shared Forward Engine body: psum -> neuron dynamics -> trace update.
 
-    # ---- Forward Engine ----------------------------------------------------
-    x = x_ref[...].astype(jnp.float32)          # (B, N)
-    w = w_ref[...].astype(jnp.float32)          # (N, bm)
+    Used verbatim by BOTH the shared-weight and the fleet kernel so the
+    LIF/readout/trace math cannot diverge between them; returns the fresh
+    postsynaptic trace the Plasticity Engine consumes.
+    """
     current = jnp.dot(x, w, preferred_element_type=jnp.float32)   # psum (MXU)
-    if has_teach:
+    if teach_ref is not None:
         current = current + teach_ref[...].astype(jnp.float32)
     v = v_ref[...].astype(jnp.float32)
     v_new = v + (current - v) * (1.0 / tau_m)   # leaky integration, tau_m = 2
@@ -71,6 +77,26 @@ def _dual_engine_kernel(x_ref, w_ref, v_ref, tpost_ref, *refs,
     s_out[...] = spikes.astype(s_out.dtype)
     v_out[...] = v_upd.astype(v_out.dtype)
     tpost_out[...] = tpost_new.astype(tpost_out.dtype)
+    return tpost_new
+
+
+def _dual_engine_kernel(x_ref, w_ref, v_ref, tpost_ref, *refs,
+                        tau_m, v_th, v_reset, trace_decay, w_clip,
+                        plastic, spiking, has_teach, batch):
+    # Optional operands, in order: theta/tpre (plastic), teach.
+    rest = list(refs)
+    theta_ref = rest.pop(0) if plastic else None
+    tpre_ref = rest.pop(0) if plastic else None
+    teach_ref = rest.pop(0) if has_teach else None
+    s_out, v_out, tpost_out, w_out = rest
+
+    # ---- Forward Engine ----------------------------------------------------
+    x = x_ref[...].astype(jnp.float32)          # (B, N)
+    w = w_ref[...].astype(jnp.float32)          # (N, bm)
+    tpost_new = _forward_engine(
+        x, w, v_ref, tpost_ref, teach_ref, s_out, v_out, tpost_out,
+        tau_m=tau_m, v_th=v_th, v_reset=v_reset, trace_decay=trace_decay,
+        spiking=spiking)
 
     # ---- Plasticity Engine (same tiles, still in VMEM) ---------------------
     if plastic:
@@ -139,6 +165,111 @@ def dual_engine_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
             jax.ShapeDtypeStruct((b, m), v.dtype),
             jax.ShapeDtypeStruct((b, m), trace_post.dtype),
             jax.ShapeDtypeStruct((n, m), w.dtype),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+
+def _fleet_kernel(x_ref, w_ref, v_ref, tpost_ref, *refs,
+                  tau_m, v_th, v_reset, trace_decay, w_clip,
+                  plastic, spiking, has_teach):
+    """One program = one request stream x one postsynaptic tile.
+
+    Per-sample semantics throughout: the Hebbian term is the outer product
+    of THIS stream's traces (no batch averaging) and the rewritten weight
+    tile belongs to this stream alone.
+    """
+    rest = list(refs)
+    theta_ref = rest.pop(0) if plastic else None
+    tpre_ref = rest.pop(0) if plastic else None
+    teach_ref = rest.pop(0) if has_teach else None
+    s_out, v_out, tpost_out, w_out = rest
+
+    # ---- Forward Engine ----------------------------------------------------
+    x = x_ref[...].astype(jnp.float32)           # (1, N) this stream's events
+    w = w_ref[0].astype(jnp.float32)             # (N, bm) this stream's tile
+    tpost_new = _forward_engine(                 # (1, bm)
+        x, w, v_ref, tpost_ref, teach_ref, s_out, v_out, tpost_out,
+        tau_m=tau_m, v_th=v_th, v_reset=v_reset, trace_decay=trace_decay,
+        spiking=spiking)
+
+    # ---- Plasticity Engine (same stream-resident tiles) --------------------
+    if plastic:
+        th = theta_ref[...].astype(jnp.float32)   # (4, N, bm) SHARED rule
+        tpre = tpre_ref[...].astype(jnp.float32)  # (1, N)
+        hebb = tpre[0][:, None] * tpost_new[0][None, :]        # (N, bm) outer
+        dw = (th[ALPHA] * hebb + th[BETA] * tpre[0][:, None]
+              + th[GAMMA] * tpost_new[0][None, :] + th[DELTA])
+        w_new = jnp.clip(w + dw, -w_clip, w_clip)
+        w_out[0] = w_new.astype(w_out.dtype)
+    else:
+        w_out[0] = w.astype(w_out.dtype)
+
+
+def dual_engine_fleet_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
+                                  tau_m: float = 2.0, v_th: float = 1.0,
+                                  v_reset: float = 0.0,
+                                  trace_decay: float = 0.8,
+                                  w_clip: float = 4.0, plastic: bool = True,
+                                  spiking: bool = True, teach=None,
+                                  block_m: int = 128,
+                                  interpret: bool = False):
+    """Fleet pallas-call wrapper.  Shapes as in ref.dual_engine_fleet_step:
+    x (B,N), w (B,N,M) per-request, theta (4,N,M) shared, v/traces (B,·)."""
+    b, n = x.shape
+    b2, n2, m = w.shape
+    assert (b, n) == (b2, n2), (x.shape, w.shape)
+    if teach is not None and teach.ndim == 1:
+        # unbatched (M,) teach: same signal to every stream (see ref)
+        teach = jnp.broadcast_to(teach, (b, teach.shape[0]))
+    bm = min(block_m, m)
+    # Streams iterate INNERMOST (grid dim 1): the shared theta block's index
+    # map is constant in the stream index, so consecutive grid steps revisit
+    # the same coefficient tile and Pallas elides the re-DMA — one theta
+    # fetch per tile for the whole fleet.
+    grid = (pl.cdiv(m, bm), b)
+    has_teach = teach is not None
+
+    kernel = functools.partial(
+        _fleet_kernel, tau_m=tau_m, v_th=v_th, v_reset=v_reset,
+        trace_decay=trace_decay, w_clip=w_clip, plastic=plastic,
+        spiking=spiking, has_teach=has_teach)
+
+    in_specs = [
+        pl.BlockSpec((1, n), lambda j, i: (i, 0)),         # this stream's x
+        pl.BlockSpec((1, n, bm), lambda j, i: (i, 0, j)),  # per-stream w tile
+        pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # v tile
+        pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # post trace tile
+    ]
+    operands = [x, w, v, trace_post]
+    if plastic:
+        in_specs += [
+            # Shared packed theta: every stream's program indexes the SAME
+            # (4, N, bm) block — the rule is never materialized per stream
+            # (the vmap batching rule broadcasts it to (B, 4, N, M)).
+            pl.BlockSpec((4, n, bm), lambda j, i: (0, 0, j)),
+            pl.BlockSpec((1, n), lambda j, i: (i, 0)),      # pre trace
+        ]
+        operands += [theta, trace_pre]
+    if has_teach:
+        in_specs.append(pl.BlockSpec((1, bm), lambda j, i: (i, j)))
+        operands.append(teach)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # events
+            pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # v out
+            pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # post trace
+            pl.BlockSpec((1, n, bm), lambda j, i: (i, 0, j)),  # w out
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), x.dtype),
+            jax.ShapeDtypeStruct((b, m), v.dtype),
+            jax.ShapeDtypeStruct((b, m), trace_post.dtype),
+            jax.ShapeDtypeStruct((b, n, m), w.dtype),
         ],
         interpret=interpret,
     )(*operands)

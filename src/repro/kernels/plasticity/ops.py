@@ -5,6 +5,10 @@ benchmarks lower), "pallas" (TPU target), or "pallas-interpret" (the Pallas
 kernel body executed by the interpreter for CPU validation; equivalent to
 ``impl="pallas", interpret=True``).
 
+Weight rank selects the mode: ``w.ndim == 2`` is the shared-weight step
+(batch-averaged dw); ``w.ndim == 3`` is FLEET mode — per-request weights
+``(B, N, M)`` with per-sample dw, one fused launch over all streams.
+
 Network-level code should not call this directly — `core.engine.layer_step`
 is the product entry point and adds LayerState plumbing and unbatched-state
 support.  This wrapper is the kernel-level API used by kernel tests and
@@ -33,8 +37,11 @@ def dual_engine_step(x, w, theta, v, trace_pre, trace_post, teach=None, *,
     kw = dict(tau_m=tau_m, v_th=v_th, v_reset=v_reset,
               trace_decay=trace_decay, w_clip=w_clip, plastic=plastic,
               spiking=spiking, teach=teach)
+    fleet = w.ndim == 3
     if impl in ("pallas", "pallas-interpret"):
-        return _kernel.dual_engine_step_pallas(
-            x, w, theta, v, trace_pre, trace_post, block_m=block_m,
-            interpret=interpret or impl == "pallas-interpret", **kw)
-    return _ref.dual_engine_step(x, w, theta, v, trace_pre, trace_post, **kw)
+        fn = (_kernel.dual_engine_fleet_step_pallas if fleet
+              else _kernel.dual_engine_step_pallas)
+        return fn(x, w, theta, v, trace_pre, trace_post, block_m=block_m,
+                  interpret=interpret or impl == "pallas-interpret", **kw)
+    fn = _ref.dual_engine_fleet_step if fleet else _ref.dual_engine_step
+    return fn(x, w, theta, v, trace_pre, trace_post, **kw)

@@ -18,9 +18,21 @@ validated against:
 
 Inputs may be unbatched ``(N,)`` or batched ``(B, N)``; shared weights
 batch-average the update, matching ``core.plasticity.delta_w``.
+
+`dual_engine_fleet_step` is the FLEET variant: weights carry a leading
+request-stream rank ``(B, N, M)`` and every stream rewrites its own synapses
+with a per-sample dw (no batch averaging) under one shared rule theta —
+exactly ``vmap`` of the unbatched step over (x, w, v, traces).  On the xla
+backend that vmap IS the best batched lowering (XLA turns it into batched
+contractions), so the fleet oracle is defined as the vmap itself —
+bit-identical to per-sample semantics by construction; the Pallas fleet
+kernel re-expresses the same program as ONE launch over a (tiles, B) grid.
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
 from repro.core.plasticity import ALPHA, BETA, GAMMA, DELTA
@@ -69,3 +81,40 @@ def dual_engine_step(x, w, theta, v, trace_pre, trace_post, *,
 
     return (spikes.astype(x.dtype), v_out.astype(v.dtype),
             tp_new.astype(trace_post.dtype), w_new.astype(w.dtype))
+
+
+def dual_engine_fleet_step(x, w, theta, v, trace_pre, trace_post, *,
+                           tau_m: float = 2.0, v_th: float = 1.0,
+                           v_reset: float = 0.0, trace_decay: float = 0.8,
+                           w_clip: float = 4.0, plastic: bool = True,
+                           spiking: bool = True, teach=None):
+    """Fleet oracle: per-request weights, per-sample dw, shared rule.
+
+    Shapes: x (B,N), w (B,N,M), theta (4,N,M)|None, v (B,M),
+    trace_pre (B,N), trace_post (B,M), teach (B,M)|None.
+
+    Returns (events, v_out, trace_post_new, w_new) with w_new (B,N,M).
+    Defined as ``vmap(dual_engine_step)`` over the leading rank with theta
+    closed over (shared, unmapped) — per-sample semantics bit-identical to
+    B independent unbatched steps, and the fastest XLA lowering measured
+    on CPU (hand-written batched einsums were up to 2x slower).
+    """
+    assert w.ndim == 3 and x.ndim == 2, (x.shape, w.shape)
+    if teach is not None and teach.ndim == 1:
+        # Unbatched (M,) teaching current: same signal to every stream.
+        # Without this, vmap would consume the class axis as the stream
+        # axis — silently wrong whenever M == B.
+        teach = jnp.broadcast_to(teach, (x.shape[0], teach.shape[0]))
+    step = functools.partial(
+        dual_engine_step, tau_m=tau_m, v_th=v_th, v_reset=v_reset,
+        trace_decay=trace_decay, w_clip=w_clip, plastic=plastic,
+        spiking=spiking)
+    if teach is None:
+        return jax.vmap(
+            lambda xb, wb, vb, tpb, tqb:
+                step(xb, wb, theta, vb, tpb, tqb)
+        )(x, w, v, trace_pre, trace_post)
+    return jax.vmap(
+        lambda xb, wb, vb, tpb, tqb, tb:
+            step(xb, wb, theta, vb, tpb, tqb, teach=tb)
+    )(x, w, v, trace_pre, trace_post, teach)

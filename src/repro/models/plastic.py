@@ -9,11 +9,13 @@ Phase 2).  Per decode step, per request:
     s2, W_fast <- PlasticEngine.layer_step(s1)   (fused forward + rule)
     h'      = h + scale * (s2 @ P_out)  (readout back into the residual)
 
-The synaptic layer between the two populations is a per-request
-`core.engine.layer_step` (vmapped over the batch: each decode stream owns an
-independent plastic W_fast), so the serving hot path runs the SAME fused
-dual-engine program as the SNN controller; ``cfg.adapter_impl`` selects the
-backend ("xla" | "pallas" | "pallas-interpret").
+The synaptic layer between the two populations is ONE fleet-mode
+`core.engine.layer_step` over the whole batch: W_fast carries a leading
+request rank (B, N, N) and every decode stream rewrites its own synapses
+with a per-sample dw inside a single fused launch (grid (tiles, B) on
+Pallas) — not B vmap-stamped kernel calls.  The serving hot path runs the
+SAME fused dual-engine program as the SNN controller; ``cfg.adapter_impl``
+selects the backend ("xla" | "pallas" | "pallas-interpret").
 
 W_fast starts at ZERO and lives in the decode cache (B, N, N) — one plastic
 memory per request stream, continuously rewritten online.  theta is the
@@ -23,7 +25,6 @@ Applicability notes per arch family are in DESIGN.md §Arch-applicability.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import engine
@@ -70,19 +71,17 @@ def decode_step(params, state: dict, h, cfg: ModelConfig,
     v1, s1 = lif_step(state["v1"], drive, LIF)
     tr1 = P.update_trace(state["tr1"], s1, trace_decay)
 
-    # Plastic synaptic layer: one fused dual-engine step per request stream
-    # (vmap over batch — every stream rewrites its own W_fast).
+    # Plastic synaptic layer: ONE fleet-mode fused dual-engine launch over
+    # all request streams — w_fast (B, N, N) triggers per-sample dw, each
+    # stream rewriting its own W_fast against the shared rule theta.
     ep = engine.EngineParams(
         tau_m=LIF.tau_m, v_th=LIF.v_threshold, v_reset=LIF.v_reset,
         trace_decay=trace_decay, w_clip=w_clip, plastic=True, spiking=True)
-    impl = cfg.adapter_impl
     layer = engine.LayerState(
         w=state["w_fast"], v=state["v2"], trace_pre=tr1,
         trace_post=state["tr2"], theta=params["theta"].astype(jnp.float32))
-    layer, s2 = jax.vmap(
-        lambda l, x: engine.layer_step(l, x, params=ep, impl=impl),
-        in_axes=(engine.LayerState(w=0, v=0, trace_pre=0, trace_post=0,
-                                   theta=None), 0))(layer, s1)
+    layer, s2 = engine.layer_step(layer, s1, params=ep,
+                                  impl=cfg.adapter_impl)
 
     out = jnp.einsum("bn,nd->bd", s2, params["p_out"].astype(jnp.float32))
     h = h + (params["scale"] * out[:, None, :]).astype(h.dtype)

@@ -1,0 +1,374 @@
+"""Fleet mode (per-request batched weights) — the many-user serving contract.
+
+Pins four guarantees plus this PR's satellite bugfix guards:
+
+  1. `engine.layer_step` with ``w (B, N, M)`` is BIT-equal to per-sample
+     ``vmap(layer_step)`` on the xla oracle — fleet mode is exactly B
+     independent plastic layers, fused into one launch.
+  2. xla vs pallas-interpret parity for the fleet kernel across shapes,
+     dtypes, teach/readout/plastic modes, AND postsynaptic widths that are
+     not a multiple of block_m (tile-padding edge), for both the fleet and
+     the shared-weight kernels.
+  3. The `core/snn` fleet API (``init_state(batch=..., fleet=True)``) steps
+     B controllers as one NetworkState and matches B vmapped controllers.
+  4. `models/plastic.decode_step` (the LM adapter) matches the historical
+     vmap recipe bit-for-bit on the oracle and keeps streams independent.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adaptation, engine, snn
+from repro import envs
+
+
+def _fleet_layer(key, b, n, m, dtype=jnp.float32, plastic=True):
+    ks = jax.random.split(key, 6)
+    x = (jax.random.uniform(ks[0], (b, n)) > 0.5).astype(dtype)
+    state = engine.LayerState(
+        w=(0.1 * jax.random.normal(ks[1], (b, n, m))).astype(dtype),
+        v=(0.1 * jax.random.normal(ks[2], (b, m))).astype(dtype),
+        trace_pre=jax.random.uniform(ks[3], (b, n)).astype(dtype),
+        trace_post=jax.random.uniform(ks[4], (b, m)).astype(dtype),
+        theta=(0.01 * jax.random.normal(ks[5], (4, n, m))).astype(dtype)
+        if plastic else None)
+    return state, x
+
+
+def _vmap_reference(state, x, params, impl="xla", teach=None):
+    """The historical per-request recipe: vmap over the unbatched step."""
+    return jax.vmap(
+        lambda l, xx, th: engine.layer_step(
+            l, xx, params=params, impl=impl, teach=th),
+        in_axes=(engine.LayerState(w=0, v=0, trace_pre=0, trace_post=0,
+                                   theta=None), 0,
+                 None if teach is None else 0))(state, x, teach)
+
+
+class TestFleetBitEquivalence:
+    """Fleet xla == vmap(layer_step) xla, bit for bit."""
+
+    @pytest.mark.parametrize("b,n,m", [(1, 8, 8), (4, 10, 30), (3, 17, 257),
+                                       (8, 128, 128)])
+    def test_matches_vmap(self, b, n, m):
+        state, x = _fleet_layer(jax.random.PRNGKey(b + n + m), b, n, m)
+        params = engine.EngineParams()
+        fleet_s, fleet_out = engine.layer_step(state, x, params=params,
+                                               impl="xla")
+        ref_s, ref_out = _vmap_reference(state, x, params)
+        np.testing.assert_array_equal(np.asarray(fleet_out),
+                                      np.asarray(ref_out))
+        for name, a, rb in (("w", fleet_s.w, ref_s.w),
+                            ("v", fleet_s.v, ref_s.v),
+                            ("trace_post", fleet_s.trace_post,
+                             ref_s.trace_post)):
+            assert a.shape == rb.shape, name
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(rb),
+                                          err_msg=name)
+
+    @pytest.mark.parametrize("spiking", [True, False])
+    def test_matches_vmap_teach_and_readout(self, spiking):
+        b, n, m = 3, 12, 20
+        state, x = _fleet_layer(jax.random.PRNGKey(7), b, n, m)
+        teach = 2.0 * jax.random.normal(jax.random.PRNGKey(8), (b, m))
+        params = engine.EngineParams(spiking=spiking)
+        fleet_s, fleet_out = engine.layer_step(state, x, params=params,
+                                               impl="xla", teach=teach)
+        ref_s, ref_out = _vmap_reference(state, x, params, teach=teach)
+        np.testing.assert_array_equal(np.asarray(fleet_out),
+                                      np.asarray(ref_out))
+        np.testing.assert_array_equal(np.asarray(fleet_s.w),
+                                      np.asarray(ref_s.w))
+
+    # M == B is the dangerous case: a wrongly-vmapped (M,) teach would be
+    # consumed silently along the stream axis instead of broadcasting.
+    @pytest.mark.parametrize("b,m", [(3, 20), (4, 4)])
+    def test_unbatched_teach_broadcasts_to_every_stream(self, b, m):
+        state, x = _fleet_layer(jax.random.PRNGKey(b * 31 + m), b, 10, m)
+        teach1 = 2.0 * jax.random.normal(jax.random.PRNGKey(9), (m,))
+        teach_b = jnp.broadcast_to(teach1, (b, m))
+        for impl in ("xla", "pallas-interpret"):
+            s1, o1 = engine.layer_step(state, x, impl=impl, teach=teach1)
+            s2, o2 = engine.layer_step(state, x, impl=impl, teach=teach_b)
+            np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+            np.testing.assert_array_equal(np.asarray(s1.w), np.asarray(s2.w))
+
+    def test_streams_are_independent(self):
+        """Zeroing one stream's input must not touch other streams' weights."""
+        state, x = _fleet_layer(jax.random.PRNGKey(3), 4, 16, 16)
+        s_all, _ = engine.layer_step(state, x, impl="xla")
+        x0 = x.at[0].set(0.0)
+        s_zero, _ = engine.layer_step(state, x0, impl="xla")
+        np.testing.assert_array_equal(np.asarray(s_all.w[1:]),
+                                      np.asarray(s_zero.w[1:]))
+
+    def test_shape_mismatch_raises(self):
+        state, x = _fleet_layer(jax.random.PRNGKey(4), 4, 8, 8)
+        with pytest.raises(ValueError):
+            engine.layer_step(state, x[:2], impl="xla")
+        with pytest.raises(ValueError):
+            engine.layer_step(state, x[0], impl="xla")
+
+
+class TestFleetBackendParity:
+    """pallas-interpret fleet kernel vs the xla fleet oracle."""
+
+    def _assert_parity(self, state, x, params, teach=None, tol=1e-5):
+        ref_s, ref_out = engine.layer_step(state, x, params=params,
+                                           impl="xla", teach=teach)
+        pal_s, pal_out = engine.layer_step(state, x, params=params,
+                                           impl="pallas-interpret",
+                                           teach=teach)
+        for name, r, p in (("out", ref_out, pal_out), ("w", ref_s.w, pal_s.w),
+                           ("v", ref_s.v, pal_s.v),
+                           ("trace_post", ref_s.trace_post,
+                            pal_s.trace_post)):
+            assert r.shape == p.shape, name
+            np.testing.assert_allclose(
+                np.asarray(r, np.float32), np.asarray(p, np.float32),
+                rtol=tol, atol=tol, err_msg=name)
+
+    @pytest.mark.parametrize("b,n,m", [(1, 8, 8), (4, 32, 48), (2, 100, 130),
+                                       (8, 128, 128), (3, 17, 257)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shapes_dtypes(self, b, n, m, dtype):
+        state, x = _fleet_layer(jax.random.PRNGKey(b * 131 + n + m), b, n, m,
+                                dtype)
+        tol = 1e-5 if dtype == jnp.float32 else 3e-2
+        self._assert_parity(state, x, engine.EngineParams(), tol=tol)
+
+    # the tile-padding edge: m deliberately NOT a multiple of block_m
+    @pytest.mark.parametrize("m,block_m", [(48, 32), (130, 128), (40, 16),
+                                           (257, 64)])
+    def test_padded_postsynaptic_tiles(self, m, block_m):
+        state, x = _fleet_layer(jax.random.PRNGKey(m + block_m), 3, 24, m)
+        self._assert_parity(state, x, engine.EngineParams(block_m=block_m))
+
+    @pytest.mark.parametrize("m,block_m", [(48, 32), (40, 16), (257, 64)])
+    def test_padded_tiles_shared_weights(self, m, block_m):
+        """Same edge for the SHARED-weight kernel (batch-averaged dw)."""
+        b, n = 3, 24
+        ks = jax.random.split(jax.random.PRNGKey(m * 7 + block_m), 6)
+        state = engine.LayerState(
+            w=0.1 * jax.random.normal(ks[1], (n, m)),
+            v=0.1 * jax.random.normal(ks[2], (b, m)),
+            trace_pre=jax.random.uniform(ks[3], (b, n)),
+            trace_post=jax.random.uniform(ks[4], (b, m)),
+            theta=0.01 * jax.random.normal(ks[5], (4, n, m)))
+        x = (jax.random.uniform(ks[0], (b, n)) > 0.5).astype(jnp.float32)
+        params = engine.EngineParams(block_m=block_m)
+        ref_s, ref_out = engine.layer_step(state, x, params=params,
+                                           impl="xla")
+        pal_s, pal_out = engine.layer_step(state, x, params=params,
+                                           impl="pallas-interpret")
+        np.testing.assert_allclose(np.asarray(ref_out), np.asarray(pal_out),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(ref_s.w), np.asarray(pal_s.w),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("spiking", [True, False])
+    def test_teach_and_readout(self, spiking):
+        state, x = _fleet_layer(jax.random.PRNGKey(11), 2, 10, 30)
+        teach = 2.0 * jax.random.normal(jax.random.PRNGKey(12), (2, 30))
+        self._assert_parity(state, x, engine.EngineParams(spiking=spiking),
+                            teach=teach)
+
+    def test_plastic_off_passes_weights_through(self):
+        state, x = _fleet_layer(jax.random.PRNGKey(13), 3, 16, 16,
+                                plastic=False)
+        params = engine.EngineParams(plastic=False)
+        self._assert_parity(state, x, params)
+        new_s, _ = engine.layer_step(state, x, params=params,
+                                     impl="pallas-interpret")
+        np.testing.assert_array_equal(np.asarray(new_s.w),
+                                      np.asarray(state.w))
+
+
+class TestFleetSNN:
+    """init_state(batch, fleet=True): B controllers as one NetworkState."""
+
+    def _cfg(self, impl="xla"):
+        return snn.SNNConfig(layer_sizes=(6, 16, 4), timesteps=3, impl=impl)
+
+    def test_init_shapes(self):
+        cfg = self._cfg()
+        state = snn.init_state(cfg, batch=5, fleet=True)
+        assert state.w[0].shape == (5, 6, 16)
+        assert state.w[1].shape == (5, 16, 4)
+        assert state.v[0].shape == (5, 16)
+        assert state.trace[0].shape == (5, 6)
+
+    def test_fleet_requires_batch(self):
+        with pytest.raises(ValueError):
+            snn.init_state(self._cfg(), fleet=True)
+
+    def test_fleet_controller_matches_vmap(self):
+        """One fleet controller_step == B vmapped per-sample steps (xla)."""
+        cfg = self._cfg()
+        b = 4
+        theta = snn.init_theta(cfg, jax.random.PRNGKey(0), scale=0.5)
+        obs = jnp.sin(jnp.arange(b * 6, dtype=jnp.float32)).reshape(b, 6)
+        fleet_state = snn.init_state(cfg, batch=b, fleet=True)
+        f_state, f_act = snn.controller_step(cfg, fleet_state, theta, obs)
+
+        per_axes = engine.NetworkState(w=0, v=0, trace=0, t=None)
+        v_state, v_act = jax.vmap(
+            lambda st, o: snn.controller_step(cfg, st, theta, o),
+            in_axes=(per_axes, 0))(fleet_state, obs)
+        np.testing.assert_array_equal(np.asarray(f_act), np.asarray(v_act))
+        for a, rb in zip(f_state.w, v_state.w):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(rb))
+
+    def test_fleet_backend_parity_rollout(self):
+        """Fleet rollouts agree between xla and pallas-interpret."""
+        results = {}
+        for impl in ("xla", "pallas-interpret"):
+            cfg = self._cfg(impl)
+            theta = snn.init_theta(cfg, jax.random.PRNGKey(0), scale=0.5)
+            state = snn.init_state(cfg, batch=3, fleet=True)
+            obs = jnp.linspace(-1, 1, 18).reshape(3, 6)
+            for _ in range(2):
+                state, act = snn.controller_step(cfg, state, theta, obs)
+            results[impl] = (act, state.w)
+        np.testing.assert_allclose(np.asarray(results["xla"][0]),
+                                   np.asarray(results["pallas-interpret"][0]),
+                                   rtol=1e-5, atol=1e-5)
+        for a, rb in zip(results["xla"][1], results["pallas-interpret"][1]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(rb),
+                                       rtol=1e-5, atol=1e-5)
+
+
+class TestPlasticAdapterFleet:
+    """models/plastic.decode_step rides the fleet path, not vmap."""
+
+    def _setup(self, b=3, n=8, d=12):
+        from repro.configs import get_smoke
+        cfg = get_smoke("qwen3-4b").with_(plastic_adapter=True,
+                                          adapter_neurons=n)
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        params = {
+            "p_in": jax.random.normal(ks[0], (cfg.d_model, n)) * 0.5,
+            "p_out": jax.random.normal(ks[1], (n, cfg.d_model)) * 0.5,
+            "theta": jax.random.normal(ks[2], (4, n, n)) * 0.3,
+            "scale": jnp.asarray(0.5, jnp.float32),
+        }
+        state = {
+            "w_fast": jnp.zeros((b, n, n)), "v1": jnp.zeros((b, n)),
+            "v2": jnp.zeros((b, n)), "tr1": jnp.zeros((b, n)),
+            "tr2": jnp.zeros((b, n)),
+        }
+        h = jax.random.normal(ks[3], (b, 1, cfg.d_model))
+        return cfg, params, state, h
+
+    def test_matches_legacy_vmap_recipe(self):
+        from repro.core.plasticity import update_trace
+        from repro.core.snn import lif_step
+        from repro.models import plastic
+
+        cfg, params, state, h = self._setup()
+        h_new, s_new = plastic.decode_step(params, state, h, cfg)
+
+        # the pre-fleet implementation, verbatim
+        drive = jnp.einsum("bd,dn->bn", h[:, 0].astype(jnp.float32),
+                           params["p_in"].astype(jnp.float32))
+        v1, s1 = lif_step(state["v1"], drive, plastic.LIF)
+        tr1 = update_trace(state["tr1"], s1, 0.8)
+        ep = engine.EngineParams(trace_decay=0.8, w_clip=4.0)
+        layer = engine.LayerState(
+            w=state["w_fast"], v=state["v2"], trace_pre=tr1,
+            trace_post=state["tr2"],
+            theta=params["theta"].astype(jnp.float32))
+        layer, s2 = jax.vmap(
+            lambda l, x: engine.layer_step(l, x, params=ep, impl="xla"),
+            in_axes=(engine.LayerState(w=0, v=0, trace_pre=0, trace_post=0,
+                                       theta=None), 0))(layer, s1)
+        out = jnp.einsum("bn,nd->bd", s2, params["p_out"].astype(jnp.float32))
+        h_ref = h + (params["scale"] * out[:, None, :]).astype(h.dtype)
+
+        np.testing.assert_array_equal(np.asarray(h_new), np.asarray(h_ref))
+        np.testing.assert_array_equal(np.asarray(s_new["w_fast"]),
+                                      np.asarray(layer.w))
+
+    def test_streams_adapt_independently(self):
+        from repro.models import plastic
+
+        cfg, params, state, h = self._setup()
+        h0 = h.at[0].set(0.0)
+        _, s_a = plastic.decode_step(params, state, h, cfg)
+        _, s_b = plastic.decode_step(params, state, h0, cfg)
+        # stream 0 differs, the other streams' fast weights are untouched
+        np.testing.assert_array_equal(np.asarray(s_a["w_fast"][1:]),
+                                      np.asarray(s_b["w_fast"][1:]))
+
+
+class TestRateEncodingKeyGuard:
+    """encoding="rate" without a PRNG key must fail loudly at entry."""
+
+    def _cfg(self):
+        return snn.SNNConfig(layer_sizes=(6, 8, 4), timesteps=2,
+                             encoding="rate")
+
+    def test_controller_step_raises_without_key(self):
+        cfg = self._cfg()
+        theta = snn.init_theta(cfg, jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="PRNG key"):
+            snn.controller_step(cfg, snn.init_state(cfg), theta,
+                                jnp.ones((6,)))
+
+    def test_classify_window_raises_without_key(self):
+        cfg = dataclasses.replace(self._cfg(), spiking_readout=True)
+        theta = snn.init_theta(cfg, jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="PRNG key"):
+            snn.classify_window(cfg, snn.init_state(cfg), theta,
+                                jnp.ones((6,)))
+
+    def test_encode_raises_without_key(self):
+        with pytest.raises(ValueError, match="PRNG key"):
+            snn.encode(self._cfg(), jnp.ones((6,)), None, jnp.zeros((), jnp.int32))
+
+    def test_rate_encoding_with_key_works(self):
+        cfg = self._cfg()
+        theta = snn.init_theta(cfg, jax.random.PRNGKey(0), scale=0.5)
+        state, action = snn.controller_step(
+            cfg, snn.init_state(cfg), theta, 0.5 * jnp.ones((6,)),
+            key=jax.random.PRNGKey(1))
+        assert action.shape == (4,)
+        assert bool(jnp.isfinite(action).all())
+
+    def test_rate_encoding_is_stochastic_across_timesteps(self):
+        cfg = self._cfg()
+        obs = 0.5 * jnp.ones((6,))
+        key = jax.random.PRNGKey(0)
+        d0 = snn.encode(cfg, obs, key, jnp.asarray(0))
+        d1 = snn.encode(cfg, obs, key, jnp.asarray(1))
+        assert not np.array_equal(np.asarray(d0), np.asarray(d1))
+        assert set(np.unique(np.asarray(d0))) <= {0.0, 1.0}
+
+
+class TestFitnessPRNG:
+    """ES candidates see independent episode randomness unless crn=True."""
+
+    def _setup(self):
+        env = envs.make("direction", episode_len=10)
+        cfg = adaptation.AdaptationConfig(hidden=8, timesteps=2)
+        scfg = adaptation.make_snn_config(env, cfg)
+        theta = snn.flatten_theta(
+            snn.init_theta(scfg, jax.random.PRNGKey(0), scale=0.1))
+        pop = jnp.stack([theta, theta])        # two IDENTICAL candidates
+        return env, scfg, pop
+
+    def test_identical_candidates_get_independent_noise(self):
+        env, scfg, pop = self._setup()
+        fitness = adaptation.make_fitness_fn(env, scfg, env.train_tasks()[:2])
+        rets = fitness(pop, jax.random.PRNGKey(7))
+        assert float(rets[0]) != float(rets[1])
+
+    def test_crn_couples_the_population(self):
+        env, scfg, pop = self._setup()
+        fitness = adaptation.make_fitness_fn(env, scfg, env.train_tasks()[:2],
+                                             crn=True)
+        rets = fitness(pop, jax.random.PRNGKey(7))
+        assert float(rets[0]) == float(rets[1])

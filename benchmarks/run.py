@@ -1,12 +1,14 @@
 """Benchmark entry point: one harness per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
 
   adaptation        Fig. 3   plasticity vs weight-trained generalization
   engine_breakdown  Table I  per-engine FLOPs/bytes/roofline latency
   mnist_throughput  Table II pipelined fwd+learn FPS methodology
   latency           8 us     controller end-to-end latency analogue
   fleet_throughput  serving  native batched-weights launch vs vmap recipe
+  serving_churn     serving  session churn into a fixed slot pool (pinned
+                             zero recompiles + evict/restore bit-equality)
   roofline          Roofline table from the dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -17,12 +19,13 @@ import time
 
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
-    quick = "--quick" in argv
+    quick = "--quick" in argv or "--smoke" in argv
     t0 = time.time()
     failures = []
 
     from benchmarks import (adaptation, engine_breakdown, fleet_throughput,
-                            latency, mnist_throughput, roofline)
+                            latency, mnist_throughput, roofline,
+                            serving_churn)
 
     for name, fn in (
         ("engine_breakdown", lambda: engine_breakdown.main(quick=quick)),
@@ -32,6 +35,9 @@ def main(argv=None):
         ("fleet_throughput",
          lambda: fleet_throughput.main(
              ["--smoke"] if quick else ["--max-batch", "256"])),
+        ("serving_churn",
+         lambda: serving_churn.main(
+             ["--smoke"] if quick else ["--steps", "100"])),
         ("roofline_single", lambda: roofline.main(["--mesh", "single"])),
         ("roofline_multi", lambda: roofline.main(["--mesh", "multi"])),
     ):

@@ -1,0 +1,208 @@
+"""Session-serving churn: continuous batching into a fixed-shape slot pool.
+
+Poisson arrivals and geometric departures drive admit/evict churn against a
+`FleetScheduler` pool while every occupant learns online (fleet-mode fused
+dual-engine steps).  Sweeps slot count x churn rate and reports, per cell:
+
+  * pool steps/s and controller-steps/s (steps/s x mean occupancy),
+  * admission latency, p50/mean ms — the full user-visible cost of
+    `admit(evict_lru=True)`: SessionStore checkout (disk restore or
+    zero-init) + the jitted slot scatter, PLUS, whenever the pool is full,
+    evicting the displaced session (gather + write-through persist),
+  * recompiles after warm-up — PINNED AT ZERO: the pool tensor shape is
+    fixed, slot indices are traced, and occupancy is a runtime `active`
+    mask, so churn never retraces anything (asserted, not just reported),
+  * evict -> persist -> re-admit bit-equality through the DISK store, with
+    the re-admitted session landing in a different slot (asserted),
+  * idle-slot freeze: a vacated slot's weights are bit-unchanged after N
+    further pool steps (asserted — this is the `active`-mask contract that
+    makes fixed-shape batching semantically correct).
+
+    PYTHONPATH=src python benchmarks/serving_churn.py [--smoke] [--impl ...]
+
+Writes benchmarks/results/serving_churn.json (or _smoke.json under --smoke
+so CI never clobbers the checked-in full-sweep artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.core import snn
+from repro.serving import FleetScheduler, SessionStore
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def drive_for(uid: str, t: int, n: int) -> np.ndarray:
+    phase = (hash(uid) % 97) / 97.0
+    return np.sin(0.3 * t + phase + np.arange(n)).astype(np.float32)
+
+
+def churn_cell(cfg, theta, slots: int, arrival: float, depart: float,
+               steps: int, root: str, seed: int = 0) -> dict:
+    """One sweep cell: run `steps` pool steps under Poisson churn."""
+    rng = np.random.default_rng(seed)
+    # warm-cache capacity deliberately SMALLER than the recycled-uid pool:
+    # re-admissions overflow the LRU cache and exercise the disk-restore
+    # path, so admit_ms genuinely includes restore I/O (disk_restores > 0
+    # in the checked-in results, not just warm hits)
+    store = SessionStore(root=root, capacity=max(1, slots // 2))
+    sched = FleetScheduler(cfg, theta, slots=slots, store=store)
+    n_in = cfg.layer_sizes[0]
+
+    # Warm-up: touch every jitted program once (pool step with and without
+    # occupancy churn) so the measured phase sees only cached executables.
+    sched.admit("warm")
+    sched.step({"warm": drive_for("warm", 0, n_in)})
+    sched.evict("warm")
+    sched.admit("warm")
+    sched.step({"warm": drive_for("warm", 1, n_in)})
+    sched.evict("warm")
+    warm_compiles = sched.compile_count()
+
+    user_pool = [f"u{i:03d}" for i in range(4 * slots)]  # ids recycle ->
+    next_uid = 0                                         # disk restores
+    admit_lat = []
+    occupancy = 0
+    t0 = time.perf_counter()
+    for t in range(steps):
+        for _ in range(int(rng.poisson(arrival))):
+            uid = user_pool[next_uid % len(user_pool)]
+            next_uid += 1
+            if uid in sched.user_slot:
+                continue
+            ta = time.perf_counter()
+            sched.admit(uid, evict_lru=True)
+            admit_lat.append(time.perf_counter() - ta)
+        for uid in list(sched.active_users):
+            if rng.random() < depart:
+                sched.evict(uid)
+        sched.step({u: drive_for(u, t, n_in) for u in sched.active_users})
+        occupancy += len(sched.user_slot)
+    wall = time.perf_counter() - t0
+
+    recompiles = sched.compile_count() - warm_compiles
+    assert recompiles == 0, (
+        f"churn caused {recompiles} recompiles — the fixed-shape contract "
+        "is broken")
+
+    # ---- idle-slot freeze proof ------------------------------------------
+    victim = sched.active_users[0] if sched.active_users else None
+    if victim is not None:
+        sched.evict(victim)
+    vacant = sched.slot_user.index(None)
+    frozen_before = [np.asarray(w[vacant]).copy() for w in sched.fleet.w]
+    for t in range(10):
+        sched.step({u: drive_for(u, 1000 + t, n_in)
+                    for u in sched.active_users})
+    idle_frozen = all(
+        (np.asarray(w[vacant]) == b).all()
+        for w, b in zip(sched.fleet.w, frozen_before))
+    assert idle_frozen, "idle slot drifted — active mask is not a no-op"
+
+    lat_ms = sorted(x * 1e3 for x in admit_lat) or [0.0]
+    return {
+        "slots": slots, "arrival_rate": arrival, "depart_rate": depart,
+        "steps": steps,
+        "steps_per_s": steps / wall,
+        "controller_steps_per_s": occupancy / wall,
+        "mean_occupancy": occupancy / steps,
+        "admissions": len(admit_lat), "evictions": sched.evictions,
+        "disk_restores": store.restores,
+        "admit_ms_p50": lat_ms[len(lat_ms) // 2],
+        "admit_ms_mean": float(np.mean(lat_ms)),
+        "compiled_programs": warm_compiles,
+        "recompiles_after_warmup": recompiles,
+        "idle_slot_frozen": bool(idle_frozen),
+    }
+
+
+def evict_restore_bit_equality(cfg, theta, root: str) -> bool:
+    """Probe trajectory: interrupted (evict -> DISK persist -> re-admit into
+    a DIFFERENT slot) vs uninterrupted; must match bit for bit."""
+    n_in = cfg.layer_sizes[0]
+
+    def trajectory(interrupt: bool, sub: str):
+        store = SessionStore(root=os.path.join(root, sub))
+        sched = FleetScheduler(cfg, theta, slots=2, store=store)
+        sched.admit("probe")                    # slot 0
+        outs = []
+        for t in range(16):
+            if interrupt and t == 6:
+                sched.evict("probe")            # persisted to disk
+                store._warm.clear()             # force the DISK restore path
+                sched.admit("rival")            # rival takes slot 0
+                sched.step({"rival": drive_for("rival", 0, n_in)})
+                assert sched.admit("probe") == 1  # resumes in the OTHER slot
+            outs.append(np.asarray(sched.step(
+                {u: drive_for(u, t, n_in) for u in sched.active_users}
+            )["probe"]))
+        return np.stack(outs)
+
+    a = trajectory(False, "uninterrupted")
+    b = trajectory(True, "interrupted")
+    return bool((a == b).all())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single tiny cell for CI (seconds)")
+    ap.add_argument("--impl", default="xla",
+                    choices=["xla", "pallas", "pallas-interpret"])
+    ap.add_argument("--steps", type=int, default=None,
+                    help="pool steps per sweep cell (default 200; smoke 25)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.out is None:
+        # a non-default --steps run gets its own file so CI/quick sweeps
+        # never clobber the checked-in 200-step artifact (same convention
+        # as fleet_throughput's _capped results)
+        capped = args.steps is not None and args.steps != 200
+        name = ("serving_churn_smoke.json" if args.smoke else
+                "serving_churn_capped.json" if capped else
+                "serving_churn.json")
+        args.out = os.path.join(RESULTS, name)
+
+    cfg = snn.SNNConfig(layer_sizes=(16, 128, 8), timesteps=2,
+                        impl=args.impl)
+    theta = snn.init_theta(cfg, jax.random.PRNGKey(0))
+    steps = args.steps or (25 if args.smoke else 200)
+    cells = ([(4, 0.3, 0.08)] if args.smoke else
+             [(s, a, d) for s in (4, 16, 64)
+              for a, d in ((0.1, 0.02), (0.5, 0.08), (2.0, 0.25))])
+
+    sweep = []
+    print("slots,arrival,depart,steps_per_s,ctrl_steps_per_s,admit_ms_p50,"
+          "recompiles")
+    with tempfile.TemporaryDirectory() as root:
+        for slots, arrival, depart in cells:
+            row = churn_cell(cfg, theta, slots, arrival, depart, steps,
+                             os.path.join(root, f"s{slots}a{arrival}"))
+            sweep.append(row)
+            print(f"{slots},{arrival},{depart},{row['steps_per_s']:.1f},"
+                  f"{row['controller_steps_per_s']:.1f},"
+                  f"{row['admit_ms_p50']:.2f},"
+                  f"{row['recompiles_after_warmup']}")
+        bit_equal = evict_restore_bit_equality(cfg, theta, root)
+    assert bit_equal, "evict -> restore trajectory diverged!"
+    print(f"evict_restore_bit_identical={bit_equal}")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"impl": args.impl, "layer_sizes": list(cfg.layer_sizes),
+                   "steps_per_cell": steps, "smoke": bool(args.smoke),
+                   "evict_restore_bit_identical": bit_equal,
+                   "sweep": sweep}, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

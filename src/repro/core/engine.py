@@ -33,6 +33,12 @@ batched semantics, selected by the weight rank:
     recipe of `jax.vmap`-ing `layer_step` per stream, which broadcast the
     shared rule theta B-fold and never lowered through `pallas_call` at
     all (the batching rule rejects unmapped operands).
+
+Fleet mode additionally accepts an ``active (B,)`` slot mask (the session-
+serving contract, `repro.serving`): streams whose flag is false are frozen
+bit-exactly — weights, membrane, and traces unchanged, events zero — so a
+fixed-shape slot pool under continuous batching never drifts in its vacant
+slots and occupancy changes never recompile.
 """
 from __future__ import annotations
 
@@ -40,6 +46,7 @@ import dataclasses
 from typing import Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.plasticity import kernel as _kernel
 from repro.kernels.plasticity import ref as _ref
@@ -112,7 +119,8 @@ class EngineParams:
 def layer_step(state: LayerState, x: jax.Array, *,
                params: EngineParams = EngineParams(),
                impl: str = "xla",
-               teach: Optional[jax.Array] = None
+               teach: Optional[jax.Array] = None,
+               active: Optional[jax.Array] = None
                ) -> tuple[LayerState, jax.Array]:
     """One fused forward+plasticity step for one layer.
 
@@ -126,6 +134,12 @@ def layer_step(state: LayerState, x: jax.Array, *,
       teach: optional teaching current added to the psum ``(M,)``/``(B, M)``
              (supervised online learning on the output layer).  In fleet
              mode an unbatched ``(M,)`` teach broadcasts to every stream.
+      active: optional fleet-only ``(B,)`` slot mask (bool or 0/1).  Streams
+             with a false flag are TRUE no-ops: weights, membrane, and
+             traces come back bit-identical and their events are zero.
+             This is the contract the session-serving scheduler uses to run
+             a partially occupied fixed-shape slot pool without recompiling
+             or letting vacant slots drift.
 
     Returns:
       ``(new_state, out)`` — ``out`` is the layer's output events: spikes for
@@ -140,12 +154,33 @@ def layer_step(state: LayerState, x: jax.Array, *,
 
     fleet = state.w.ndim == 3                   # fleet: per-request weights
     if fleet:
-        if x.ndim != 2 or x.shape[0] != state.w.shape[0]:
+        b, n, m = state.w.shape
+        if x.ndim != 2 or x.shape[0] != b:
             raise ValueError(
                 f"fleet mode needs x of shape (B, N) matching w (B, N, M); "
                 f"got x {x.shape} vs w {state.w.shape}")
+        # Per-stream state must be batched too: an unbatched (M,) membrane
+        # or trace would silently broadcast ONE user's state across every
+        # stream (and, for M == B, transpose the axes without an error).
+        for name, arr, want in (("v", state.v, (b, m)),
+                                ("trace_pre", state.trace_pre, (b, n)),
+                                ("trace_post", state.trace_post, (b, m))):
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"fleet mode needs {name} of shape {want} matching "
+                    f"w (B, N, M) = {state.w.shape}; got {name} "
+                    f"{tuple(arr.shape)}")
+        if active is not None and tuple(active.shape) != (b,):
+            raise ValueError(
+                f"active slot mask must have shape (B,) = ({b},); got "
+                f"{tuple(active.shape)}")
         # an unbatched (M,) teach broadcasts to every stream inside the
         # fleet wrappers (ref.dual_engine_fleet_step / the Pallas wrapper)
+        kw["active"] = active
+    elif active is not None:
+        raise ValueError(
+            "active slot masks are a fleet-mode (w (B, N, M)) contract; "
+            f"got w {state.w.shape} with an active mask")
 
     if impl == "xla":
         fn = _ref.dual_engine_fleet_step if fleet else _ref.dual_engine_step
@@ -169,4 +204,11 @@ def layer_step(state: LayerState, x: jax.Array, *,
 
     new_state = dataclasses.replace(state, w=w, v=v, trace_post=tpost)
     out = spikes if params.spiking else v
+    if active is not None and not params.spiking:
+        # The readout's output IS the membrane; the state gate correctly
+        # freezes v to its OLD value for inactive slots, but the output
+        # contract ("inactive events are zero") must hold for readout
+        # layers too — a pooled consumer must never see a stale membrane.
+        out = jnp.where(active.astype(bool)[:, None], out,
+                        jnp.zeros_like(out))
     return new_state, out

@@ -174,7 +174,9 @@ def encode(cfg: SNNConfig, obs: jax.Array, key: Optional[jax.Array], t: jax.Arra
 
 
 def timestep(cfg: SNNConfig, state: NetworkState, theta, drive: jax.Array,
-             teach: Optional[jax.Array] = None) -> tuple[NetworkState, jax.Array]:
+             teach: Optional[jax.Array] = None,
+             active: Optional[jax.Array] = None
+             ) -> tuple[NetworkState, jax.Array]:
     """One SNN timestep: every layer routed through the PlasticEngine.
 
     Mirrors the Scheduler main loop: each layer's fused `engine.layer_step`
@@ -191,11 +193,22 @@ def timestep(cfg: SNNConfig, state: NetworkState, theta, drive: jax.Array,
     Fleet states (``init_state(batch=B, fleet=True)``: per-request weights
     ``(B, N, M)``) take the same code path — the engine detects the weight
     rank and runs all B controllers as one fused launch per layer.
+
+    `active`: optional fleet-only ``(B,)`` slot mask (session serving).
+    Inactive streams are frozen bit-exactly through EVERY layer — the input
+    trace update here is gated the same way the engine gates each layer's
+    state writes — so a vacated slot of a fixed-shape pool cannot drift
+    between swap-out and the next swap-in.  ``state.t`` is the shared pool
+    clock and still advances; per-session step counts are the scheduler's
+    (host-side) bookkeeping.
     """
     w, v, tr = list(state.w), list(state.v), list(state.trace)
     x = drive
     # input trace: input drive acts as the presynaptic event for L1
-    tr[0] = P.update_trace(tr[0], x, cfg.trace_decay)
+    tr0_new = P.update_trace(tr[0], x, cfg.trace_decay)
+    if active is not None:
+        tr0_new = jnp.where(active.astype(bool)[:, None], tr0_new, tr[0])
+    tr[0] = tr0_new
     out = None
     for i in range(cfg.num_layers):
         last = i == cfg.num_layers - 1
@@ -204,7 +217,7 @@ def timestep(cfg: SNNConfig, state: NetworkState, theta, drive: jax.Array,
             theta=theta[i] if cfg.plastic else None)
         layer, out = engine.layer_step(
             layer, x, params=cfg.engine_params(i), impl=cfg.impl,
-            teach=teach if last else None)
+            teach=teach if last else None, active=active)
         w[i], v[i], tr[i + 1] = layer.w, layer.v, layer.trace_post
         x = out
     return NetworkState(w=tuple(w), v=tuple(v), trace=tuple(tr),

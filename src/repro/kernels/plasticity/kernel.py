@@ -25,6 +25,10 @@ Layer modes mirror the network semantics:
     (supervised online learning on the output layer).
   * ``plastic=False`` — the theta/trace_pre operands are dropped entirely;
     no coefficient DMA is issued and weights pass through unchanged.
+  * ``active``        — fleet-only (B,) slot mask (session serving): an
+    inactive stream's weights/membrane/traces are written back unchanged
+    (dw gated, not merely small) and its events are zeroed, so vacated
+    slots of a fixed-shape fleet tensor are true no-ops.
 
 Grid: (M // bm,) — one program per block of postsynaptic neurons.  Every
 block sees the whole batch and the whole fan-in, so both matmuls (forward
@@ -53,12 +57,17 @@ from repro.core.plasticity import ALPHA, BETA, GAMMA, DELTA
 
 def _forward_engine(x, w, v_ref, tpost_ref, teach_ref, s_out, v_out,
                     tpost_out, *, tau_m, v_th, v_reset, trace_decay,
-                    spiking):
+                    spiking, gate=None):
     """Shared Forward Engine body: psum -> neuron dynamics -> trace update.
 
     Used verbatim by BOTH the shared-weight and the fleet kernel so the
     LIF/readout/trace math cannot diverge between them; returns the fresh
     postsynaptic trace the Plasticity Engine consumes.
+
+    ``gate`` (fleet serving only) is this stream's scalar active flag: when
+    false the membrane and trace writes select the OLD values and the event
+    output is zeroed — the slot is frozen bit-exactly, which is the
+    `active`-mask contract fixed-shape continuous batching relies on.
     """
     current = jnp.dot(x, w, preferred_element_type=jnp.float32)   # psum (MXU)
     if teach_ref is not None:
@@ -74,6 +83,10 @@ def _forward_engine(x, w, v_ref, tpost_ref, teach_ref, s_out, v_out,
     tpost = tpost_ref[...].astype(jnp.float32)
     tpost_new = trace_decay * tpost + spikes    # Trace Update Unit
 
+    if gate is not None:
+        spikes = jnp.where(gate, spikes, jnp.zeros_like(spikes))
+        v_upd = jnp.where(gate, v_upd, v)
+        tpost_new = jnp.where(gate, tpost_new, tpost)
     s_out[...] = spikes.astype(s_out.dtype)
     v_out[...] = v_upd.astype(v_out.dtype)
     tpost_out[...] = tpost_new.astype(tpost_out.dtype)
@@ -172,26 +185,30 @@ def dual_engine_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
 
 def _fleet_kernel(x_ref, w_ref, v_ref, tpost_ref, *refs,
                   tau_m, v_th, v_reset, trace_decay, w_clip,
-                  plastic, spiking, has_teach):
+                  plastic, spiking, has_teach, has_active):
     """One program = one request stream x one postsynaptic tile.
 
     Per-sample semantics throughout: the Hebbian term is the outer product
     of THIS stream's traces (no batch averaging) and the rewritten weight
-    tile belongs to this stream alone.
+    tile belongs to this stream alone.  With ``has_active`` the stream's
+    scalar slot flag gates every state write (weights, membrane, traces
+    frozen; events zeroed) so vacated fleet slots are true no-ops.
     """
     rest = list(refs)
     theta_ref = rest.pop(0) if plastic else None
     tpre_ref = rest.pop(0) if plastic else None
     teach_ref = rest.pop(0) if has_teach else None
+    active_ref = rest.pop(0) if has_active else None
     s_out, v_out, tpost_out, w_out = rest
+    gate = None if active_ref is None else active_ref[0, 0] > 0
 
     # ---- Forward Engine ----------------------------------------------------
     x = x_ref[...].astype(jnp.float32)           # (1, N) this stream's events
     w = w_ref[0].astype(jnp.float32)             # (N, bm) this stream's tile
-    tpost_new = _forward_engine(                 # (1, bm)
+    tpost_new = _forward_engine(                 # (1, bm); gated if inactive
         x, w, v_ref, tpost_ref, teach_ref, s_out, v_out, tpost_out,
         tau_m=tau_m, v_th=v_th, v_reset=v_reset, trace_decay=trace_decay,
-        spiking=spiking)
+        spiking=spiking, gate=gate)
 
     # ---- Plasticity Engine (same stream-resident tiles) --------------------
     if plastic:
@@ -201,6 +218,8 @@ def _fleet_kernel(x_ref, w_ref, v_ref, tpost_ref, *refs,
         dw = (th[ALPHA] * hebb + th[BETA] * tpre[0][:, None]
               + th[GAMMA] * tpost_new[0][None, :] + th[DELTA])
         w_new = jnp.clip(w + dw, -w_clip, w_clip)
+        if gate is not None:
+            w_new = jnp.where(gate, w_new, w)     # dw gated: slot frozen
         w_out[0] = w_new.astype(w_out.dtype)
     else:
         w_out[0] = w.astype(w_out.dtype)
@@ -212,16 +231,21 @@ def dual_engine_fleet_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
                                   trace_decay: float = 0.8,
                                   w_clip: float = 4.0, plastic: bool = True,
                                   spiking: bool = True, teach=None,
-                                  block_m: int = 128,
+                                  active=None, block_m: int = 128,
                                   interpret: bool = False):
     """Fleet pallas-call wrapper.  Shapes as in ref.dual_engine_fleet_step:
-    x (B,N), w (B,N,M) per-request, theta (4,N,M) shared, v/traces (B,·)."""
+    x (B,N), w (B,N,M) per-request, theta (4,N,M) shared, v/traces (B,·),
+    active (B,) slot mask (inactive slots frozen bit-exactly, events zero)."""
     b, n = x.shape
     b2, n2, m = w.shape
     assert (b, n) == (b2, n2), (x.shape, w.shape)
     if teach is not None and teach.ndim == 1:
         # unbatched (M,) teach: same signal to every stream (see ref)
         teach = jnp.broadcast_to(teach, (b, teach.shape[0]))
+    if active is not None:
+        # (B,) -> (B, 1) so each program reads its stream's scalar flag as a
+        # minimal VMEM tile indexed by the stream grid coordinate.
+        active = active.reshape(b, 1).astype(jnp.float32)
     bm = min(block_m, m)
     # Streams iterate INNERMOST (grid dim 1): the shared theta block's index
     # map is constant in the stream index, so consecutive grid steps revisit
@@ -229,11 +253,12 @@ def dual_engine_fleet_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
     # fetch per tile for the whole fleet.
     grid = (pl.cdiv(m, bm), b)
     has_teach = teach is not None
+    has_active = active is not None
 
     kernel = functools.partial(
         _fleet_kernel, tau_m=tau_m, v_th=v_th, v_reset=v_reset,
         trace_decay=trace_decay, w_clip=w_clip, plastic=plastic,
-        spiking=spiking, has_teach=has_teach)
+        spiking=spiking, has_teach=has_teach, has_active=has_active)
 
     in_specs = [
         pl.BlockSpec((1, n), lambda j, i: (i, 0)),         # this stream's x
@@ -254,6 +279,9 @@ def dual_engine_fleet_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
     if has_teach:
         in_specs.append(pl.BlockSpec((1, bm), lambda j, i: (i, j)))
         operands.append(teach)
+    if has_active:
+        in_specs.append(pl.BlockSpec((1, 1), lambda j, i: (i, 0)))
+        operands.append(active)
 
     return pl.pallas_call(
         kernel,

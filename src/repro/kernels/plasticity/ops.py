@@ -28,7 +28,8 @@ from repro.kernels.plasticity import ref as _ref
     jax.jit,
     static_argnames=("tau_m", "v_th", "v_reset", "trace_decay", "w_clip",
                      "plastic", "spiking", "impl", "interpret", "block_m"))
-def dual_engine_step(x, w, theta, v, trace_pre, trace_post, teach=None, *,
+def dual_engine_step(x, w, theta, v, trace_pre, trace_post, teach=None,
+                     active=None, *,
                      tau_m: float = 2.0, v_th: float = 1.0,
                      v_reset: float = 0.0, trace_decay: float = 0.8,
                      w_clip: float = 4.0, plastic: bool = True,
@@ -38,6 +39,12 @@ def dual_engine_step(x, w, theta, v, trace_pre, trace_post, teach=None, *,
               trace_decay=trace_decay, w_clip=w_clip, plastic=plastic,
               spiking=spiking, teach=teach)
     fleet = w.ndim == 3
+    if active is not None and not fleet:
+        raise ValueError(
+            "active slot masks are a fleet-mode (w (B, N, M)) contract; "
+            f"got w {w.shape} with an active mask")
+    if fleet:
+        kw["active"] = active
     if impl in ("pallas", "pallas-interpret"):
         fn = (_kernel.dual_engine_fleet_step_pallas if fleet
               else _kernel.dual_engine_step_pallas)

@@ -87,17 +87,24 @@ def dual_engine_fleet_step(x, w, theta, v, trace_pre, trace_post, *,
                            tau_m: float = 2.0, v_th: float = 1.0,
                            v_reset: float = 0.0, trace_decay: float = 0.8,
                            w_clip: float = 4.0, plastic: bool = True,
-                           spiking: bool = True, teach=None):
+                           spiking: bool = True, teach=None, active=None):
     """Fleet oracle: per-request weights, per-sample dw, shared rule.
 
     Shapes: x (B,N), w (B,N,M), theta (4,N,M)|None, v (B,M),
-    trace_pre (B,N), trace_post (B,M), teach (B,M)|None.
+    trace_pre (B,N), trace_post (B,M), teach (B,M)|None, active (B,)|None.
 
     Returns (events, v_out, trace_post_new, w_new) with w_new (B,N,M).
     Defined as ``vmap(dual_engine_step)`` over the leading rank with theta
     closed over (shared, unmapped) — per-sample semantics bit-identical to
     B independent unbatched steps, and the fastest XLA lowering measured
     on CPU (hand-written batched einsums were up to 2x slower).
+
+    ``active`` is the slot mask of the session-serving subsystem: a stream
+    whose slot is inactive is a TRUE no-op — its weights, membrane, and
+    postsynaptic trace come back bit-identical (the dw is gated, not merely
+    small) and its output events are zero.  This is what makes continuous
+    batching into a fixed-shape fleet tensor semantically correct: padded /
+    vacated slots cannot drift between swap-out and the next swap-in.
     """
     assert w.ndim == 3 and x.ndim == 2, (x.shape, w.shape)
     if teach is not None and teach.ndim == 1:
@@ -110,11 +117,25 @@ def dual_engine_fleet_step(x, w, theta, v, trace_pre, trace_post, *,
         trace_decay=trace_decay, w_clip=w_clip, plastic=plastic,
         spiking=spiking)
     if teach is None:
-        return jax.vmap(
+        out = jax.vmap(
             lambda xb, wb, vb, tpb, tqb:
                 step(xb, wb, theta, vb, tpb, tqb)
         )(x, w, v, trace_pre, trace_post)
-    return jax.vmap(
-        lambda xb, wb, vb, tpb, tqb, tb:
-            step(xb, wb, theta, vb, tpb, tqb, teach=tb)
-    )(x, w, v, trace_pre, trace_post, teach)
+    else:
+        out = jax.vmap(
+            lambda xb, wb, vb, tpb, tqb, tb:
+                step(xb, wb, theta, vb, tpb, tqb, teach=tb)
+        )(x, w, v, trace_pre, trace_post, teach)
+    if active is None:
+        return out
+    # Slot gating: select the OLD value wholesale for inactive streams (the
+    # same computed-then-selected structure the Pallas kernel uses), so the
+    # frozen state is bit-identical, not recomputed-and-close.
+    events, v_out, tp_new, w_new = out
+    a = active.reshape(-1).astype(bool)
+    assert a.shape[0] == x.shape[0], (active.shape, x.shape)
+    events = jnp.where(a[:, None], events, jnp.zeros_like(events))
+    v_out = jnp.where(a[:, None], v_out, v.astype(v_out.dtype))
+    tp_new = jnp.where(a[:, None], tp_new, trace_post.astype(tp_new.dtype))
+    w_new = jnp.where(a[:, None, None], w_new, w.astype(w_new.dtype))
+    return events, v_out, tp_new, w_new

@@ -8,6 +8,12 @@ inside an LM serving stack).
 With --plastic every decode step runs the fused dual-engine program
 (core.engine.layer_step) once per request stream; --plastic-impl picks the
 backend ("xla" oracle, "pallas" TPU kernel, "pallas-interpret" validation).
+
+With --session-dir the adapter's per-stream fast weights become SESSIONS
+(repro.serving): each batch row is a named user whose learned W_fast is
+checked out of a durable `SessionStore` before decode and checked back in
+after — re-running the driver with the same --session-dir resumes every
+user's plastic memory bit-identically instead of re-zeroing it.
 """
 from __future__ import annotations
 
@@ -23,20 +29,29 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_local_mesh
 from repro.launch.steps import make_decode_step, make_prefill
 from repro.models import transformer as T
+from repro.serving import SessionStore, slot_put, slot_take
 
 
 def generate(cfg, params, prompts, max_len: int, gen: int,
-             temperature: float = 0.0, seed: int = 0):
+             temperature: float = 0.0, seed: int = 0, sessions=None):
     """Greedy/temperature sampling loop.  prompts (B, S) int32.
 
-    Returns (tokens (B, gen), per-step latencies).  The decode step is
-    AOT-compiled BEFORE the timed loop — historically the first iteration
-    absorbed the jit compile, skewing decode_ms_p50/mean and tokens_per_s;
-    all reported latencies are now steady-state."""
+    Returns (tokens (B, gen), per-step latencies, final cache).  The decode
+    step is AOT-compiled BEFORE the timed loop — historically the first
+    iteration absorbed the jit compile, skewing decode_ms_p50/mean and
+    tokens_per_s; all reported latencies are now steady-state.
+
+    `sessions`: optional list of per-stream adapter session states (pytrees
+    matching one row of ``cache["adapter"]``); scattered into the fresh
+    prefill cache so each stream RESUMES its user's learned fast weights
+    instead of starting from zero (the repro.serving session contract)."""
     prefill = jax.jit(make_prefill(cfg, max_len))
     decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
 
     logits, cache = prefill(params, prompts)
+    if sessions is not None:
+        for b, user in enumerate(sessions):
+            cache["adapter"] = slot_put(cache["adapter"], jnp.int32(b), user)
     key = jax.random.PRNGKey(seed)
     outs, lats = [], []
     tok = _sample(logits, key, temperature)
@@ -52,7 +67,7 @@ def generate(cfg, params, prompts, max_len: int, gen: int,
         lats.append(time.perf_counter() - t0)
         key = jax.random.fold_in(key, i)
         tok = _sample(logits, key, temperature)
-    return jnp.stack(outs, axis=1), lats
+    return jnp.stack(outs, axis=1), lats, cache
 
 
 def _sample(logits, key, temperature):
@@ -76,9 +91,22 @@ def main(argv=None):
                          "dual-engine step (pallas on TPU)")
     ap.add_argument("--kv-quant", action="store_true",
                     help="int8 KV cache (2.3x decode memory-roofline win)")
+    ap.add_argument("--session-dir", default=None,
+                    help="with --plastic: durable per-user session store "
+                         "for the adapter fast weights; each batch row is a "
+                         "user whose learned W_fast persists across runs")
+    ap.add_argument("--users", default=None,
+                    help="comma-separated user ids for the batch rows "
+                         "(default user0..user{B-1}); needs --session-dir")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if (args.session_dir or args.users) and not args.plastic:
+        ap.error("--session-dir/--users require --plastic (sessions are "
+                 "the adapter's fast-weight state)")
+    if args.users and not args.session_dir:
+        ap.error("--users names the rows of a durable session store; "
+                 "pass --session-dir too")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if args.plastic:
@@ -100,16 +128,53 @@ def main(argv=None):
                                         dtype=cfg.adtype)
         else:
             prompts_in = prompts
-        toks, lats = generate(cfg, params, prompts_in, max_len, args.gen,
-                              args.temperature, args.seed)
 
-    print(json.dumps({
+        store = users = None
+        sessions = steps = None
+        if args.session_dir is not None:
+            store = SessionStore(root=args.session_dir, capacity=args.batch)
+            users = (args.users.split(",") if args.users
+                     else [f"user{b}" for b in range(args.batch)])
+            if len(users) != args.batch:
+                raise SystemExit(f"--users needs exactly {args.batch} ids, "
+                                 f"got {len(users)}")
+            if len(set(users)) != len(users):
+                raise SystemExit(
+                    "--users ids must be unique: two rows sharing a session "
+                    "would silently overwrite each other's learned state")
+            n = cfg.adapter_neurons
+            zero_row = lambda: {            # one stream's adapter state
+                "w_fast": jnp.zeros((n, n), jnp.float32),
+                "v1": jnp.zeros((n,), jnp.float32),
+                "v2": jnp.zeros((n,), jnp.float32),
+                "tr1": jnp.zeros((n,), jnp.float32),
+                "tr2": jnp.zeros((n,), jnp.float32)}
+            checked = [store.checkout(u, zero_row) for u in users]
+            sessions = [s for s, _ in checked]
+            steps = [st for _, st in checked]
+
+        toks, lats, cache = generate(cfg, params, prompts_in, max_len,
+                                     args.gen, args.temperature, args.seed,
+                                     sessions=sessions)
+        if store is not None:
+            for b, u in enumerate(users):
+                row = slot_take(cache["adapter"], jnp.int32(b))
+                store.checkin(u, row, steps[b] + args.gen)
+
+    out = {
         "arch": cfg.name, "plastic": bool(cfg.plastic_adapter),
         "batch": args.batch, "generated": int(toks.shape[1]),
         "decode_ms_p50": sorted(lats)[len(lats) // 2] * 1e3,
         "decode_ms_mean": sum(lats) / len(lats) * 1e3,
         "tokens_per_s": args.batch * len(lats) / sum(lats),
-    }, indent=1))
+    }
+    if store is not None:
+        out["sessions"] = {
+            "users": users, "resumed": store.restores,
+            "created": store.creates,
+            "tokens_learned": [steps[b] + args.gen
+                               for b in range(args.batch)]}
+    print(json.dumps(out, indent=1))
     return 0
 
 

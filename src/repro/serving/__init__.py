@@ -1,0 +1,31 @@
+"""Session serving: continuous batching of plastic streams into fixed slots.
+
+FireFly-P's Phase-2 controllers rewrite their own synapses on every step, so
+a "user" of this system is not a request — it is a long-lived plastic STATE
+(`NetworkState` for controllers, ``W_fast`` for the LM adapter) that must
+outlive any single residency in the accelerator fleet.  This package is the
+machinery between the fleet tensor (PR 2: B per-request weight sets stepped
+as one fused launch) and millions of such users:
+
+  * `sessions.SessionStore`   — owns per-user plastic state: LRU warm cache
+    over durable `checkpoint.manager` persistence (``<root>/<uid>/step_*``,
+    atomic LATEST, keep-K gc).  Evict -> restore is bit-identical.
+  * `scheduler.FleetScheduler` — admits/evicts sessions into a FIXED-shape
+    ``(B, N, M)`` slot pool via jitted gather/scatter swaps (slot index
+    traced: no shape change, no recompile, ever) and steps the whole pool
+    through the `engine.layer_step` fleet path in one fused launch.
+  * the ``active (B,)`` slot mask — threaded through ref/kernel/ops/engine
+    (`engine.layer_step(active=...)`): vacant slots are TRUE no-ops, their
+    weights/membranes/traces frozen bit-exactly and events zeroed, which is
+    what makes fixed-shape continuous batching semantically correct rather
+    than "idle slots drift anyway".
+
+Entry points: ``launch/serve.py --plastic --session-dir`` (LM adapter
+sessions), ``examples/session_serving.py`` (controller pool under churn),
+``benchmarks/serving_churn.py`` (Poisson churn sweep; pins zero recompiles
+after warm-up and evict->restore bit-equality).
+"""
+from repro.serving.scheduler import FleetScheduler, slot_put, slot_take
+from repro.serving.sessions import SessionStore
+
+__all__ = ["FleetScheduler", "SessionStore", "slot_put", "slot_take"]

@@ -1,0 +1,245 @@
+"""FleetScheduler: continuous batching of plastic sessions into fixed slots.
+
+The fleet tensor (PR 2) gives B per-request weight sets one fused launch per
+layer; this module decides WHICH users occupy those B slots over time.  The
+pool is a single fleet `NetworkState` of FIXED shape ``(B, N, M)`` — slots
+are never added or removed, so every jitted program (the pool step and the
+gather/scatter swaps) compiles exactly once per shape and the compile count
+is pinned (`compile_count()`; asserted by benchmarks/serving_churn.py).
+
+Mechanics per scheduling event:
+
+  * ``admit(uid)``  — `SessionStore.checkout` (warm hit / durable restore /
+    fresh zero state), then swap-in: one jitted ``leaf.at[slot].set(user)``
+    scatter per state leaf, with the slot index TRACED so any slot reuses
+    the same executable.
+  * ``evict(uid)``  — swap-out (jitted ``leaf[slot]`` gather), stamp the
+    session's own step counter into ``NetworkState.t``, and
+    `SessionStore.checkin` (write-through persist); the vacated slot is
+    scatter-cleared to zeros for hygiene.
+  * ``step(drives)``— ONE fused pool step over all B slots through the
+    existing `engine.layer_step` fleet path, with the ``active (B,)`` mask
+    gating vacant slots into true no-ops (weights/membranes/traces frozen
+    bit-exactly, events zero).  Occupancy changes never retrace: the mask
+    is a runtime operand, not a shape.
+
+Because fleet-mode streams are mutually independent and the active mask
+freezes state bit-exactly, a session's trajectory is invariant to WHICH
+slot it occupies, to its neighbours, and to evict -> persist -> re-admit
+round-trips — the bit-identity contract `tests/test_serving.py` pins on
+the xla and pallas-interpret backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import snn
+from repro.core.engine import NetworkState
+from repro.serving.sessions import SessionStore
+
+
+# ---- generic slot gather/scatter (any pytree of leading-slot-rank leaves) --
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def slot_put(pool, slot, user):
+    """Scatter `user` (pytree of unbatched leaves) into `pool[slot]`."""
+    return jax.tree.map(
+        lambda p, u: p.at[slot].set(u.astype(p.dtype)), pool, user)
+
+
+@jax.jit
+def slot_take(pool, slot):
+    """Gather slot `slot` of every pool leaf as an unbatched pytree."""
+    return jax.tree.map(lambda p: p[slot], pool)
+
+
+def _fleet_put(fleet: NetworkState, slot, user: NetworkState) -> NetworkState:
+    """NetworkState-aware scatter: `t` is the shared pool clock, not a slot
+    row, so it is carried through instead of indexed."""
+    return NetworkState(
+        w=tuple(f.at[slot].set(u.astype(f.dtype))
+                for f, u in zip(fleet.w, user.w)),
+        v=tuple(f.at[slot].set(u.astype(f.dtype))
+                for f, u in zip(fleet.v, user.v)),
+        trace=tuple(f.at[slot].set(u.astype(f.dtype))
+                    for f, u in zip(fleet.trace, user.trace)),
+        t=fleet.t)
+
+
+def _fleet_take(fleet: NetworkState, slot) -> NetworkState:
+    """NetworkState-aware gather; `t` is zeroed (the scheduler stamps the
+    session's true host-side step count after the gather)."""
+    return NetworkState(
+        w=tuple(f[slot] for f in fleet.w),
+        v=tuple(f[slot] for f in fleet.v),
+        trace=tuple(f[slot] for f in fleet.trace),
+        t=jnp.zeros((), jnp.int32))
+
+
+class FleetScheduler:
+    """Admit/evict user sessions into a fixed-shape controller slot pool.
+
+    Args:
+      cfg:    `snn.SNNConfig` of the controller (``cfg.impl`` picks the
+              engine backend for the whole pool).
+      theta:  per-layer packed rule coefficients (shared by every session —
+              the rule is the deployment, the weights are the user).
+      slots:  pool size B; fixes the fleet tensor shape forever.
+      store:  `SessionStore` backing eviction/restore; a private in-RAM
+              store is created if omitted.
+    """
+
+    def __init__(self, cfg: snn.SNNConfig, theta, slots: int,
+                 store: Optional[SessionStore] = None):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        self.cfg = cfg
+        self.theta = theta
+        self.slots = slots
+        self.store = store if store is not None else SessionStore()
+        self.fleet: NetworkState = snn.init_state(cfg, batch=slots,
+                                                  fleet=True)
+        self._zero_user: NetworkState = snn.init_state(cfg)  # clear template
+        self.slot_user: list = [None] * slots        # slot -> uid | None
+        self.user_slot: Dict[str, int] = {}          # uid -> slot
+        self._steps = np.zeros(slots, np.int64)      # per-session step count
+        self._admit_seq = np.zeros(slots, np.int64)  # admission order (LRU)
+        self._seq = 0
+        self.evictions = 0
+
+        def _pool_step(fleet, drive, active, teach):
+            return snn.timestep(cfg, fleet, theta, drive, teach=teach,
+                                active=active)
+
+        # Fixed shapes everywhere => each of these traces exactly once per
+        # signature; `compile_count()` exposes the executable counts the
+        # churn benchmark pins.
+        self._step = jax.jit(_pool_step)
+        self._put = jax.jit(_fleet_put, donate_argnums=(0,))
+        self._take = jax.jit(_fleet_take)
+
+    # ---- occupancy -------------------------------------------------------
+
+    @property
+    def active_users(self) -> list:
+        return [u for u in self.slot_user if u is not None]
+
+    @property
+    def free_slots(self) -> int:
+        return self.slots - len(self.user_slot)
+
+    def _active_mask(self) -> jax.Array:
+        mask = np.zeros(self.slots, np.bool_)
+        for s, u in enumerate(self.slot_user):
+            mask[s] = u is not None
+        return jnp.asarray(mask)
+
+    def compile_count(self) -> int:
+        """Total executables compiled by the scheduler's jitted programs."""
+        return sum(int(f._cache_size())
+                   for f in (self._step, self._put, self._take))
+
+    # ---- admission / eviction -------------------------------------------
+
+    def admit(self, uid: str, evict_lru: bool = False) -> int:
+        """Place `uid` into a free slot (restoring persisted state if any).
+
+        Returns the slot index.  With ``evict_lru=True`` a full pool evicts
+        its least-recently-admitted session to make room; otherwise a full
+        pool raises RuntimeError.
+        """
+        if uid in self.user_slot:
+            raise ValueError(f"session {uid!r} is already in slot "
+                             f"{self.user_slot[uid]}")
+        free = [s for s, u in enumerate(self.slot_user) if u is None]
+        if not free:
+            if not evict_lru:
+                raise RuntimeError(
+                    f"pool is full ({self.slots} slots); pass evict_lru=True "
+                    "or evict a session first")
+            lru = min((s for s in range(self.slots)),
+                      key=lambda s: self._admit_seq[s])
+            self.evict(self.slot_user[lru])
+            free = [lru]
+        slot = free[0]
+        state, step = self.store.checkout(uid, lambda: snn.init_state(self.cfg))
+        self.fleet = self._put(self.fleet, jnp.int32(slot), state)
+        self.slot_user[slot] = uid
+        self.user_slot[uid] = slot
+        self._steps[slot] = step
+        self._admit_seq[slot] = self._seq
+        self._seq += 1
+        return slot
+
+    def evict(self, uid: str) -> None:
+        """Swap `uid` out, persist it durably, and clear its slot."""
+        slot = self.user_slot.pop(uid, None)
+        if slot is None:
+            raise KeyError(f"session {uid!r} is not in the pool")
+        user = self._take(self.fleet, jnp.int32(slot))
+        user = dataclasses.replace(
+            user, t=jnp.asarray(int(self._steps[slot]), jnp.int32))
+        self.store.checkin(uid, user, int(self._steps[slot]))
+        self.slot_user[slot] = None
+        # hygiene: scatter zeros over the vacated slot so no stale user data
+        # lingers in the pool tensor (the active mask already freezes it)
+        self.fleet = self._put(self.fleet, jnp.int32(slot), self._zero_user)
+        self._steps[slot] = 0
+        self.evictions += 1
+
+    # ---- stepping --------------------------------------------------------
+
+    def step(self, drives: Mapping[str, jax.Array],
+             teach: Optional[Mapping[str, jax.Array]] = None
+             ) -> Dict[str, jax.Array]:
+        """One fused SNN timestep for the WHOLE pool.
+
+        `drives` maps uid -> input drive ``(obs_dim,)`` (already encoded;
+        the pool is deterministic, matching ``encoding="current"``).  Every
+        admitted session must receive a drive.  Vacant slots get zero drive
+        and are frozen by the active mask.  Returns uid -> readout row.
+        """
+        missing = [u for u in self.user_slot if u not in drives]
+        extra = [u for u in drives if u not in self.user_slot]
+        if missing or extra:
+            raise ValueError(
+                f"drives must cover exactly the admitted sessions; missing "
+                f"{missing}, not admitted {extra}")
+        n_in = self.cfg.layer_sizes[0]
+        drive = np.zeros((self.slots, n_in), np.float32)
+        for uid, row in drives.items():
+            drive[self.user_slot[uid]] = np.asarray(row, np.float32)
+        tarr = None
+        if teach is not None:
+            ghosts = [u for u in teach if u not in self.user_slot]
+            if ghosts:
+                raise ValueError(
+                    f"teach signals for sessions not in the pool: {ghosts}")
+            m_out = self.cfg.layer_sizes[-1]
+            tarr = np.zeros((self.slots, m_out), np.float32)
+            for uid, row in teach.items():
+                tarr[self.user_slot[uid]] = np.asarray(row, np.float32)
+            tarr = jnp.asarray(tarr)
+        self.fleet, out = self._step(self.fleet, jnp.asarray(drive),
+                                     self._active_mask(), tarr)
+        for uid, slot in self.user_slot.items():
+            self._steps[slot] += 1
+        return {uid: out[slot] for uid, slot in self.user_slot.items()}
+
+    def control_step(self, obs: Mapping[str, jax.Array]
+                     ) -> Dict[str, jax.Array]:
+        """One CONTROL step = ``cfg.timesteps`` pool timesteps on held
+        observations (mirrors `snn.controller_step`: mean readout over the
+        window, tanh-squashed unless the readout spikes)."""
+        outs = [self.step(obs) for _ in range(self.cfg.timesteps)]
+        actions = {}
+        for uid in obs:
+            a = jnp.stack([o[uid] for o in outs]).mean(axis=0)
+            actions[uid] = a if self.cfg.spiking_readout else jnp.tanh(a)
+        return actions

@@ -1,0 +1,139 @@
+"""SessionStore: per-user plastic state with LRU caching + durable restore.
+
+A *session* is one user's learned synaptic memory — the whole point of
+FireFly-P's Phase-2 deployment is that this state is continuously rewritten
+on-line, so it can never be recomputed from parameters: it must be OWNED,
+evicted, persisted, and restored like any other first-class resource.  The
+store is deliberately generic over the state pytree:
+
+  * SNN controllers — an unbatched `engine.NetworkState` (per-layer weights,
+    membranes, traces, step counter);
+  * the LM fast-weight adapter — the per-stream slice of the decode cache
+    (``w_fast``, membranes, traces).
+
+Ownership model (what the FleetScheduler drives):
+
+    checkout(uid) ──> warm-cache hit (exclusive: removed from the cache)
+                 ──> durable restore          (bit-identical resumption)
+                 ──> factory()                (brand-new user, zero state)
+    checkin(uid, state, step)
+                 ──> persist FIRST (write-through), then warm-cache (LRU)
+
+`checkin` is write-through: the session is durable the moment it leaves the
+fleet, so the LRU warm cache is purely a re-admission fast path and can drop
+entries without I/O.  Persistence rides on `checkpoint.manager` unchanged:
+each session gets its own directory ``<root>/<uid>/`` with the standard
+``step_*/manifest.json`` layout, atomic LATEST pointer, and keep-K gc — a
+session checkpoint has exactly the same crash-safety contract as a training
+checkpoint, and an evicted user's synapses come back bit-identical on
+re-admission (pinned in tests/test_serving.py).  With ``root=None`` the
+store archives to host RAM instead (same API, process-lifetime durability)
+for tests and ephemeral pools.
+"""
+from __future__ import annotations
+
+import os
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager, latest_step
+
+
+class SessionStore:
+    """Durable per-user plastic state behind an LRU warm cache.
+
+    Args:
+      root:     directory for durable persistence (one subdirectory per
+                user, `checkpoint.manager` layout inside).  ``None``
+                archives evicted state in host RAM instead.
+      capacity: max sessions held in the warm cache; beyond it the least-
+                recently-used entry is dropped (no I/O — `checkin` already
+                persisted it).  ``None`` = unbounded cache.
+      keep:     checkpoints retained per session (CheckpointManager keep-K).
+    """
+
+    def __init__(self, root: Optional[str] = None,
+                 capacity: Optional[int] = None, keep: int = 2):
+        self.root = root
+        self.capacity = capacity
+        self.keep = keep
+        self._warm: "OrderedDict[str, Tuple[Any, int]]" = OrderedDict()
+        self._archive: Dict[str, Tuple[Any, int]] = {}   # root=None fallback
+        self._managers: Dict[str, CheckpointManager] = {}
+        # counters the serving benchmark reports
+        self.warm_hits = 0
+        self.restores = 0
+        self.creates = 0
+
+    # ---- ownership -------------------------------------------------------
+
+    def __contains__(self, uid: str) -> bool:
+        return uid in self._warm
+
+    @property
+    def cached(self) -> list:
+        """Warm-cached uids, least-recently-used first."""
+        return list(self._warm)
+
+    def known(self, uid: str) -> bool:
+        """True if `uid` has any state (warm, archived, or on disk)."""
+        if uid in self._warm or uid in self._archive:
+            return True
+        return (self.root is not None
+                and latest_step(os.path.join(self.root, str(uid)))
+                is not None)
+
+    def checkout(self, uid: str, factory: Callable[[], Any]
+                 ) -> Tuple[Any, int]:
+        """Return ``(state, step)`` for `uid`; the caller owns it exclusively
+        until `checkin`.
+
+        Resolution order: warm cache (entry removed — no stale second copy
+        can be handed out while the session lives in a fleet slot) ->
+        durable store (restored into the structure of ``factory()``) ->
+        ``factory()`` itself (fresh zero state, step 0).
+        """
+        if uid in self._warm:
+            self.warm_hits += 1
+            return self._warm.pop(uid)
+        if self.root is not None:
+            mgr = self._manager(uid)
+            if mgr.latest_step() is not None:
+                state, step, _ = mgr.restore(factory())
+                self.restores += 1
+                return state, int(step)
+        elif uid in self._archive:
+            self.restores += 1
+            return self._archive[uid]
+        self.creates += 1
+        return factory(), 0
+
+    def checkin(self, uid: str, state: Any, step: int) -> None:
+        """Return a session to the store: persist FIRST, then warm-cache."""
+        self.persist(uid, state, step)
+        self._warm[uid] = (state, int(step))
+        self._warm.move_to_end(uid)
+        while self.capacity is not None and len(self._warm) > self.capacity:
+            self._warm.popitem(last=False)       # already durable; no I/O
+
+    # ---- durability ------------------------------------------------------
+
+    def persist(self, uid: str, state: Any, step: int) -> None:
+        """Durably write one session snapshot."""
+        if self.root is None:
+            # host-RAM archive: snapshot to numpy so later donation of the
+            # device buffers cannot corrupt the archived copy
+            self._archive[uid] = (
+                jax.tree.map(lambda a: np.asarray(jax.device_get(a)), state),
+                int(step))
+            return
+        self._manager(uid).save(int(step), state)
+
+    def _manager(self, uid: str) -> CheckpointManager:
+        if uid not in self._managers:
+            self._managers[uid] = CheckpointManager(
+                os.path.join(self.root, str(uid)), keep=self.keep)
+        return self._managers[uid]

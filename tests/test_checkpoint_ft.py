@@ -1,4 +1,5 @@
 """Checkpointing, fault tolerance, elastic restore."""
+import dataclasses
 import os
 
 import jax
@@ -7,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.core import snn
 from repro.distributed.ft import (FaultTolerantRunner, StragglerMonitor,
                                   loss_is_bad)
 
@@ -59,6 +61,63 @@ class TestCheckpoint:
         sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
         out, _, _ = load_checkpoint(str(tmp_path), tree, shardings=sh)
         assert out["w"].sharding == NamedSharding(mesh, P())
+
+
+class TestRegisteredDataclassCheckpoint:
+    """checkpoint.manager round-trips registered-dataclass pytrees — the
+    `NetworkState` (tuple-of-array fields) the SessionStore persists per
+    user — bit-identically, on the session directory layout."""
+
+    def _state(self, seed=0):
+        cfg = snn.SNNConfig(layer_sizes=(6, 12, 4))
+        z = snn.init_state(cfg)
+        ks = jax.random.split(jax.random.PRNGKey(seed), len(z.w))
+        return cfg, dataclasses.replace(
+            z,
+            w=tuple(0.2 * jax.random.normal(k, w.shape)
+                    for k, w in zip(ks, z.w)),
+            t=jnp.asarray(9, jnp.int32))
+
+    def test_networkstate_roundtrip_bit_identical(self, tmp_path):
+        cfg, st = self._state()
+        save_checkpoint(str(tmp_path), 9, st)
+        out, step, _ = load_checkpoint(str(tmp_path), snn.init_state(cfg))
+        assert step == 9
+        assert type(out) is type(st) and len(out.w) == len(st.w)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(out)):
+            assert np.asarray(a).dtype == np.asarray(b).dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_continuation_after_restore_is_bit_identical(self, tmp_path):
+        """Restore -> step must equal step-without-the-detour: the round
+        trip may not perturb a single bit of the subsequent trajectory."""
+        cfg, st = self._state(1)
+        theta = snn.init_theta(cfg, jax.random.PRNGKey(2))
+        drive = jax.random.normal(jax.random.PRNGKey(3), (6,))
+        save_checkpoint(str(tmp_path), 1, st)
+        restored, _, _ = load_checkpoint(str(tmp_path), snn.init_state(cfg))
+        s1, o1 = snn.timestep(cfg, st, theta, drive)
+        s2, o2 = snn.timestep(cfg, restored, theta, drive)
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+        for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_session_layout_gc_and_latest(self, tmp_path):
+        """keep-K gc + LATEST on the per-user directory the SessionStore
+        uses (<root>/<uid>/step_*): repeated checkins rotate checkpoints."""
+        from repro.serving import SessionStore
+        cfg, st = self._state(2)
+        store = SessionStore(root=str(tmp_path), keep=2)
+        for step in (1, 2, 3, 4):
+            store.checkin("alice", st, step)
+        mgr = CheckpointManager(str(tmp_path / "alice"), keep=2)
+        assert mgr.all_steps() == [3, 4]           # keep-K rotated
+        assert mgr.latest_step() == 4              # LATEST pointer current
+        assert (tmp_path / "alice" / "LATEST").exists()
+        # a second user's directory is independent
+        store.checkin("bob", st, 7)
+        assert CheckpointManager(str(tmp_path / "bob")).latest_step() == 7
+        assert mgr.latest_step() == 4
 
 
 class TestStraggler:

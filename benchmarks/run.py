@@ -1,6 +1,6 @@
 """Benchmark entry point: one harness per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
+    PYTHONPATH=src python -m benchmarks.run [--quick | --smoke] [--check]
 
   adaptation        Fig. 3   plasticity vs weight-trained generalization
   engine_breakdown  Table I  per-engine FLOPs/bytes/roofline latency
@@ -9,27 +9,135 @@
   fleet_throughput  serving  native batched-weights launch vs vmap recipe
   serving_churn     serving  session churn into a fixed slot pool (pinned
                              zero recompiles + evict/restore bit-equality)
+  quant_parity      fixed-pt float-vs-quant control parity + int8 pool bytes
+                             (asserted bounds; bit-equal across backends)
   roofline          Roofline table from the dry-run artifacts (if present)
+
+``--check`` is the bench DRIFT GATE (CI): after the run, every checked-in
+``benchmarks/results/<name>.json`` must have a freshly-written counterpart
+(``<name>_smoke.json`` under --smoke, or an overwritten canonical file)
+whose SCHEMA covers the checked-in one — recursive key paths plus backend
+(``impl``/``impls``) coverage, never timings.  A bench that silently stops
+producing a cell (a dropped key, a lost backend, a bench that stopped
+writing at all) fails CI instead of rotting unnoticed.
 """
 from __future__ import annotations
 
+import glob
+import json
+import os
 import sys
 import time
 
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+# ---- drift gate ------------------------------------------------------------
+
+def _schema_paths(obj, prefix=""):
+    """Recursive key paths of a JSON document; list elements merge under
+    '[]' so a sweep's schema is the union of its rows' keys."""
+    paths = set()
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            p = f"{prefix}.{k}" if prefix else str(k)
+            paths.add(p)
+            paths |= _schema_paths(v, p)
+    elif isinstance(obj, list):
+        for el in obj:
+            paths |= _schema_paths(el, prefix + "[]")
+    return paths
+
+
+def _impl_values(obj):
+    """Backend coverage: every value reachable under an 'impl'/'impls' key."""
+    found = set()
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if k in ("impl", "impls"):
+                vals = v if isinstance(v, list) else [v]
+                found |= {str(x) for x in vals}
+            else:
+                found |= _impl_values(v)
+    elif isinstance(obj, list):
+        for el in obj:
+            found |= _impl_values(el)
+    return found
+
+
+def check_drift(reference: dict, started_at: float) -> list:
+    """Compare fresh smoke outputs against the checked-in result schemas.
+
+    `reference` maps canonical stem -> parsed checked-in JSON (snapshotted
+    BEFORE the benches ran — quick-mode benches overwrite their canonical
+    files in place).  Returns a list of human-readable failures.
+    """
+    failures = []
+    for stem, ref in sorted(reference.items()):
+        fresh = None
+        # smoke runs write <stem>_smoke.json, capped full runs (the
+        # harness's --max-batch/--steps bounds) write <stem>_capped.json,
+        # quick-mode benches overwrite the canonical file in place
+        for cand in (os.path.join(RESULTS, f"{stem}_smoke.json"),
+                     os.path.join(RESULTS, f"{stem}_capped.json"),
+                     os.path.join(RESULTS, f"{stem}.json")):
+            if (os.path.exists(cand)
+                    and os.path.getmtime(cand) >= started_at):
+                with open(cand) as f:
+                    fresh = json.load(f)
+                break
+        if fresh is None:
+            failures.append(
+                f"{stem}: no fresh output (expected {stem}_smoke.json or an "
+                f"overwritten {stem}.json) — the bench stopped writing "
+                "results")
+            continue
+        missing = _schema_paths(ref) - _schema_paths(fresh)
+        if missing:
+            failures.append(
+                f"{stem}: schema cells missing from the fresh output: "
+                f"{sorted(missing)}")
+        lost = _impl_values(ref) - _impl_values(fresh)
+        if lost:
+            failures.append(
+                f"{stem}: backend coverage lost: {sorted(lost)}")
+    return failures
+
+
+def _reference_results() -> dict:
+    ref = {}
+    for path in glob.glob(os.path.join(RESULTS, "*.json")):
+        stem = os.path.splitext(os.path.basename(path))[0]
+        if stem.endswith("_smoke") or "_smoke_" in stem or \
+                stem.endswith("_capped"):
+            continue
+        with open(path) as f:
+            ref[stem] = json.load(f)
+    return ref
+
+
+# ---- harness ---------------------------------------------------------------
 
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
     quick = "--quick" in argv or "--smoke" in argv
+    check = "--check" in argv
+    reference = _reference_results() if check else {}
     t0 = time.time()
     failures = []
 
     from benchmarks import (adaptation, engine_breakdown, fleet_throughput,
-                            latency, mnist_throughput, roofline,
-                            serving_churn)
+                            latency, mnist_throughput, quant_parity,
+                            roofline, serving_churn)
 
     for name, fn in (
         ("engine_breakdown", lambda: engine_breakdown.main(quick=quick)),
-        ("latency", lambda: latency.main(quick=quick)),
+        # latency's checked-in artifact validates the TPU program (the
+        # canonical results/latency.json is impl=pallas-interpret); the
+        # harness runs the same backend so the drift gate's coverage check
+        # compares like with like.
+        ("latency",
+         lambda: latency.main(quick=quick, impl="pallas-interpret")),
         ("mnist_throughput", lambda: mnist_throughput.main(quick=quick)),
         ("adaptation", lambda: adaptation.main(quick=quick)),
         ("fleet_throughput",
@@ -38,16 +146,32 @@ def main(argv=None):
         ("serving_churn",
          lambda: serving_churn.main(
              ["--smoke"] if quick else ["--steps", "100"])),
+        ("quant_parity",
+         lambda: quant_parity.main(["--smoke"] if quick else [])),
         ("roofline_single", lambda: roofline.main(["--mesh", "single"])),
         ("roofline_multi", lambda: roofline.main(["--mesh", "multi"])),
     ):
         print(f"\n===== {name} =====")
         try:
-            fn()
+            rc = fn()
+            # benches with asserted bounds return an int exit code; the
+            # older harnesses return their results dict (not a failure)
+            if isinstance(rc, int) and rc:
+                failures.append((name, f"exit code {rc}"))
         except Exception as e:  # keep the harness running; report at end
             import traceback
             traceback.print_exc()
             failures.append((name, repr(e)))
+
+    if check:
+        print("\n===== drift gate =====")
+        drift = check_drift(reference, t0)
+        for msg in drift:
+            print("DRIFT:", msg)
+        if not drift:
+            print(f"all {len(reference)} checked-in result schemas covered "
+                  "by fresh outputs")
+        failures += [("drift-gate", m) for m in drift]
 
     print(f"\nbenchmarks done in {time.time() - t0:.0f}s; "
           f"{len(failures)} failures: {failures}")

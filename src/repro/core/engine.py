@@ -50,6 +50,7 @@ import jax.numpy as jnp
 
 from repro.kernels.plasticity import kernel as _kernel
 from repro.kernels.plasticity import ref as _ref
+from repro.kernels.plasticity.quant import QuantConfig
 
 IMPLS = ("xla", "pallas", "pallas-interpret")
 
@@ -74,6 +75,7 @@ class LayerState:
     trace_pre: jax.Array                # (N,) | (B, N)
     trace_post: jax.Array               # (M,) | (B, M)
     theta: Optional[jax.Array] = None   # (4, N, M) packed rule coefficients
+    w_scale: Optional[jax.Array] = None  # () | (B,) int8 weight scale (quant)
 
 
 @jax.tree_util.register_dataclass
@@ -91,6 +93,10 @@ class NetworkState:
     v: Tuple[jax.Array, ...]
     trace: Tuple[jax.Array, ...]
     t: jax.Array
+    # Fixed-point mode only: per-layer int8 weight scales (() shared /
+    # (B,) fleet — one scale per slot).  Empty tuple in float mode, so the
+    # pytree stays leaf-compatible with pre-quant states and checkpoints.
+    w_scale: Tuple[jax.Array, ...] = ()
 
     @property
     def num_layers(self) -> int:
@@ -99,7 +105,8 @@ class NetworkState:
     def layer(self, i: int, theta=None) -> LayerState:
         """View layer i as a LayerState (traces must be current-timestep)."""
         return LayerState(w=self.w[i], v=self.v[i], trace_pre=self.trace[i],
-                          trace_post=self.trace[i + 1], theta=theta)
+                          trace_post=self.trace[i + 1], theta=theta,
+                          w_scale=self.w_scale[i] if self.w_scale else None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,13 +121,15 @@ class EngineParams:
     plastic: bool = True
     spiking: bool = True        # False => leaky readout (event = tanh(V))
     block_m: int = 128          # Pallas postsynaptic tile width
+    quant: Optional[QuantConfig] = None  # fixed-point mode (None = float32)
 
 
 def layer_step(state: LayerState, x: jax.Array, *,
                params: EngineParams = EngineParams(),
                impl: str = "xla",
                teach: Optional[jax.Array] = None,
-               active: Optional[jax.Array] = None
+               active: Optional[jax.Array] = None,
+               seed: Optional[jax.Array] = None
                ) -> tuple[LayerState, jax.Array]:
     """One fused forward+plasticity step for one layer.
 
@@ -140,6 +149,10 @@ def layer_step(state: LayerState, x: jax.Array, *,
              This is the contract the session-serving scheduler uses to run
              a partially occupied fixed-shape slot pool without recompiling
              or letting vacant slots drift.
+      seed:  fixed-point mode only — the step counter driving the
+             deterministic stochastic round of dw (scalar; fleet mode takes
+             a ``(B,)`` vector of per-SESSION counters so a session's
+             update stream is invariant to its slot).  Defaults to 0.
 
     Returns:
       ``(new_state, out)`` — ``out`` is the layer's output events: spikes for
@@ -148,9 +161,44 @@ def layer_step(state: LayerState, x: jax.Array, *,
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
     plastic = params.plastic and state.theta is not None
-    kw = dict(tau_m=params.tau_m, v_th=params.v_th, v_reset=params.v_reset,
-              trace_decay=params.trace_decay, w_clip=params.w_clip,
-              plastic=plastic, spiking=params.spiking)
+    qc = params.quant
+    if qc is not None:
+        # Loud contracts: the fixed-point datapath implements power-of-two
+        # dynamics; a float EngineParams that silently disagrees would make
+        # "float vs quant" comparisons measure the wrong thing.
+        if params.tau_m != qc.tau_m:
+            raise ValueError(
+                f"quant mode implements tau_m = 2**tau_shift = {qc.tau_m}; "
+                f"set EngineParams.tau_m to match (got {params.tau_m})")
+        if abs(params.trace_decay - qc.decay) > 1e-9:
+            raise ValueError(
+                f"quant mode implements trace_decay = 1 - 2**-trace_shift "
+                f"= {qc.decay}; set EngineParams.trace_decay to match "
+                f"(got {params.trace_decay})")
+        checks = [("w", state.w, jnp.int8), ("x", x, jnp.int32),
+                  ("v", state.v, jnp.int32),
+                  ("trace_pre", state.trace_pre, jnp.int32),
+                  ("trace_post", state.trace_post, jnp.int32)]
+        if teach is not None:
+            # a float teach would be silently truncated toward zero by the
+            # fixed-point cast (|teach| < 1 -> exactly 0); demand the same
+            # int32 event-bus format as every other operand
+            checks.append(("teach", teach, jnp.int32))
+        for name, arr, want in checks:
+            if arr.dtype != want:
+                raise ValueError(
+                    f"quant mode needs {name} of dtype {jnp.dtype(want).name} "
+                    f"(build state with snn.init_state on a quant config or "
+                    f"snn.quantize_state; quantize drive/teach with "
+                    f"kernels.plasticity.quant.to_fixed); got {arr.dtype}")
+        kw = dict(qcfg=qc, v_th=params.v_th, v_reset=params.v_reset,
+                  w_clip=params.w_clip, plastic=plastic,
+                  spiking=params.spiking, seed=seed)
+    else:
+        kw = dict(tau_m=params.tau_m, v_th=params.v_th,
+                  v_reset=params.v_reset, trace_decay=params.trace_decay,
+                  w_clip=params.w_clip, plastic=plastic,
+                  spiking=params.spiking)
 
     fleet = state.w.ndim == 3                   # fleet: per-request weights
     if fleet:
@@ -182,20 +230,35 @@ def layer_step(state: LayerState, x: jax.Array, *,
             "active slot masks are a fleet-mode (w (B, N, M)) contract; "
             f"got w {state.w.shape} with an active mask")
 
+    # Select the backend function; the quant variants take the per-tile
+    # weight scale as an extra positional between w and theta.
+    if qc is not None:
+        w_scale = (state.w_scale if state.w_scale is not None
+                   else jnp.float32(qc.w_scale))
+        scale_args = (w_scale,)
+        fn = {("xla", False): _ref.dual_engine_step_q,
+              ("xla", True): _ref.dual_engine_fleet_step_q,
+              ("pallas", False): _kernel.dual_engine_step_q_pallas,
+              ("pallas", True): _kernel.dual_engine_fleet_step_q_pallas}
+    else:
+        scale_args = ()
+        fn = {("xla", False): _ref.dual_engine_step,
+              ("xla", True): _ref.dual_engine_fleet_step,
+              ("pallas", False): _kernel.dual_engine_step_pallas,
+              ("pallas", True): _kernel.dual_engine_fleet_step_pallas}
     if impl == "xla":
-        fn = _ref.dual_engine_fleet_step if fleet else _ref.dual_engine_step
+        fn = fn[("xla", fleet)]
         spikes, v, tpost, w = fn(
-            x, state.w, state.theta, state.v, state.trace_pre,
+            x, state.w, *scale_args, state.theta, state.v, state.trace_pre,
             state.trace_post, teach=teach, **kw)
     else:
         # The Pallas kernels are rank-(B, N); promote unbatched state to B=1.
         unbatched = not fleet and x.ndim == 1
         up = (lambda a: a[None]) if unbatched else (lambda a: a)
-        fn = (_kernel.dual_engine_fleet_step_pallas if fleet
-              else _kernel.dual_engine_step_pallas)
+        fn = fn[("pallas", fleet)]
         spikes, v, tpost, w = fn(
-            up(x), state.w, state.theta, up(state.v), up(state.trace_pre),
-            up(state.trace_post),
+            up(x), state.w, *scale_args, state.theta, up(state.v),
+            up(state.trace_pre), up(state.trace_post),
             teach=None if teach is None else up(teach),
             block_m=params.block_m, interpret=(impl == "pallas-interpret"),
             **kw)

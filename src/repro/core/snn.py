@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from repro.core import engine
 from repro.core import plasticity as P
 from repro.core.engine import NetworkState
+from repro.kernels.plasticity import quant as Q
+from repro.kernels.plasticity.quant import QuantConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +65,13 @@ class SNNConfig:
     layer_sizes = (obs_dim, *hidden..., act_dim); the stack depth is generic
     — (16, 128, 8) is the paper's control net, (784, 1024, 10) MNIST.
     ``impl`` selects the PlasticEngine backend every layer step runs on.
+
+    ``quant`` switches the whole network onto the FPGA-faithful fixed-point
+    datapath (int8 weights + per-tile scale, int32 membrane/trace, integer
+    weight updates — scheme in kernels/plasticity/ops.py).  Quant configs
+    must set ``trace_decay`` to the power-of-two decay the hardware
+    implements (``QuantConfig().decay`` = 0.75) — the engine raises a loud
+    ValueError otherwise; use `quant_config()` to get a consistent pair.
     """
     layer_sizes: Sequence[int] = (16, 128, 8)
     timesteps: int = 4                      # SNN timesteps per control step
@@ -75,6 +84,7 @@ class SNNConfig:
     plastic: bool = True                    # False => fixed (weight-trained) SNN
     impl: str = "xla"                       # engine backend (see engine.IMPLS)
     block_m: int = 128                      # Pallas postsynaptic tile width
+    quant: Optional[QuantConfig] = None     # fixed-point mode (None = float32)
 
     @property
     def num_layers(self) -> int:
@@ -92,7 +102,24 @@ class SNNConfig:
             tau_m=self.lif.tau_m, v_th=self.lif.v_threshold,
             v_reset=self.lif.v_reset, trace_decay=self.trace_decay,
             w_clip=self.w_clip, plastic=self.plastic,
-            spiking=(not last) or self.spiking_readout, block_m=self.block_m)
+            spiking=(not last) or self.spiking_readout, block_m=self.block_m,
+            quant=self.quant)
+
+
+def quant_config(base: Optional[SNNConfig] = None,
+                 qc: Optional[QuantConfig] = None, **overrides) -> SNNConfig:
+    """An `SNNConfig` consistently switched onto the fixed-point datapath.
+
+    Sets ``quant`` and snaps ``trace_decay``/``lif.tau_m`` to the power-of-
+    two dynamics the hardware implements (the engine refuses silently
+    mismatched float params).  ``base`` defaults to ``SNNConfig()``;
+    ``overrides`` are forwarded to `dataclasses.replace`.
+    """
+    base = SNNConfig() if base is None else base
+    qc = QuantConfig() if qc is None else qc
+    return dataclasses.replace(
+        base, quant=qc, trace_decay=qc.decay,
+        lif=dataclasses.replace(base.lif, tau_m=qc.tau_m), **overrides)
 
 
 def init_state(cfg: SNNConfig, batch: Optional[int] = None,
@@ -112,18 +139,62 @@ def init_state(cfg: SNNConfig, batch: Optional[int] = None,
         raise ValueError("fleet=True requires batch (one weight set per "
                          "request stream)")
 
-    def z(*shape):
-        s = shape if batch is None else (batch, *shape)
-        return jnp.zeros(s, cfg.dtype)
+    qc = cfg.quant
+    w_dtype = jnp.int8 if qc is not None else cfg.dtype
+    s_dtype = jnp.int32 if qc is not None else cfg.dtype
 
-    wz = z if fleet else (lambda *shape: jnp.zeros(shape, cfg.dtype))
+    def z(*shape, dtype=s_dtype):
+        s = shape if batch is None else (batch, *shape)
+        return jnp.zeros(s, dtype)
+
+    wz = ((lambda *shape: z(*shape, dtype=w_dtype)) if fleet
+          else (lambda *shape: jnp.zeros(shape, w_dtype)))
+    if qc is None:
+        w_scale = ()
+    elif fleet:
+        # per-SLOT weight scale: travels with the session through
+        # gather/scatter, persistence, and restore
+        w_scale = tuple(jnp.full((batch,), qc.w_scale, jnp.float32)
+                        for _ in range(cfg.num_layers))
+    else:
+        w_scale = tuple(jnp.float32(qc.w_scale)
+                        for _ in range(cfg.num_layers))
     sizes = cfg.layer_sizes
     return NetworkState(
         w=tuple(wz(sizes[i], sizes[i + 1]) for i in range(cfg.num_layers)),
         v=tuple(z(sizes[i + 1]) for i in range(cfg.num_layers)),
         trace=tuple(z(sizes[i]) for i in range(len(sizes))),
         t=jnp.zeros((), jnp.int32),
+        w_scale=w_scale,
     )
+
+
+def quantize_state(cfg: SNNConfig, state: NetworkState) -> NetworkState:
+    """Migrate a float `NetworkState` onto the fixed-point representation.
+
+    The sanctioned path for admitting a float32 session into an int8 pool
+    (SessionStore.checkout REFUSES silently casting one): weights land on
+    the int8 grid ``2**-w_frac_bits`` via `optim.compression.compress_int8`
+    with that FIXED scale; membranes/traces go to int32 fixed point.
+    Lossy by exactly one rounding, like any hardware deployment.
+    """
+    qc = cfg.quant
+    if qc is None:
+        raise ValueError("quantize_state needs cfg.quant set (see "
+                         "snn.quant_config)")
+    from repro.optim.compression import compress_int8
+    leading = state.w[0].ndim == 3       # fleet pool: scale per slot
+    w_q, scales = [], []
+    for w in state.w:
+        q, s = compress_int8(w, scale=qc.w_scale)
+        w_q.append(q)
+        scales.append(jnp.full((w.shape[0],), s, jnp.float32) if leading
+                      else s)
+    return NetworkState(
+        w=tuple(w_q),
+        v=tuple(Q.to_fixed(v, qc) for v in state.v),
+        trace=tuple(Q.to_fixed(tr, qc) for tr in state.trace),
+        t=state.t, w_scale=tuple(scales))
 
 
 def init_theta(cfg: SNNConfig, key: jax.Array, scale: float = 0.01):
@@ -175,7 +246,8 @@ def encode(cfg: SNNConfig, obs: jax.Array, key: Optional[jax.Array], t: jax.Arra
 
 def timestep(cfg: SNNConfig, state: NetworkState, theta, drive: jax.Array,
              teach: Optional[jax.Array] = None,
-             active: Optional[jax.Array] = None
+             active: Optional[jax.Array] = None,
+             seed: Optional[jax.Array] = None
              ) -> tuple[NetworkState, jax.Array]:
     """One SNN timestep: every layer routed through the PlasticEngine.
 
@@ -201,11 +273,32 @@ def timestep(cfg: SNNConfig, state: NetworkState, theta, drive: jax.Array,
     between swap-out and the next swap-in.  ``state.t`` is the shared pool
     clock and still advances; per-session step counts are the scheduler's
     (host-side) bookkeeping.
+
+    `seed` (fixed-point mode): the step counter driving the deterministic
+    stochastic round of dw — scalar, or ``(B,)`` per-SESSION counters in
+    fleet serving (the scheduler passes its per-slot step counts, so a
+    session's rounding stream follows the session, not the pool clock).
+    Defaults to the shared ``state.t``.  Float mode ignores it.
+
+    In quant mode `drive`/`teach` are ordinary floats — quantized to the
+    fixed-point event bus here — and the returned output is dequantized
+    back to float, so callers (controller_step, classify_window, the
+    scheduler) are representation-agnostic.
     """
+    qc = cfg.quant
     w, v, tr = list(state.w), list(state.v), list(state.trace)
-    x = drive
-    # input trace: input drive acts as the presynaptic event for L1
-    tr0_new = P.update_trace(tr[0], x, cfg.trace_decay)
+    if qc is not None:
+        x = Q.to_fixed(drive, qc)
+        teach = None if teach is None else Q.to_fixed(teach, qc)
+        base_seed = (jnp.asarray(seed, jnp.int32) if seed is not None
+                     else state.t.astype(jnp.int32))
+        # input trace: integer decay + accumulate (same datapath as layers)
+        tr0_new = Q.trace_update_q(tr[0], x, qc)
+    else:
+        x = drive
+        base_seed = None
+        # input trace: input drive acts as the presynaptic event for L1
+        tr0_new = P.update_trace(tr[0], x, cfg.trace_decay)
     if active is not None:
         tr0_new = jnp.where(active.astype(bool)[:, None], tr0_new, tr[0])
     tr[0] = tr0_new
@@ -214,14 +307,18 @@ def timestep(cfg: SNNConfig, state: NetworkState, theta, drive: jax.Array,
         last = i == cfg.num_layers - 1
         layer = engine.LayerState(
             w=w[i], v=v[i], trace_pre=tr[i], trace_post=tr[i + 1],
-            theta=theta[i] if cfg.plastic else None)
+            theta=theta[i] if cfg.plastic else None,
+            w_scale=state.w_scale[i] if state.w_scale else None)
         layer, out = engine.layer_step(
             layer, x, params=cfg.engine_params(i), impl=cfg.impl,
-            teach=teach if last else None, active=active)
+            teach=teach if last else None, active=active,
+            seed=None if base_seed is None else Q.fold_seed(base_seed, i))
         w[i], v[i], tr[i + 1] = layer.w, layer.v, layer.trace_post
         x = out
+    if qc is not None:
+        out = Q.from_fixed(out, qc)
     return NetworkState(w=tuple(w), v=tuple(v), trace=tuple(tr),
-                        t=state.t + 1), out
+                        t=state.t + 1, w_scale=state.w_scale), out
 
 
 def controller_step(cfg: SNNConfig, state: NetworkState, theta, obs: jax.Array,

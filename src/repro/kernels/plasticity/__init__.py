@@ -1,3 +1,4 @@
 from repro.kernels.plasticity.ops import dual_engine_step
+from repro.kernels.plasticity.quant import QuantConfig
 
-__all__ = ["dual_engine_step"]
+__all__ = ["dual_engine_step", "QuantConfig"]

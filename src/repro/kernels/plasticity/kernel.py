@@ -53,6 +53,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.plasticity import ALPHA, BETA, GAMMA, DELTA
+from repro.kernels.plasticity import quant as Q
 
 
 def _forward_engine(x, w, v_ref, tpost_ref, teach_ref, s_out, v_out,
@@ -298,6 +299,268 @@ def dual_engine_fleet_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
             jax.ShapeDtypeStruct((b, m), v.dtype),
             jax.ShapeDtypeStruct((b, m), trace_post.dtype),
             jax.ShapeDtypeStruct((b, n, m), w.dtype),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+
+# ---- fixed-point (quantized) kernels ---------------------------------------
+#
+# FPGA-faithful datapath (scheme in quant.py, docstring in ops.py): the
+# weight pool stays int8 in HBM and is promoted IN REGISTERS/VMEM only —
+# an int8 fleet pool holds ~4x more resident sessions per byte of HBM than
+# the float32 pool.  Both quant kernels call the SAME quant.py helpers as
+# the oracle, and every reduction is an integer reduction (exact, order
+# independent), so xla vs pallas(-interpret) parity is BIT equality on the
+# int32/int8 outputs, not an allclose.
+
+
+def _forward_engine_q(x, w_i32, scale, v_ref, tpost_ref, teach_ref,
+                      s_out, v_out, tpost_out, *, qcfg, v_th, v_reset,
+                      spiking, gate=None):
+    """Quantized Forward Engine body (shared + fleet): integer psum ->
+    integer neuron dynamics -> integer trace update.  Returns the fresh
+    postsynaptic trace (int32) the Plasticity Engine consumes."""
+    acc = jnp.dot(x, w_i32, preferred_element_type=jnp.int32)  # exact psum
+    i_fx = Q.current_fx(acc, scale, qcfg)
+    if teach_ref is not None:
+        i_fx = i_fx + teach_ref[...].astype(jnp.int32)
+    v = v_ref[...].astype(jnp.int32)
+    events, v_upd = Q.neuron_update_q(v, i_fx, qcfg, v_th, v_reset, spiking)
+    tpost = tpost_ref[...].astype(jnp.int32)
+    tpost_new = Q.trace_update_q(tpost, events, qcfg)
+    if gate is not None:
+        events = jnp.where(gate, events, jnp.zeros_like(events))
+        v_upd = jnp.where(gate, v_upd, v)
+        tpost_new = jnp.where(gate, tpost_new, tpost)
+    s_out[...] = events.astype(s_out.dtype)
+    v_out[...] = v_upd.astype(v_out.dtype)
+    tpost_out[...] = tpost_new.astype(tpost_out.dtype)
+    return tpost_new
+
+
+def _tile_flat_idx(n, bm, j, m_total):
+    """Flat (row * M + col) index of this (n, bm) weight tile — the GLOBAL
+    per-matrix index the deterministic stochastic round hashes, identical
+    to the oracle's full-matrix iota (slot-independent in fleet mode)."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, bm), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, bm), 1) + j * bm
+    return rows * m_total + cols
+
+
+def _dual_engine_kernel_q(x_ref, w_ref, scale_ref, v_ref, tpost_ref,
+                          seed_ref, *refs, qcfg, v_th, v_reset, w_clip,
+                          plastic, spiking, has_teach, batch, m_total, bm):
+    rest = list(refs)
+    theta_ref = rest.pop(0) if plastic else None
+    tpre_ref = rest.pop(0) if plastic else None
+    teach_ref = rest.pop(0) if has_teach else None
+    s_out, v_out, tpost_out, w_out = rest
+    scale = scale_ref[0, 0]
+    seed = seed_ref[0, 0]
+
+    x = x_ref[...].astype(jnp.int32)            # (B, N) fixed point
+    w_i32 = w_ref[...].astype(jnp.int32)        # (N, bm) int8 -> registers
+    tpost_new = _forward_engine_q(
+        x, w_i32, scale, v_ref, tpost_ref, teach_ref, s_out, v_out,
+        tpost_out, qcfg=qcfg, v_th=v_th, v_reset=v_reset, spiking=spiking)
+
+    if plastic:
+        tpre = tpre_ref[...].astype(jnp.int32)  # (B, N)
+        hebb_i = jnp.dot(tpre.T, tpost_new,
+                         preferred_element_type=jnp.int32)     # exact
+        dw = Q.dw_from_int_reductions(
+            hebb_i, tpre.sum(0), tpost_new.sum(0),
+            theta_ref[...].astype(jnp.float32), batch, qcfg)
+        idx = _tile_flat_idx(tpre.shape[1], bm, pl.program_id(0), m_total)
+        steps = Q.round_steps(dw / scale, seed, idx, qcfg)
+        qmax = Q.qclip(w_clip, scale)
+        w_out[...] = jnp.clip(w_i32 + steps, -qmax, qmax).astype(w_out.dtype)
+    else:
+        w_out[...] = w_i32.astype(w_out.dtype)
+
+
+def dual_engine_step_q_pallas(x, w, scale, theta, v, trace_pre, trace_post,
+                              *, qcfg, v_th: float = 1.0,
+                              v_reset: float = 0.0, w_clip: float = 4.0,
+                              plastic: bool = True, spiking: bool = True,
+                              teach=None, seed=None, block_m: int = 128,
+                              interpret: bool = False):
+    """Quantized shared-weight pallas-call.  Shapes/dtypes as in
+    ref.dual_engine_step_q (batched): x/v/traces int32 fixed point, w int8,
+    scale () f32, seed () int32."""
+    b, n = x.shape
+    n2, m = w.shape
+    assert n == n2, (x.shape, w.shape)
+    bm = min(block_m, m)
+    grid = (pl.cdiv(m, bm),)
+    has_teach = teach is not None
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    seed = jnp.asarray(0 if seed is None else seed, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(
+        _dual_engine_kernel_q, qcfg=qcfg, v_th=v_th, v_reset=v_reset,
+        w_clip=w_clip, plastic=plastic, spiking=spiking,
+        has_teach=has_teach, batch=b, m_total=m, bm=bm)
+
+    in_specs = [
+        pl.BlockSpec((b, n), lambda j: (0, 0)),        # x: full batch/fan-in
+        pl.BlockSpec((n, bm), lambda j: (0, j)),       # int8 w tile
+        pl.BlockSpec((1, 1), lambda j: (0, 0)),        # per-tile scale
+        pl.BlockSpec((b, bm), lambda j: (0, j)),       # v tile
+        pl.BlockSpec((b, bm), lambda j: (0, j)),       # post trace tile
+        pl.BlockSpec((1, 1), lambda j: (0, 0)),        # stochastic-round seed
+    ]
+    operands = [x, w, scale, v, trace_post, seed]
+    if plastic:
+        in_specs += [
+            pl.BlockSpec((4, n, bm), lambda j: (0, 0, j)),  # packed theta
+            pl.BlockSpec((b, n), lambda j: (0, 0)),         # pre trace
+        ]
+        operands += [theta, trace_pre]
+    if has_teach:
+        in_specs.append(pl.BlockSpec((b, bm), lambda j: (0, j)))
+        operands.append(teach)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((b, bm), lambda j: (0, j)),       # events (int32)
+            pl.BlockSpec((b, bm), lambda j: (0, j)),       # v out (int32)
+            pl.BlockSpec((b, bm), lambda j: (0, j)),       # post trace (int32)
+            pl.BlockSpec((n, bm), lambda j: (0, j)),       # w out (int8)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+            jax.ShapeDtypeStruct((n, m), jnp.int8),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+
+def _fleet_kernel_q(x_ref, w_ref, scale_ref, v_ref, tpost_ref, seed_ref,
+                    *refs, qcfg, v_th, v_reset, w_clip, plastic, spiking,
+                    has_teach, has_active, m_total, bm):
+    """Quantized fleet program: one request stream x one postsynaptic tile.
+
+    The stream's int8 weight tile is promoted to int32 in registers (the
+    (B, N, M) pool never leaves HBM as anything but int8); the per-SESSION
+    seed drives the stochastic round with the same slot-independent flat
+    index the oracle uses, so a session's update stream is invariant to
+    which slot it occupies."""
+    rest = list(refs)
+    theta_ref = rest.pop(0) if plastic else None
+    tpre_ref = rest.pop(0) if plastic else None
+    teach_ref = rest.pop(0) if has_teach else None
+    active_ref = rest.pop(0) if has_active else None
+    s_out, v_out, tpost_out, w_out = rest
+    gate = None if active_ref is None else active_ref[0, 0] > 0
+    scale = scale_ref[0, 0]
+    seed = seed_ref[0, 0]
+
+    x = x_ref[...].astype(jnp.int32)            # (1, N) this stream's events
+    w_i32 = w_ref[0].astype(jnp.int32)          # (N, bm) int8 -> registers
+    tpost_new = _forward_engine_q(
+        x, w_i32, scale, v_ref, tpost_ref, teach_ref, s_out, v_out,
+        tpost_out, qcfg=qcfg, v_th=v_th, v_reset=v_reset, spiking=spiking,
+        gate=gate)
+
+    if plastic:
+        tpre = tpre_ref[...].astype(jnp.int32)  # (1, N)
+        hebb_i = tpre[0][:, None] * tpost_new[0][None, :]   # exact int outer
+        dw = Q.dw_from_int_reductions(
+            hebb_i, tpre[0], tpost_new[0],
+            theta_ref[...].astype(jnp.float32), 1, qcfg)
+        idx = _tile_flat_idx(tpre.shape[1], bm, pl.program_id(0), m_total)
+        steps = Q.round_steps(dw / scale, seed, idx, qcfg)
+        qmax = Q.qclip(w_clip, scale)
+        w_new = jnp.clip(w_i32 + steps, -qmax, qmax)
+        if gate is not None:
+            w_new = jnp.where(gate, w_new, w_i32)   # dw gated: slot frozen
+        w_out[0] = w_new.astype(w_out.dtype)
+    else:
+        w_out[0] = w_i32.astype(w_out.dtype)
+
+
+def dual_engine_fleet_step_q_pallas(x, w, scale, theta, v, trace_pre,
+                                    trace_post, *, qcfg, v_th: float = 1.0,
+                                    v_reset: float = 0.0, w_clip: float = 4.0,
+                                    plastic: bool = True, spiking: bool = True,
+                                    teach=None, seed=None, active=None,
+                                    block_m: int = 128,
+                                    interpret: bool = False):
+    """Quantized fleet pallas-call.  Shapes as ref.dual_engine_fleet_step_q:
+    x (B,N) int32, w (B,N,M) int8 (stays int8 in HBM), scale (B,) f32 per
+    slot, theta (4,N,M) f32 shared, v/traces (B,.) int32, seed (B,) int32
+    per-session step counters, active (B,) slot mask."""
+    b, n = x.shape
+    b2, n2, m = w.shape
+    assert (b, n) == (b2, n2), (x.shape, w.shape)
+    if teach is not None and teach.ndim == 1:
+        teach = jnp.broadcast_to(teach, (b, teach.shape[0]))
+    if active is not None:
+        active = active.reshape(b, 1).astype(jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32)
+    if scale.ndim == 0:
+        scale = jnp.broadcast_to(scale, (b,))      # one scale per slot
+    scale = scale.reshape(b, 1)
+    if seed is None:
+        seed = jnp.zeros((b,), jnp.int32)
+    seed = jnp.asarray(seed, jnp.int32)
+    if seed.ndim == 0:
+        seed = jnp.broadcast_to(seed, (b,))        # one seed per session
+    seed = seed.reshape(b, 1)
+    bm = min(block_m, m)
+    grid = (pl.cdiv(m, bm), b)      # streams innermost: theta DMA elided
+    has_teach = teach is not None
+    has_active = active is not None
+
+    kernel = functools.partial(
+        _fleet_kernel_q, qcfg=qcfg, v_th=v_th, v_reset=v_reset,
+        w_clip=w_clip, plastic=plastic, spiking=spiking,
+        has_teach=has_teach, has_active=has_active, m_total=m, bm=bm)
+
+    in_specs = [
+        pl.BlockSpec((1, n), lambda j, i: (i, 0)),         # this stream's x
+        pl.BlockSpec((1, n, bm), lambda j, i: (i, 0, j)),  # int8 w tile
+        pl.BlockSpec((1, 1), lambda j, i: (i, 0)),         # per-slot scale
+        pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # v tile
+        pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # post trace tile
+        pl.BlockSpec((1, 1), lambda j, i: (i, 0)),         # per-session seed
+    ]
+    operands = [x, w, scale, v, trace_post, seed]
+    if plastic:
+        in_specs += [
+            pl.BlockSpec((4, n, bm), lambda j, i: (0, 0, j)),  # shared theta
+            pl.BlockSpec((1, n), lambda j, i: (i, 0)),         # pre trace
+        ]
+        operands += [theta, trace_pre]
+    if has_teach:
+        in_specs.append(pl.BlockSpec((1, bm), lambda j, i: (i, j)))
+        operands.append(teach)
+    if has_active:
+        in_specs.append(pl.BlockSpec((1, 1), lambda j, i: (i, 0)))
+        operands.append(active)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # events
+            pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # v out
+            pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # post trace
+            pl.BlockSpec((1, n, bm), lambda j, i: (i, 0, j)),  # w out (int8)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+            jax.ShapeDtypeStruct((b, n, m), jnp.int8),
         ],
         interpret=interpret,
     )(*operands)

@@ -13,36 +13,100 @@ Network-level code should not call this directly — `core.engine.layer_step`
 is the product entry point and adds LayerState plumbing and unbatched-state
 support.  This wrapper is the kernel-level API used by kernel tests and
 one-off comparisons.
+
+Fixed-point mode (``quant=QuantConfig(...)``)
+---------------------------------------------
+
+FireFly-P's headline numbers (8 us latency, 0.713 W, ~10K LUTs) come from a
+fixed-point datapath; passing a `quant.QuantConfig` runs that datapath
+instead of float32.  The scheme, end to end:
+
+  * **Weights** are int8 ``w_q`` with a per-tile fp32 scale ``w_scale``
+    (one scale per (N, M) weight matrix; in fleet mode one PER SLOT,
+    shape ``(B,)``): real weight = ``w_q * w_scale``.  The default scale is
+    the power of two ``2**-w_frac_bits`` (1/32), so the int8 grid spans the
+    paper's clip range (+-127/32 ~= +-3.97 for w_clip = 4) and dequant is a
+    shift on hardware.  The ``(B, N, M)`` fleet pool stays int8 in HBM —
+    ~4x more resident sessions per byte — and is promoted to int32 IN
+    REGISTERS inside the kernel (dequant-in-registers).
+  * **Membrane and traces** are int32 fixed point with ``frac_bits``
+    fractional bits; the inter-layer event bus is the same format (a spike
+    is ``2**frac_bits``).  Neuron dynamics are integer and multiplier-free:
+    ``v += (I - v) >> tau_shift`` (the paper's tau_m = 2), hard reset,
+    trace decay ``tp -= tp >> trace_shift`` (power-of-two decay
+    ``1 - 2**-trace_shift``).  Non-spiking readout layers emit the
+    saturating-linear event ``clip(v, -1, 1)`` (the piecewise-linear tanh
+    an FPGA ships).
+  * **Where dequant happens**: exactly twice per layer step, both
+    elementwise-in-registers — the psum accumulator ``x_fx @ w_q`` (an
+    EXACT integer matmul) is scaled by ``w_scale`` into membrane fixed
+    point, and the plasticity engine's dw (computed in f32 from exact
+    integer trace reductions) is divided by ``w_scale`` into int8 grid
+    units.  Weights themselves are never materialized in float.
+  * **Rounding**: dw -> integer grid steps uses a DETERMINISTIC stochastic
+    round — the uniform comes from an avalanche hash of (session step
+    counter ``seed``, flat weight index), never from the fleet slot — so
+    sub-grid updates accumulate unbiasedly while the whole path stays
+    bit-deterministic across backends AND across evict/restore into a
+    different slot.  ``w_q`` then advances by whole steps, clipped to
+    ``min(floor(w_clip / w_scale), 127)``.
+
+Because every reduction in the quant path is integer (order-independent)
+and every float op is elementwise, "xla" and "pallas(-interpret)" agree
+BIT-for-bit on the int32/int8 outputs — pinned in tests/test_quant.py.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
 from repro.kernels.plasticity import kernel as _kernel
 from repro.kernels.plasticity import ref as _ref
+from repro.kernels.plasticity.quant import QuantConfig
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("tau_m", "v_th", "v_reset", "trace_decay", "w_clip",
-                     "plastic", "spiking", "impl", "interpret", "block_m"))
+                     "plastic", "spiking", "impl", "interpret", "block_m",
+                     "quant"))
 def dual_engine_step(x, w, theta, v, trace_pre, trace_post, teach=None,
-                     active=None, *,
+                     active=None, w_scale=None, seed=None, *,
                      tau_m: float = 2.0, v_th: float = 1.0,
                      v_reset: float = 0.0, trace_decay: float = 0.8,
                      w_clip: float = 4.0, plastic: bool = True,
                      spiking: bool = True, impl: str = "xla",
-                     interpret: bool = False, block_m: int = 128):
-    kw = dict(tau_m=tau_m, v_th=v_th, v_reset=v_reset,
-              trace_decay=trace_decay, w_clip=w_clip, plastic=plastic,
-              spiking=spiking, teach=teach)
+                     interpret: bool = False, block_m: int = 128,
+                     quant: Optional[QuantConfig] = None):
     fleet = w.ndim == 3
     if active is not None and not fleet:
         raise ValueError(
             "active slot masks are a fleet-mode (w (B, N, M)) contract; "
             f"got w {w.shape} with an active mask")
+
+    if quant is not None:
+        if w_scale is None:
+            w_scale = quant.w_scale
+        kw = dict(qcfg=quant, v_th=v_th, v_reset=v_reset, w_clip=w_clip,
+                  plastic=plastic, spiking=spiking, teach=teach, seed=seed)
+        if fleet:
+            kw["active"] = active
+        if impl in ("pallas", "pallas-interpret"):
+            fn = (_kernel.dual_engine_fleet_step_q_pallas if fleet
+                  else _kernel.dual_engine_step_q_pallas)
+            return fn(x, w, w_scale, theta, v, trace_pre, trace_post,
+                      block_m=block_m,
+                      interpret=interpret or impl == "pallas-interpret",
+                      **kw)
+        fn = (_ref.dual_engine_fleet_step_q if fleet
+              else _ref.dual_engine_step_q)
+        return fn(x, w, w_scale, theta, v, trace_pre, trace_post, **kw)
+
+    kw = dict(tau_m=tau_m, v_th=v_th, v_reset=v_reset,
+              trace_decay=trace_decay, w_clip=w_clip, plastic=plastic,
+              spiking=spiking, teach=teach)
     if fleet:
         kw["active"] = active
     if impl in ("pallas", "pallas-interpret"):

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.plasticity import ALPHA, BETA, GAMMA, DELTA
+from repro.kernels.plasticity import quant as Q
 
 
 def dual_engine_step(x, w, theta, v, trace_pre, trace_post, *,
@@ -138,4 +139,107 @@ def dual_engine_fleet_step(x, w, theta, v, trace_pre, trace_post, *,
     v_out = jnp.where(a[:, None], v_out, v.astype(v_out.dtype))
     tp_new = jnp.where(a[:, None], tp_new, trace_post.astype(tp_new.dtype))
     w_new = jnp.where(a[:, None, None], w_new, w.astype(w_new.dtype))
+    return events, v_out, tp_new, w_new
+
+
+# ---- fixed-point (quantized) oracle ----------------------------------------
+
+def dual_engine_step_q(x, w, scale, theta, v, trace_pre, trace_post, *,
+                       qcfg: Q.QuantConfig, v_th: float = 1.0,
+                       v_reset: float = 0.0, w_clip: float = 4.0,
+                       plastic: bool = True, spiking: bool = True,
+                       teach=None, seed=None):
+    """Fixed-point oracle (FPGA-faithful datapath; see quant.py for scheme).
+
+    Shapes as the float oracle, but dtypes carry the mode: x (B,N)|(N,)
+    int32 fixed point, w (N,M) int8, scale () f32 per-tile weight scale,
+    v/traces int32 fixed point, theta (4,N,M) f32, teach int32 fixed point,
+    seed () int32 (the session step counter driving the deterministic
+    stochastic round).  Returns (events, v_out, trace_post_new, w_new) with
+    events/v/trace int32 and w_new int8.
+
+    Every reduction is integer (exact), every float op elementwise — this is
+    what the Pallas quant kernel must (and does) match BIT-for-bit.
+    """
+    scale = jnp.asarray(scale, jnp.float32)
+    seed = jnp.asarray(0 if seed is None else seed, jnp.int32)
+    acc = jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32))   # exact psum
+    i_fx = Q.current_fx(acc, scale, qcfg)
+    if teach is not None:
+        i_fx = i_fx + teach.astype(jnp.int32)
+    events, v_out = Q.neuron_update_q(v.astype(jnp.int32), i_fx, qcfg,
+                                      v_th, v_reset, spiking)
+    tp_new = Q.trace_update_q(trace_post.astype(jnp.int32), events, qcfg)
+
+    if plastic:
+        tpre, tpo = trace_pre.astype(jnp.int32), tp_new
+        if tpre.ndim == 1:
+            tpre, tpo = tpre[None], tpo[None]
+        b = tpre.shape[0]
+        hebb_i = jnp.dot(tpre.T, tpo)                         # exact int32
+        dw = Q.dw_from_int_reductions(hebb_i, tpre.sum(0), tpo.sum(0),
+                                      theta, b, qcfg)
+        n, m = w.shape
+        idx = (jax.lax.broadcasted_iota(jnp.int32, (n, m), 0) * m
+               + jax.lax.broadcasted_iota(jnp.int32, (n, m), 1))
+        steps = Q.round_steps(dw / scale, seed, idx, qcfg)
+        qmax = Q.qclip(w_clip, scale)
+        w_new = jnp.clip(w.astype(jnp.int32) + steps,
+                         -qmax, qmax).astype(jnp.int8)
+    else:
+        w_new = w
+
+    return events, v_out, tp_new, w_new
+
+
+def dual_engine_fleet_step_q(x, w, scale, theta, v, trace_pre, trace_post, *,
+                             qcfg: Q.QuantConfig, v_th: float = 1.0,
+                             v_reset: float = 0.0, w_clip: float = 4.0,
+                             plastic: bool = True, spiking: bool = True,
+                             teach=None, seed=None, active=None):
+    """Fixed-point fleet oracle: int8 per-request weights, per-slot scale.
+
+    Shapes: x (B,N) int32, w (B,N,M) int8, scale (B,) f32, theta (4,N,M)
+    f32 shared, v/traces (B,.) int32, teach (B,M)|(M,) int32 | None,
+    seed (B,) int32 per-SESSION step counters (slot-independent — the
+    stochastic-round stream belongs to the session, which is what makes
+    evict -> re-admit-into-any-slot bit-identical), active (B,) | None.
+
+    Defined as vmap of the unbatched quantized step (per-sample dw, shared
+    theta), exactly like the float fleet oracle; inactive slots select OLD
+    integer state wholesale (bit-frozen trivially — these are ints).
+    """
+    assert w.ndim == 3 and x.ndim == 2, (x.shape, w.shape)
+    b = x.shape[0]
+    scale = jnp.asarray(scale, jnp.float32)
+    if scale.ndim == 0:
+        scale = jnp.broadcast_to(scale, (b,))      # one scale per slot
+    seed = (jnp.zeros((b,), jnp.int32) if seed is None
+            else jnp.asarray(seed, jnp.int32))
+    if seed.ndim == 0:
+        seed = jnp.broadcast_to(seed, (b,))        # one seed per session
+    if teach is not None and teach.ndim == 1:
+        teach = jnp.broadcast_to(teach, (b, teach.shape[0]))
+    step = functools.partial(
+        dual_engine_step_q, qcfg=qcfg, v_th=v_th, v_reset=v_reset,
+        w_clip=w_clip, plastic=plastic, spiking=spiking)
+    if teach is None:
+        out = jax.vmap(
+            lambda xb, wb, sb, vb, tpb, tqb, sd:
+                step(xb, wb, sb, theta, vb, tpb, tqb, seed=sd)
+        )(x, w, scale, v, trace_pre, trace_post, seed)
+    else:
+        out = jax.vmap(
+            lambda xb, wb, sb, vb, tpb, tqb, sd, tb:
+                step(xb, wb, sb, theta, vb, tpb, tqb, seed=sd, teach=tb)
+        )(x, w, scale, v, trace_pre, trace_post, seed, teach)
+    if active is None:
+        return out
+    events, v_out, tp_new, w_new = out
+    a = active.reshape(-1).astype(bool)
+    assert a.shape[0] == b, (active.shape, x.shape)
+    events = jnp.where(a[:, None], events, jnp.zeros_like(events))
+    v_out = jnp.where(a[:, None], v_out, v.astype(v_out.dtype))
+    tp_new = jnp.where(a[:, None], tp_new, trace_post.astype(tp_new.dtype))
+    w_new = jnp.where(a[:, None, None], w_new, w)
     return events, v_out, tp_new, w_new

@@ -21,11 +21,23 @@ import jax
 import jax.numpy as jnp
 
 
-def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Symmetric per-tensor int8 quantization.  Returns (q int8, scale f32)."""
+def compress_int8(x: jax.Array, scale: jax.Array | float | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization.  Returns (q int8, scale f32).
+
+    ``scale=None`` (the gradient-compression default) derives the scale from
+    the tensor's absolute max.  Passing a FIXED ``scale`` quantizes onto a
+    known grid instead — that is the fixed-point-engine path
+    (`snn.quantize_state` migrating a float session onto the int8 weight
+    grid ``2**-w_frac_bits``), where the grid must not depend on the data so
+    the representation stays stable as weights learn.
+    """
     xf = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xf))
-    scale = jnp.maximum(amax, 1e-12) / 127.0
+    if scale is None:
+        amax = jnp.max(jnp.abs(xf))
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+    else:
+        scale = jnp.asarray(scale, jnp.float32)
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
     return q, scale
 

@@ -61,7 +61,10 @@ def slot_take(pool, slot):
 
 def _fleet_put(fleet: NetworkState, slot, user: NetworkState) -> NetworkState:
     """NetworkState-aware scatter: `t` is the shared pool clock, not a slot
-    row, so it is carried through instead of indexed."""
+    row, so it is carried through instead of indexed.  In a quantized pool
+    the per-layer ``w_scale`` rows are slot state like everything else —
+    a restored session brings its own scale into whatever slot it lands in
+    (the int8 payload is meaningless without it)."""
     return NetworkState(
         w=tuple(f.at[slot].set(u.astype(f.dtype))
                 for f, u in zip(fleet.w, user.w)),
@@ -69,7 +72,9 @@ def _fleet_put(fleet: NetworkState, slot, user: NetworkState) -> NetworkState:
                 for f, u in zip(fleet.v, user.v)),
         trace=tuple(f.at[slot].set(u.astype(f.dtype))
                     for f, u in zip(fleet.trace, user.trace)),
-        t=fleet.t)
+        t=fleet.t,
+        w_scale=tuple(f.at[slot].set(u.astype(f.dtype))
+                      for f, u in zip(fleet.w_scale, user.w_scale)))
 
 
 def _fleet_take(fleet: NetworkState, slot) -> NetworkState:
@@ -79,7 +84,8 @@ def _fleet_take(fleet: NetworkState, slot) -> NetworkState:
         w=tuple(f[slot] for f in fleet.w),
         v=tuple(f[slot] for f in fleet.v),
         trace=tuple(f[slot] for f in fleet.trace),
-        t=jnp.zeros((), jnp.int32))
+        t=jnp.zeros((), jnp.int32),
+        w_scale=tuple(f[slot] for f in fleet.w_scale))
 
 
 class FleetScheduler:
@@ -87,7 +93,12 @@ class FleetScheduler:
 
     Args:
       cfg:    `snn.SNNConfig` of the controller (``cfg.impl`` picks the
-              engine backend for the whole pool).
+              engine backend for the whole pool; ``cfg.quant`` — see
+              `snn.quant_config` — makes it a QUANTIZED pool: int8 weight
+              slots with per-slot scales, int32 membrane/trace slots,
+              ~4x more resident sessions per byte, and per-session step
+              counters driving the deterministic stochastic round so
+              evict -> re-admit stays bit-identical).
       theta:  per-layer packed rule coefficients (shared by every session —
               the rule is the deployment, the weights are the user).
       slots:  pool size B; fixes the fleet tensor shape forever.
@@ -113,9 +124,15 @@ class FleetScheduler:
         self._seq = 0
         self.evictions = 0
 
-        def _pool_step(fleet, drive, active, teach):
+        def _pool_step(fleet, drive, active, teach, seeds):
+            # `seeds` are the PER-SESSION step counters (host bookkeeping
+            # scattered to device each step): in a quantized pool they
+            # drive the deterministic stochastic round, so a session's
+            # update stream follows the session across evictions and slot
+            # changes — never the shared pool clock.  Float pools ignore
+            # them (same jitted signature either way).
             return snn.timestep(cfg, fleet, theta, drive, teach=teach,
-                                active=active)
+                                active=active, seed=seeds)
 
         # Fixed shapes everywhere => each of these traces exactly once per
         # signature; `compile_count()` exposes the executable counts the
@@ -144,6 +161,15 @@ class FleetScheduler:
         """Total executables compiled by the scheduler's jitted programs."""
         return sum(int(f._cache_size())
                    for f in (self._step, self._put, self._take))
+
+    def pool_nbytes(self) -> int:
+        """Resident bytes of the fleet pool tensor (all leaves).
+
+        The quantized-pool headline: with ``cfg.quant`` the (B, N, M)
+        weight planes are int8 instead of float32, so the same HBM holds
+        ~4x more resident sessions (weights dominate: N*M vs N+M rows).
+        """
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.fleet))
 
     # ---- admission / eviction -------------------------------------------
 
@@ -227,7 +253,8 @@ class FleetScheduler:
                 tarr[self.user_slot[uid]] = np.asarray(row, np.float32)
             tarr = jnp.asarray(tarr)
         self.fleet, out = self._step(self.fleet, jnp.asarray(drive),
-                                     self._active_mask(), tarr)
+                                     self._active_mask(), tarr,
+                                     jnp.asarray(self._steps.astype(np.int32)))
         for uid, slot in self.user_slot.items():
             self._steps[slot] += 1
         return {uid: out[slot] for uid, slot in self.user_slot.items()}

@@ -95,21 +95,74 @@ class SessionStore:
         can be handed out while the session lives in a fleet slot) ->
         durable store (restored into the structure of ``factory()``) ->
         ``factory()`` itself (fresh zero state, step 0).
+
+        Every resolved payload is VALIDATED against the ``factory``
+        template (pytree structure + per-leaf shape/dtype) before it is
+        handed out.  This is what keeps a float32 checkpoint out of an int8
+        fleet slot: the scheduler's swap-in scatter casts leaves to the
+        pool dtype, so an unvalidated mode mismatch would not crash — it
+        would silently destroy the session (a float weight cast to int8
+        truncates to garbage).  Migrating a float session into a quantized
+        pool is an explicit, sanctioned operation: `snn.quantize_state`.
+        The template is ABSTRACT (`jax.eval_shape` — ShapeDtypeStructs, no
+        device allocation), so warm-hit admission stays allocation-free;
+        only a brand-new user pays for a concrete ``factory()``.
         """
+        template = jax.eval_shape(factory)
         if uid in self._warm:
             self.warm_hits += 1
-            return self._warm.pop(uid)
+            state, step = self._warm.pop(uid)
+            self._validate(uid, state, template)
+            return state, step
         if self.root is not None:
             mgr = self._manager(uid)
             if mgr.latest_step() is not None:
-                state, step, _ = mgr.restore(factory())
+                try:
+                    state, step, _ = mgr.restore(template)
+                except (KeyError, ValueError) as e:
+                    raise ValueError(
+                        f"session {uid!r}: persisted payload does not fit "
+                        f"the requested pool mode ({e}); if it is a float "
+                        "session being admitted to a quantized pool, "
+                        "migrate it explicitly with snn.quantize_state"
+                    ) from e
                 self.restores += 1
+                self._validate(uid, state, template)
                 return state, int(step)
         elif uid in self._archive:
             self.restores += 1
-            return self._archive[uid]
+            state, step = self._archive[uid]
+            self._validate(uid, state, template)
+            return state, step
         self.creates += 1
         return factory(), 0
+
+    @staticmethod
+    def _validate(uid: str, state: Any, template: Any) -> None:
+        """Reject payloads whose structure/shape/dtype disagree with the
+        pool-mode template (the satellite bugfix: no silent corrupting
+        casts on swap-in)."""
+        got_def = jax.tree.structure(state)
+        want_def = jax.tree.structure(template)
+        if got_def != want_def:
+            raise ValueError(
+                f"session {uid!r}: payload pytree {got_def} does not match "
+                f"the requested pool mode {want_def} (use "
+                "snn.quantize_state to migrate float sessions into a "
+                "quantized pool)")
+        for got, want in zip(jax.tree.leaves(state),
+                             jax.tree.leaves(template)):
+            g_shape, w_shape = tuple(got.shape), tuple(want.shape)
+            g_dt = np.dtype(got.dtype)
+            w_dt = np.dtype(want.dtype)
+            if g_shape != w_shape or g_dt != w_dt:
+                raise ValueError(
+                    f"session {uid!r}: payload leaf {g_dt.name}{g_shape} "
+                    f"does not match the requested pool mode "
+                    f"{w_dt.name}{w_shape}; admitting it would silently "
+                    "corrupt the session on the swap-in cast (use "
+                    "snn.quantize_state to migrate float sessions into a "
+                    "quantized pool)")
 
     def checkin(self, uid: str, state: Any, step: int) -> None:
         """Return a session to the store: persist FIRST, then warm-cache."""

@@ -8,8 +8,9 @@ fixed set of examples (strategy bounds + seeded pseudo-random fill), so the
 full tier-1 suite collects and runs without the dependency.
 
 The fallback supports exactly the strategy surface this repo uses:
-``st.floats(min, max)`` and ``st.integers(min, max)``, positional or
-keyword ``@given``, stacked with ``@settings`` and pytest parametrize.
+``st.floats(min, max)``, ``st.integers(min, max)``, and
+``st.sampled_from(elements)``, positional or keyword ``@given``, stacked
+with ``@settings`` and pytest parametrize.
 """
 from __future__ import annotations
 
@@ -39,6 +40,15 @@ except ImportError:
                 return self.cast((self.lo + self.hi) / 2)
             return self.cast(self.lo + rng.random() * (self.hi - self.lo))
 
+    class _SampledStrategy:
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng: random.Random, i: int):
+            if i < len(self.elements):
+                return self.elements[i]
+            return rng.choice(self.elements)
+
     class _Strategies:
         @staticmethod
         def floats(min_value, max_value, **_kw):
@@ -48,6 +58,10 @@ except ImportError:
         def integers(min_value, max_value, **_kw):
             return _Strategy(int(min_value), int(max_value),
                              lambda x: int(round(x)))
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledStrategy(elements)
 
     st = _Strategies()
 

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.optim import (adamw, clip_by_global_norm, compress_int8,
@@ -111,3 +112,67 @@ class TestCompression:
         grads = {"w": jnp.ones((3, 3), jnp.bfloat16)}
         ef = init_ef_state(grads)
         assert ef["w"].shape == (3, 3) and ef["w"].dtype == jnp.float32
+
+
+class TestCompressionContract:
+    """compress/decompress_int8 are now load-bearing for session persistence
+    (the fixed-point engine's float -> int8 migration rides the fixed-scale
+    path), so the edge behavior is pinned explicitly."""
+
+    @given(st.integers(0, 2**32 - 1), st.sampled_from([2.0**-6, 2.0**-5,
+                                                       2.0**-4, 0.01]))
+    @settings(max_examples=20, deadline=None)
+    def test_fixed_scale_roundtrip_bounded(self, seed, scale):
+        """With a FIXED scale, error <= scale/2 for in-range values and
+        saturates (clips) beyond +-127*scale."""
+        g = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+        q, s = compress_int8(g, scale=scale)
+        assert q.dtype == jnp.int8 and float(s) == float(np.float32(scale))
+        x = decompress_int8(q, s)
+        in_range = np.abs(np.asarray(g)) <= 127.0 * scale
+        err = np.abs(np.asarray(x) - np.asarray(g))
+        assert err[in_range].max(initial=0.0) <= scale * 0.5 + 1e-6
+        assert np.abs(np.asarray(q)).max() <= 127
+
+    def test_zero_input(self):
+        q, s = compress_int8(jnp.zeros((16,)))
+        assert (np.asarray(q) == 0).all() and float(s) > 0
+        np.testing.assert_array_equal(np.asarray(decompress_int8(q, s)),
+                                      np.zeros(16, np.float32))
+
+    @given(st.floats(1e-6, 1e6))
+    @settings(max_examples=20, deadline=None)
+    def test_constant_input_maps_to_full_scale(self, c):
+        """A constant tensor lands on +-127 exactly (amax defines the grid),
+        so the round trip is exact up to f32 arithmetic."""
+        q, s = compress_int8(jnp.full((8,), c))
+        assert (np.asarray(q) == 127).all()
+        np.testing.assert_allclose(np.asarray(decompress_int8(q, s)),
+                                   np.full(8, c, np.float32), rtol=1e-6)
+
+    def test_denormal_input_is_finite_not_nan(self):
+        """Sub-1e-12 magnitudes hit the scale floor: quantize to zero
+        rather than dividing by ~0 and producing inf/nan."""
+        tiny = jnp.full((8,), 1e-40)
+        q, s = compress_int8(tiny)
+        assert np.isfinite(float(s)) and float(s) > 0
+        assert (np.asarray(q) == 0).all()
+        assert np.isfinite(np.asarray(decompress_int8(q, s))).all()
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16,
+                                       jnp.float16])
+    def test_dtype_stability(self, dtype):
+        """Any float input -> int8 payload + f32 scale + f32 decompress."""
+        g = jnp.linspace(-2, 2, 32).astype(dtype)
+        q, s = compress_int8(g)
+        assert q.dtype == jnp.int8
+        assert s.dtype == jnp.float32
+        assert decompress_int8(q, s).dtype == jnp.float32
+
+    def test_fixed_scale_grid_is_data_independent(self):
+        """Same scale in -> same grid out regardless of data (the property
+        session persistence relies on: the representation never drifts as
+        weights learn)."""
+        s1 = compress_int8(jnp.asarray([0.5]), scale=1 / 32)[1]
+        s2 = compress_int8(jnp.asarray([123.0]), scale=1 / 32)[1]
+        assert float(s1) == float(s2) == 1 / 32

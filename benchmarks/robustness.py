@@ -1,0 +1,148 @@
+"""Robustness sweep: scenario x backend x datapath closed-loop adaptation.
+
+The scenario engine's CI gate and the paper's core claim measured end-to-
+end: for every named scenario in `repro.scenarios.SCENARIOS`, drive B env
+instances against B plastic controllers through the engine fleet path
+(one `lax.scan`, perturbations as data), and compare the plasticity-on run
+against the frozen-weights ablation (theta gated to zero at the
+perturbation onset, same program, same seed).
+
+Asserted bounds (nonzero exit -> CI fails), on the GATE scenarios
+(`scenarios.GATE_SCENARIOS`), for EVERY (backend, datapath) cell:
+
+  * the perturbation hurts:    drop      >= MIN_DROP
+  * plasticity recovers:       recovery  >= REC_PLASTIC  (>= half the drop)
+  * frozen weights do not:     recovery  <= REC_FROZEN
+  * zero recompiles:           ONE compiled program per (backend, datapath)
+                               across the plastic run, the frozen run, and
+                               every perturbation event inside the scan
+
+The other scenarios are reported (and their schema drift-gated: losing a
+scenario row or a backend cell fails `benchmarks.run --check`) but not
+bounded — sensor-noise and goal-switch rows measure graceful degradation,
+not recovery of a persistent disturbance.
+
+    PYTHONPATH=src python benchmarks/robustness.py [--smoke] [--out ...]
+
+Writes benchmarks/results/robustness.json (or *_smoke.json under --smoke).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro import scenarios as S
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+# Documented bounds, asserted on the gate scenarios in every cell.
+MIN_DROP = 0.02      # the perturbation must cost at least this per step
+REC_PLASTIC = 0.5    # plastic recovers at least half the drop
+REC_FROZEN = 0.25    # frozen recovers at most a quarter of it
+
+IMPLS = ("xla", "pallas-interpret")
+MODES = ("float32", "quant")
+
+
+def run_cell(spec: S.ScenarioSpec, impl: str, mode: str,
+             seed: int = 7) -> dict:
+    """One (scenario, backend, datapath) cell: plastic vs frozen rollout."""
+    env = spec.make_env()
+    scfg = S.controller_config(env, impl=impl, quant=(mode == "quant"))
+    theta = S.reference_rule(spec.env_name, scfg)
+    prog = S.make_closed_loop(env, scfg, batch=spec.batch, steps=spec.steps)
+    schedule = S.compile_schedule(env, spec.perturbations,
+                                  jax.random.PRNGKey(123), spec.batch)
+    key = jax.random.PRNGKey(seed)
+    t0 = time.perf_counter()
+    res_p = prog.run(theta, key, tasks=spec.tasks, schedule=schedule)
+    res_f = prog.run(theta, key, tasks=spec.tasks, schedule=schedule,
+                     freeze_at=spec.onset)
+    jax.block_until_ready((res_p.rewards, res_f.rewards))
+    wall = time.perf_counter() - t0
+    mp = S.adaptation_metrics(res_p.rewards, spec.onset, spec.window)
+    mf = S.adaptation_metrics(res_f.rewards, spec.onset, spec.window)
+    return {
+        "scenario": spec.name, "env": spec.env_name, "impl": impl,
+        "mode": mode, "batch": spec.batch, "steps": spec.steps,
+        "gate": spec.name in S.GATE_SCENARIOS,
+        "pre": mp["pre"], "drop": mp["drop"],
+        "recovery_plastic": mp["recovery_frac"],
+        "recovery_frozen": mf["recovery_frac"],
+        "time_to_recover": mp["time_to_recover"],
+        "compiles": prog.compile_count(),
+        "wall_s": wall,
+    }
+
+
+def check_bounds(row: dict) -> list:
+    failures = []
+    cell = f"{row['scenario']}/{row['impl']}/{row['mode']}"
+    if row["compiles"] != 1:
+        failures.append(f"{cell}: {row['compiles']} compiles (expected 1 "
+                        "program across plastic+frozen+perturbations)")
+    if not row["gate"]:
+        return failures
+    if row["drop"] < MIN_DROP:
+        failures.append(f"{cell}: drop {row['drop']:.3f} < {MIN_DROP}")
+    if row["recovery_plastic"] < REC_PLASTIC:
+        failures.append(f"{cell}: plastic recovery "
+                        f"{row['recovery_plastic']:.2f} < {REC_PLASTIC}")
+    if row["recovery_frozen"] > REC_FROZEN:
+        failures.append(f"{cell}: frozen recovery "
+                        f"{row['recovery_frozen']:.2f} > {REC_FROZEN}")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: identical sweep (it is already CI-"
+                         "sized, and the drift gate demands full scenario "
+                         "coverage) but writes *_smoke.json so the "
+                         "checked-in artifact is never clobbered")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = os.path.join(
+            RESULTS, "robustness_smoke.json" if args.smoke
+            else "robustness.json")
+
+    names = tuple(S.SCENARIOS)
+    t0 = time.time()
+    rows, failures = [], []
+    print("scenario,impl,mode,drop,recovery_plastic,recovery_frozen,"
+          "ttr,compiles")
+    for name in names:
+        spec = S.SCENARIOS[name]
+        for impl in IMPLS:
+            for mode in MODES:
+                row = run_cell(spec, impl, mode)
+                rows.append(row)
+                failures += check_bounds(row)
+                print(f"{name},{impl},{mode},{row['drop']:.3f},"
+                      f"{row['recovery_plastic']:.2f},"
+                      f"{row['recovery_frozen']:.2f},"
+                      f"{row['time_to_recover']},{row['compiles']}")
+
+    out = {"smoke": bool(args.smoke), "impls": list(IMPLS),
+           "modes": list(MODES),
+           "gate_scenarios": list(S.GATE_SCENARIOS),
+           "bounds": {"min_drop": MIN_DROP, "recovery_plastic": REC_PLASTIC,
+                      "recovery_frozen": REC_FROZEN, "compiles": 1},
+           "results": rows}
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+
+    print(f"\nrobustness done in {time.time() - t0:.0f}s; "
+          f"{len(failures)} bound violations: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

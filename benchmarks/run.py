@@ -11,6 +11,10 @@
                              zero recompiles + evict/restore bit-equality)
   quant_parity      fixed-pt float-vs-quant control parity + int8 pool bytes
                              (asserted bounds; bit-equal across backends)
+  robustness        scenario  closed-loop adaptation sweep: scenario x
+                             backend x datapath, plastic vs frozen (gate
+                             scenarios asserted: recovery >= 0.5 plastic,
+                             <= 0.25 frozen, one compile per cell)
   roofline          Roofline table from the dry-run artifacts (if present)
 
 ``--check`` is the bench DRIFT GATE (CI): after the run, every checked-in
@@ -49,20 +53,36 @@ def _schema_paths(obj, prefix=""):
     return paths
 
 
-def _impl_values(obj):
-    """Backend coverage: every value reachable under an 'impl'/'impls' key."""
+def _coverage_values(obj, keys):
+    """Coverage cells: every scalar value reachable under one of `keys`
+    (e.g. backend names under 'impl'/'impls', scenario names under
+    'scenario'/'scenarios').  Non-scalar values under those keys are
+    recursed into like any other node."""
     found = set()
     if isinstance(obj, dict):
         for k, v in obj.items():
-            if k in ("impl", "impls"):
-                vals = v if isinstance(v, list) else [v]
+            vals = v if isinstance(v, list) else [v]
+            if k in keys and all(isinstance(x, (str, int, float))
+                                 for x in vals):
                 found |= {str(x) for x in vals}
             else:
-                found |= _impl_values(v)
+                found |= _coverage_values(v, keys)
     elif isinstance(obj, list):
         for el in obj:
-            found |= _impl_values(el)
+            found |= _coverage_values(el, keys)
     return found
+
+
+def _impl_values(obj):
+    """Backend coverage: every value reachable under an 'impl'/'impls' key."""
+    return _coverage_values(obj, ("impl", "impls"))
+
+
+def _scenario_values(obj):
+    """Scenario coverage: values under 'scenario'/'scenarios'/
+    'gate_scenarios' keys — a sweep that silently loses a scenario row
+    (or an env cell named by one) fails the gate like a lost backend."""
+    return _coverage_values(obj, ("scenario", "scenarios", "gate_scenarios"))
 
 
 def check_drift(reference: dict, started_at: float) -> list:
@@ -101,6 +121,10 @@ def check_drift(reference: dict, started_at: float) -> list:
         if lost:
             failures.append(
                 f"{stem}: backend coverage lost: {sorted(lost)}")
+        lost_sc = _scenario_values(ref) - _scenario_values(fresh)
+        if lost_sc:
+            failures.append(
+                f"{stem}: scenario coverage lost: {sorted(lost_sc)}")
     return failures
 
 
@@ -128,7 +152,7 @@ def main(argv=None):
 
     from benchmarks import (adaptation, engine_breakdown, fleet_throughput,
                             latency, mnist_throughput, quant_parity,
-                            roofline, serving_churn)
+                            robustness, roofline, serving_churn)
 
     for name, fn in (
         ("engine_breakdown", lambda: engine_breakdown.main(quick=quick)),
@@ -148,6 +172,8 @@ def main(argv=None):
              ["--smoke"] if quick else ["--steps", "100"])),
         ("quant_parity",
          lambda: quant_parity.main(["--smoke"] if quick else [])),
+        ("robustness",
+         lambda: robustness.main(["--smoke"] if quick else [])),
         ("roofline_single", lambda: roofline.main(["--mesh", "single"])),
         ("roofline_multi", lambda: roofline.main(["--mesh", "multi"])),
     ):

@@ -143,11 +143,33 @@ def evaluate_generalization(env: Env, scfg: snn.SNNConfig, params: jax.Array,
                             seed: int = 1,
                             actuator_mask: Optional[jax.Array] = None,
                             mask_after: Optional[int] = None) -> jax.Array:
-    """Phase 2 on the 72 unseen tasks.  Returns per-task returns."""
+    """Phase 2 on the 72 unseen tasks.  Returns per-task returns.
+
+    Routed through the scenario engine's closed-loop fleet harness: all 72
+    eval tasks run as one fused B=72 rollout through `engine.layer_step`'s
+    fleet path (per-slot weights), with the actuator-failure stress
+    expressed as an `ActuatorDropout` perturbation schedule — the same
+    program `benchmarks/robustness.py` sweeps.
+    """
+    from repro.scenarios import harness as H
+    from repro.scenarios import perturb as P
+
     tasks = env.eval_tasks()
-    keys = jax.random.split(jax.random.PRNGKey(seed), tasks.shape[0])
-    return jax.vmap(
-        lambda task, k: episode_return(env, scfg, params, task, k,
-                                       actuator_mask=actuator_mask,
-                                       mask_after=mask_after)
-    )(tasks, keys)
+    b = tasks.shape[0]
+    prog = H.make_closed_loop(env, scfg, batch=b, steps=env.episode_len)
+    if scfg.plastic:
+        theta, w0 = params, None
+    else:
+        theta = snn.flatten_theta(
+            snn.init_theta(scfg, jax.random.PRNGKey(0), scale=0.0))
+        w0 = unflatten_weights(scfg, params)
+    schedule = None
+    if actuator_mask is not None:
+        pert = P.ActuatorDropout(
+            step=0 if mask_after is None else int(mask_after),
+            mask=tuple(float(m) for m in jnp.asarray(actuator_mask)))
+        schedule = P.compile_schedule(env, (pert,), jax.random.PRNGKey(seed),
+                                      b)
+    res = prog.run(theta, jax.random.PRNGKey(seed), tasks=tasks,
+                   schedule=schedule, w0=w0)
+    return res.rewards.sum(axis=0)

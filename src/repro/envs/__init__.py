@@ -1,26 +1,37 @@
 """Pure-JAX continuous-control environments (Brax stand-ins, DESIGN.md §8.1).
 
-Three tasks mirroring the paper's evaluation protocol (Sec. IV-A):
+Five tasks; the first three mirror the paper's evaluation protocol
+(Sec. IV-A), the last two grow the scenario-engine's diversity axis:
 
-  * direction: planar 8-thruster locomotor trained on 8 target directions,
-               evaluated on 72 unseen directions            (Brax `ant`)
-  * velocity:  1-D runner trained on 8 target velocities,
-               evaluated on 72 unseen velocities            (Brax `halfcheetah`)
-  * position:  2-link torque-controlled reacher with random
-               goal positions                               (Brax `ur5e`)
+  * direction:  planar 8-thruster locomotor trained on 8 target directions,
+                evaluated on 72 unseen directions           (Brax `ant`)
+  * velocity:   1-D runner trained on 8 target velocities,
+                evaluated on 72 unseen velocities           (Brax `halfcheetah`)
+  * position:   2-link torque-controlled reacher with random
+                goal positions                              (Brax `ur5e`)
+  * arm:        2-link arm with in-plane gravity and a variable tip
+                payload (persistent-load adaptation scenario)
+  * stabilizer: 1-D setpoint regulation with redundant thrusters and a
+                wind-force dynamics shift
 
 All are reset/step pure functions, vmap- and scan-compatible, with an
-actuator-mask channel to simulate morphology damage ("leg failure").
+actuator-mask channel to simulate morphology damage ("leg failure") and a
+``PARAM_NAMES`` vector of perturbable dynamics constants that the scenario
+engine (`repro.scenarios`) shifts per fleet slot as data.
 """
 from repro.envs.base import Env, EnvState
 from repro.envs.direction import DirectionEnv
 from repro.envs.velocity import VelocityEnv
 from repro.envs.reacher import ReacherEnv
+from repro.envs.arm import ArmEnv
+from repro.envs.stabilizer import StabilizerEnv
 
 ENVS = {
     "direction": DirectionEnv,
     "velocity": VelocityEnv,
     "position": ReacherEnv,
+    "arm": ArmEnv,
+    "stabilizer": StabilizerEnv,
 }
 
 

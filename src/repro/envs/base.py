@@ -1,18 +1,35 @@
-"""Environment interface: pure reset/step functions over a pytree state."""
+"""Environment interface: pure reset/step functions over a pytree state.
+
+Two contracts matter to the scenario engine (`repro.scenarios`):
+
+  * **Dtype pinning** — every `EnvState` leaf is explicitly float32 (phys,
+    task, actuator_mask) or int32 (t), regardless of the global
+    ``jax_enable_x64`` flag.  A state that silently inherits float64 under
+    x64 would recompile every downstream jitted program and break the
+    bit-parity tests between backends.
+  * **Dynamics parameters as data** — each env names its perturbable
+    physics constants in ``PARAM_NAMES`` (dataclass float fields such as
+    mass/gain/damping) and `dynamics` accepts them as a traced ``(P,)``
+    vector.  That is what lets the scenario engine shift dynamics
+    mid-episode, per fleet slot, inside one jitted `lax.scan` with zero
+    recompiles: a parameter shift is a `jnp.where` on data, never a new
+    Python object.  ``dynamics(phys, force)`` without the vector uses the
+    static defaults, so single-env code is unchanged.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 
 class EnvState(NamedTuple):
-    phys: jax.Array        # flat physics state vector
+    phys: jax.Array        # flat physics state vector (float32)
     task: jax.Array        # task parameter (direction / velocity / goal)
     actuator_mask: jax.Array  # (act_dim,) 1 = healthy, 0 = failed
-    t: jax.Array           # step counter
+    t: jax.Array           # step counter (int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,10 +43,16 @@ class Env:
     obs_dim: int = 0
     act_dim: int = 0
 
+    # Names of the dataclass fields that are perturbable dynamics
+    # parameters, in the order `default_params` packs them.  The scenario
+    # engine shifts these per slot / per step as data.
+    PARAM_NAMES: tuple = ()
+
     def init_phys(self, key: jax.Array) -> jax.Array:
         raise NotImplementedError
 
-    def dynamics(self, phys: jax.Array, force: jax.Array) -> jax.Array:
+    def dynamics(self, phys: jax.Array, force: jax.Array,
+                 params: Optional[jax.Array] = None) -> jax.Array:
         raise NotImplementedError
 
     def observe(self, state: EnvState) -> jax.Array:
@@ -46,18 +69,38 @@ class Env:
         raise NotImplementedError
 
     # --- common ------------------------------------------------------------
+    def default_params(self) -> jax.Array:
+        """The ``PARAM_NAMES`` fields packed as a float32 ``(P,)`` vector."""
+        return jnp.asarray([getattr(self, n) for n in self.PARAM_NAMES],
+                           jnp.float32).reshape(len(self.PARAM_NAMES))
+
+    def param_index(self, name: str) -> int:
+        try:
+            return self.PARAM_NAMES.index(name)
+        except ValueError:
+            raise ValueError(
+                f"{type(self).__name__} has no dynamics parameter {name!r}; "
+                f"perturbable params are {self.PARAM_NAMES}") from None
+
     def reset(self, key: jax.Array, task: jax.Array,
               actuator_mask: jax.Array | None = None) -> EnvState:
         if actuator_mask is None:
-            actuator_mask = jnp.ones((self.act_dim,))
-        return EnvState(phys=self.init_phys(key), task=task,
-                        actuator_mask=actuator_mask,
+            actuator_mask = jnp.ones((self.act_dim,), jnp.float32)
+        return EnvState(phys=self.init_phys(key).astype(jnp.float32),
+                        task=jnp.asarray(task, jnp.float32),
+                        actuator_mask=jnp.asarray(actuator_mask, jnp.float32),
                         t=jnp.zeros((), jnp.int32))
 
-    def step(self, state: EnvState, action: jax.Array) -> tuple[EnvState, jax.Array]:
-        """Returns (new_state, reward).  Actions in [-1, 1]."""
+    def step(self, state: EnvState, action: jax.Array,
+             params: Optional[jax.Array] = None) -> tuple[EnvState, jax.Array]:
+        """Returns (new_state, reward).  Actions in [-1, 1].
+
+        ``params`` optionally overrides the static dynamics constants with a
+        traced ``(P,)`` vector (see `default_params`); None uses the
+        dataclass fields unchanged.
+        """
         act = jnp.clip(action, -1.0, 1.0) * state.actuator_mask
-        new_phys = self.dynamics(state.phys, act)
+        new_phys = self.dynamics(state.phys, act, params)
         new_state = EnvState(phys=new_phys, task=state.task,
                              actuator_mask=state.actuator_mask, t=state.t + 1)
         return new_state, self.reward(state, act, new_phys)

@@ -6,10 +6,13 @@ point-mass.  Reward is velocity projected onto the target direction.  Train
 on 8 cardinal/diagonal directions, evaluate on 72 unseen headings.  The
 8-fold actuator redundancy makes single-leg failure recoverable — the
 adaptation scenario from the paper (Sec. II-B "simulated leg failure").
+
+Perturbable dynamics params (`PARAM_NAMES`): mass, damping, gain.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +30,10 @@ class DirectionEnv(Env):
     damping: float = 1.5
     gain: float = 4.0
 
+    PARAM_NAMES: tuple = ("mass", "damping", "gain")
+
     def _thruster_axes(self) -> jax.Array:
-        ang = jnp.arange(8) * (2 * jnp.pi / 8)
+        ang = jnp.arange(8, dtype=jnp.float32) * (2 * jnp.pi / 8)
         return jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=1)  # (8, 2)
 
     def init_phys(self, key: jax.Array) -> jax.Array:
@@ -36,11 +41,14 @@ class DirectionEnv(Env):
         v0 = 0.05 * jax.random.normal(key, (2,))
         return jnp.concatenate([jnp.zeros(2), v0])
 
-    def dynamics(self, phys: jax.Array, force: jax.Array) -> jax.Array:
+    def dynamics(self, phys: jax.Array, force: jax.Array,
+                 params: Optional[jax.Array] = None) -> jax.Array:
+        p = self.default_params() if params is None else params
+        mass, damping, gain = p[0], p[1], p[2]
         pos, vel = phys[:2], phys[2:]
         # thrusters only push (rectified), like legs
-        f = self.gain * (jax.nn.relu(force) @ self._thruster_axes())
-        acc = f / self.mass - self.damping * vel
+        f = gain * (jax.nn.relu(force) @ self._thruster_axes())
+        acc = f / mass - damping * vel
         vel = vel + self.dt * acc
         pos = pos + self.dt * vel
         return jnp.concatenate([pos, vel])
@@ -60,10 +68,10 @@ class DirectionEnv(Env):
         return fwd - 0.1 * lateral - ctrl
 
     def train_tasks(self) -> jax.Array:
-        ang = jnp.arange(8) * (2 * jnp.pi / 8)
+        ang = jnp.arange(8, dtype=jnp.float32) * (2 * jnp.pi / 8)
         return jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=1)
 
     def eval_tasks(self) -> jax.Array:
         # 72 headings offset from every training heading
-        ang = (jnp.arange(72) + 0.5) * (2 * jnp.pi / 72)
+        ang = (jnp.arange(72, dtype=jnp.float32) + 0.5) * (2 * jnp.pi / 72)
         return jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=1)

@@ -2,10 +2,13 @@
 
 A torque-controlled 2-link planar arm reaching toward goal positions sampled
 in the workspace annulus.  Train goals: 8 fixed positions; eval: 72 unseen.
+
+Perturbable dynamics params (`PARAM_NAMES`): damping, gain.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +26,8 @@ class ReacherEnv(Env):
     damping: float = 1.0
     gain: float = 2.0
 
+    PARAM_NAMES: tuple = ("damping", "gain")
+
     def init_phys(self, key: jax.Array) -> jax.Array:
         # phys = [q1, q2, dq1, dq2]
         q0 = 0.1 * jax.random.normal(key, (2,))
@@ -33,9 +38,12 @@ class ReacherEnv(Env):
         y = self.link * (jnp.sin(q[0]) + jnp.sin(q[0] + q[1]))
         return jnp.array([x, y])
 
-    def dynamics(self, phys: jax.Array, force: jax.Array) -> jax.Array:
+    def dynamics(self, phys: jax.Array, force: jax.Array,
+                 params: Optional[jax.Array] = None) -> jax.Array:
+        p = self.default_params() if params is None else params
+        damping, gain = p[0], p[1]
         q, dq = phys[:2], phys[2:]
-        ddq = self.gain * force - self.damping * dq
+        ddq = gain * force - damping * dq
         dq = dq + self.dt * ddq
         q = q + self.dt * dq
         return jnp.concatenate([q, dq])
@@ -55,7 +63,7 @@ class ReacherEnv(Env):
         return -dist - ctrl
 
     def _goals(self, n: int, phase: float) -> jax.Array:
-        ang = (jnp.arange(n) + phase) * (2 * jnp.pi / n)
+        ang = (jnp.arange(n, dtype=jnp.float32) + phase) * (2 * jnp.pi / n)
         r = 0.7 * self.link * 2 * 0.5 + 0.35  # mid-workspace ring
         return jnp.stack([r * jnp.cos(ang), r * jnp.sin(ang)], axis=1)
 

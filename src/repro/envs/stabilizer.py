@@ -1,0 +1,76 @@
+"""Setpoint-stabilizer task (cartpole-style regulation with redundancy).
+
+A 1-D cart holding a setpoint against drag and a wind force, driven by TWO
+redundant bidirectional thrusters (net drive = their mean).  The redundancy
+makes single-thruster dropout a recoverable authority loss (the remaining
+thruster must double its effort), and the ``wind`` parameter makes dynamics
+shifts a *persistent* disturbance: under constant wind a proportional
+controller holds a steady-state offset, so only a controller that keeps
+adapting (growing its effective gain / integrating the error) regains the
+setpoint — the textbook scenario separating plastic from frozen control.
+
+Task protocol mirrors the other envs: 8 training setpoints, 72 unseen.
+
+Perturbable dynamics params (`PARAM_NAMES`): mass, gain, drag, wind.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, EnvState
+
+
+@dataclasses.dataclass(frozen=True)
+class StabilizerEnv(Env):
+    episode_len: int = 150
+    dt: float = 0.05
+    obs_dim: int = 6      # err, v, err - v, |err|, setpoint, 1
+    act_dim: int = 2      # redundant thrusters; net drive = mean
+    mass: float = 1.0
+    gain: float = 4.0
+    drag: float = 1.5
+    spring: float = 1.0   # restoring pull toward x = 0 (bounds wind drift;
+                          # holding any nonzero setpoint needs standing force)
+    wind: float = 0.0     # constant force on the cart (dynamics shift)
+
+    PARAM_NAMES: tuple = ("mass", "gain", "drag", "spring", "wind")
+
+    def init_phys(self, key: jax.Array) -> jax.Array:
+        # phys = [x, v]
+        x0 = 0.2 * jax.random.normal(key, ())
+        return jnp.stack([x0, jnp.zeros(())])
+
+    def dynamics(self, phys: jax.Array, force: jax.Array,
+                 params: Optional[jax.Array] = None) -> jax.Array:
+        p = self.default_params() if params is None else params
+        mass, gain, drag, spring, wind = p[0], p[1], p[2], p[3], p[4]
+        x, v = phys[0], phys[1]
+        drive = gain * force.mean()
+        a = (drive + wind - spring * x - drag * v) / mass
+        v = v + self.dt * a
+        x = x + self.dt * v
+        return jnp.stack([x, v])
+
+    def observe(self, state: EnvState) -> jax.Array:
+        x, v = state.phys[0], state.phys[1]
+        sp = state.task[0]
+        err = sp - x
+        return jnp.stack([err, v, err - v, jnp.abs(err), sp,
+                          jnp.ones(())])
+
+    def reward(self, state: EnvState, action: jax.Array,
+               new_phys: jax.Array) -> jax.Array:
+        err = state.task[0] - new_phys[0]
+        ctrl = 0.01 * jnp.sum(action ** 2)
+        return -jnp.abs(err) - 0.02 * new_phys[1] ** 2 - ctrl
+
+    def train_tasks(self) -> jax.Array:
+        return jnp.linspace(-1.0, 1.0, 8)[:, None]
+
+    def eval_tasks(self) -> jax.Array:
+        # interleaved with / beyond the training grid, never colliding
+        return jnp.linspace(-1.02, 1.02, 72)[:, None]

@@ -4,10 +4,13 @@ A 1-D runner driven by 4 actuators coupled through a gait phase oscillator;
 drive saturates (tanh) so matching a target velocity needs a *policy*, not a
 constant.  Train on 8 target velocities in [0.5, 4.0], evaluate on 72 unseen
 velocities over the same range.
+
+Perturbable dynamics params (`PARAM_NAMES`): drag, gain, phase_rate.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,21 +28,26 @@ class VelocityEnv(Env):
     gain: float = 3.0
     phase_rate: float = 4.0
 
+    PARAM_NAMES: tuple = ("drag", "gain", "phase_rate")
+
     def init_phys(self, key: jax.Array) -> jax.Array:
         # phys = [x, v, phase]
         v0 = 0.05 * jax.random.normal(key, ())
         return jnp.array([0.0, v0, 0.0])
 
-    def dynamics(self, phys: jax.Array, force: jax.Array) -> jax.Array:
+    def dynamics(self, phys: jax.Array, force: jax.Array,
+                 params: Optional[jax.Array] = None) -> jax.Array:
+        p = self.default_params() if params is None else params
+        drag, gain, phase_rate = p[0], p[1], p[2]
         x, v, phase = phys
         # gait coupling: alternating actuators are effective in alternating
         # phase halves (crude stance/swing structure)
         gate = jnp.array([jnp.sin(phase), jnp.cos(phase),
                           -jnp.sin(phase), -jnp.cos(phase)])
-        drive = self.gain * jnp.tanh(jnp.sum(force * jax.nn.relu(gate)))
-        v = v + self.dt * (drive - self.drag * v)
+        drive = gain * jnp.tanh(jnp.sum(force * jax.nn.relu(gate)))
+        v = v + self.dt * (drive - drag * v)
         x = x + self.dt * v
-        phase = phase + self.dt * self.phase_rate
+        phase = phase + self.dt * phase_rate
         return jnp.array([x, v, phase])
 
     def observe(self, state: EnvState) -> jax.Array:

@@ -1,0 +1,31 @@
+"""Scenario engine: vectorized envs, perturbation schedules, closed-loop
+fleet adaptation (the ROADMAP's "as many scenarios as you can imagine" axis).
+
+Three layers:
+
+  * `vector_env.VectorEnv` — struct-of-arrays wrapper stepping B
+    independent env instances (per-slot keys, tasks, actuator masks, AND
+    dynamics parameters) as one jitted program.
+  * `perturb` — composable `Perturbation` specs (actuator dropout, sensor
+    noise/bias, dynamics-parameter shifts, goal switches) compiled to pure
+    array `Schedule`s: domain randomization as data, applied inside a scan
+    with zero recompiles.
+  * `harness.make_closed_loop` — B envs against B plastic controllers
+    through the engine's fleet path in a single `lax.scan`, float32 or
+    quantized, on any engine backend, with a freeze-step operand for the
+    plasticity-vs-frozen ablation; `metrics.adaptation_metrics` turns the
+    reward streams into the paper's adaptation numbers.
+
+`presets.SCENARIOS` names the checked-in robustness scenarios;
+`presets.reference_rule` the deterministic adaptive rule tests assert the
+paper's recovery claim with (see benchmarks/robustness.py).
+"""
+from repro.scenarios.vector_env import VectorEnv, VecEnvState
+from repro.scenarios.perturb import (ActuatorDropout, GoalSwitch, ParamShift,
+                                     Perturbation, Schedule, SensorNoise,
+                                     compile_schedule, empty_schedule)
+from repro.scenarios.harness import (ClosedLoop, RolloutResult,
+                                     make_closed_loop, run_closed_loop)
+from repro.scenarios.metrics import adaptation_metrics, ablation_summary
+from repro.scenarios.presets import (GATE_SCENARIOS, SCENARIOS, ScenarioSpec,
+                                     controller_config, reference_rule)

@@ -1,0 +1,173 @@
+"""Closed-loop fleet adaptation harness.
+
+`make_closed_loop` builds ONE jitted program that drives B vectorized env
+instances (`VectorEnv`) against B plastic SNN controllers through the
+engine's fleet path (``snn.controller_step`` -> ``engine.layer_step`` with
+``w (B, N, M)``) inside a single `lax.scan` over env steps.  Everything
+episode-varying — tasks, actuator masks, dynamics parameters, perturbation
+schedules, the plasticity freeze step — is an *operand*, so:
+
+  * perturbation events never recompile (pinned: `ClosedLoop.compile_count`
+    stays at 1 across schedule changes);
+  * the same program runs float32 and fixed-point (`SNNConfig.quant`), on
+    ``impl="xla"``, ``"pallas"`` or ``"pallas-interpret"``;
+  * the plasticity-on vs frozen-weights ablation is the SAME program with a
+    different ``freeze_at`` scalar: theta is gated to zero from that step
+    on (``dw`` is linear in theta, and the quantized stochastic round maps
+    an exactly-zero dw to zero grid steps), which freezes the weights
+    bit-exactly while the forward dynamics keep running.
+
+The result feeds `repro.scenarios.metrics.adaptation_metrics` (pre/post
+perturbation return, time-to-recover) — the paper's robust-adaptation claim
+measured at fleet scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import snn
+from repro.envs.base import Env
+from repro.scenarios import perturb as P
+from repro.scenarios.vector_env import VectorEnv, VecEnvState
+
+
+class RolloutResult(NamedTuple):
+    rewards: jax.Array        # (steps, B) per-step env rewards
+    actions: jax.Array        # (steps, B, act_dim)
+    net: snn.NetworkState     # final fleet controller state
+    env_state: VecEnvState    # final vectorized env state
+
+
+@dataclasses.dataclass
+class ClosedLoop:
+    """A prepared (jitted-once) closed-loop rollout program.
+
+    Built by `make_closed_loop`; call `run` as many times as needed — every
+    call with the same (B, K) shapes reuses the single compiled executable.
+    """
+
+    env: Env
+    scfg: snn.SNNConfig
+    batch: int
+    steps: int
+    venv: VectorEnv
+    _rollout: object  # jitted (net0, vstate0, theta, schedule, freeze, key)
+
+    def compile_count(self) -> int:
+        """Executables compiled by the rollout program (recompile gate)."""
+        return int(self._rollout._cache_size())
+
+    # ---- state builders ----------------------------------------------------
+
+    def init_tasks(self, tasks) -> jax.Array:
+        """Resolve a task spec: None -> train task 0; int -> that train
+        task; "train"/"eval" -> cycle the task set across slots; or an
+        explicit (B, T) / (T,) array."""
+        env = self.env
+        if tasks is None:
+            tasks = 0
+        if isinstance(tasks, int):
+            return jnp.broadcast_to(env.train_tasks()[tasks],
+                                    (self.batch,
+                                     env.train_tasks().shape[1]))
+        if isinstance(tasks, str):
+            pool = env.train_tasks() if tasks == "train" else env.eval_tasks()
+            idx = jnp.arange(self.batch) % pool.shape[0]
+            return pool[idx]
+        tasks = jnp.asarray(tasks, jnp.float32)
+        if tasks.ndim == 1:
+            tasks = jnp.broadcast_to(tasks[None],
+                                     (self.batch, tasks.shape[0]))
+        return tasks
+
+    def init_net(self, w0: Optional[Sequence[jax.Array]] = None
+                 ) -> snn.NetworkState:
+        """Fleet controller state; ``w0`` optionally seeds per-layer weights
+        (the weight-trained baseline), broadcast across slots."""
+        net = snn.init_state(self.scfg, batch=self.batch, fleet=True)
+        if w0 is None:
+            return net
+        if self.scfg.quant is not None:
+            raise ValueError("w0 seeding is a float-mode feature; quantize "
+                             "the state via snn.quantize_state instead")
+        w = tuple(jnp.broadcast_to(jnp.asarray(wi, self.scfg.dtype),
+                                   (self.batch, *jnp.shape(wi)))
+                  for wi in w0)
+        return dataclasses.replace(net, w=w)
+
+    # ---- execution ---------------------------------------------------------
+
+    def run(self, theta, key: jax.Array, *,
+            tasks=None,
+            schedule: Optional[P.Schedule] = None,
+            freeze_at: Optional[int] = None,
+            w0: Optional[Sequence[jax.Array]] = None,
+            actuator_mask: Optional[jax.Array] = None) -> RolloutResult:
+        """One closed-loop rollout of `steps` env steps for all B slots.
+
+        theta: per-layer rule list, or the flat vector `snn.flatten_theta`
+        produces.  ``freeze_at``: env step from which plasticity is gated
+        off (None = never; 0 = fully frozen).  ``schedule``: compiled
+        perturbations (None = clean episode of the same K=0 program).
+        """
+        if isinstance(theta, jax.Array) or getattr(theta, "ndim", None) == 1:
+            theta = snn.unflatten_theta(self.scfg, theta)
+        theta = list(theta)
+        k_env, k_loop = jax.random.split(jnp.asarray(key))
+        vstate = self.venv.reset(k_env, tasks=self.init_tasks(tasks),
+                                 actuator_mask=actuator_mask)
+        net = self.init_net(w0)
+        if schedule is None:
+            schedule = P.empty_schedule(self.env, self.batch)
+        freeze = jnp.asarray(self.steps + 1 if freeze_at is None
+                             else freeze_at, jnp.int32)
+        return self._rollout(net, vstate, theta, schedule, freeze, k_loop)
+
+
+def make_closed_loop(env: Env, scfg: snn.SNNConfig, *, batch: int,
+                     steps: int) -> ClosedLoop:
+    """Build the jitted closed-loop program for (env, controller, B, T)."""
+    venv = VectorEnv(env, batch)
+
+    def rollout(net, vstate, theta, schedule, freeze, key):
+        k_obs, k_enc = jax.random.split(key)
+
+        def body(carry, t):
+            vs, st = carry
+            eff = P.effective_state(schedule, vs, t)
+            obs = venv.observe(eff)
+            obs = P.transform_obs(schedule, obs, t, k_obs)
+            gate = (t < freeze).astype(scfg.dtype)
+            th_t = [th * gate for th in theta]
+            st, action = snn.controller_step(
+                scfg, st, th_t, obs,
+                key=jax.random.fold_in(k_enc, t)
+                if scfg.encoding == "rate" else None)
+            stepped, r = venv.step(eff, action)
+            # carry the BASE state forward (perturbations are re-derived
+            # from the schedule each step, so they never compound)
+            vs = vs._replace(phys=stepped.phys, t=stepped.t)
+            return (vs, st), (r, action)
+
+        (vstate, net), (rewards, actions) = jax.lax.scan(
+            body, (vstate, net), jnp.arange(steps))
+        return RolloutResult(rewards=rewards, actions=actions, net=net,
+                             env_state=vstate)
+
+    return ClosedLoop(env=env, scfg=scfg, batch=batch, steps=steps,
+                      venv=venv, _rollout=jax.jit(rollout))
+
+
+def run_closed_loop(env: Env, scfg: snn.SNNConfig, theta, key: jax.Array, *,
+                    batch: int, steps: int, **kwargs) -> RolloutResult:
+    """One-shot convenience wrapper over `make_closed_loop(...).run(...)`.
+
+    Prefer `make_closed_loop` when running several rollouts of the same
+    shape (ablations, schedule sweeps): the program compiles once.
+    """
+    return make_closed_loop(env, scfg, batch=batch, steps=steps).run(
+        theta, key, **kwargs)

@@ -1,0 +1,220 @@
+"""Perturbation schedules: domain randomization as *data*.
+
+A `Perturbation` is a small frozen spec (what happens, when, to which
+fraction of the fleet).  `compile_schedule` turns a tuple of specs into a
+`Schedule` — a pytree of ``(K, B, ...)`` arrays with one row per spec and
+per-slot randomization already drawn (which actuator fails in which slot,
+each slot's onset jitter, its parameter multiplier, its switched goal).
+Applying the schedule at step ``t`` is nothing but ``jnp.where(t >= onset,
+value, neutral)`` reductions, so a whole closed-loop rollout — including
+every perturbation event — is ONE jitted `lax.scan` that never recompiles:
+changing the schedule (severity, onset, victims) changes operand *values*,
+never shapes or the program.
+
+Spec kinds:
+
+  * `ActuatorDropout` — zero ``k`` random actuators per affected slot (or an
+    explicit mask), composing multiplicatively with the base mask.
+  * `SensorNoise`     — additive white noise (std) and a fixed per-slot
+    bias on the observation vector.
+  * `ParamShift`      — multiply/add one named dynamics parameter
+    (`Env.PARAM_NAMES`), with optional per-slot spread.
+  * `GoalSwitch`      — mid-episode task replacement (resampled per slot
+    from the env's eval tasks, or an explicit task array).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env
+from repro.scenarios.vector_env import VecEnvState
+
+NEVER = jnp.iinfo(jnp.int32).max  # onset for slots a spec does not hit
+
+
+@dataclasses.dataclass(frozen=True)
+class Perturbation:
+    """Base spec: onset step, affected fleet fraction, per-slot onset jitter."""
+
+    step: int = 0
+    frac: float = 1.0   # fraction of slots hit (per-slot Bernoulli)
+    jitter: int = 0     # per-slot onset delay drawn uniform in [0, jitter]
+
+
+@dataclasses.dataclass(frozen=True)
+class ActuatorDropout(Perturbation):
+    k: int = 1                                   # actuators killed per slot
+    mask: Optional[tuple] = None                 # explicit mask overrides k
+
+
+@dataclasses.dataclass(frozen=True)
+class SensorNoise(Perturbation):
+    std: float = 0.1    # white-noise std added to every obs channel
+    bias: float = 0.0   # per-slot fixed bias drawn uniform in [-bias, bias]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamShift(Perturbation):
+    param: str = "gain"
+    scale: float = 1.0  # multiplier on the named parameter
+    add: float = 0.0    # additive shift (applied after the multiplier)
+    spread: float = 0.0  # per-slot relative jitter on scale/add (uniform +-)
+
+
+@dataclasses.dataclass(frozen=True)
+class GoalSwitch(Perturbation):
+    source: str = "eval"                         # "eval" | "train"
+    tasks: Optional[tuple] = None                # explicit (task_dim,) task
+
+
+class Schedule(NamedTuple):
+    """Compiled perturbation rows: K specs x B slots, all neutral-padded."""
+
+    onset: jax.Array      # (K, B) int32; NEVER where the spec misses a slot
+    act_mask: jax.Array   # (K, B, A) multiplicative mask (neutral 1)
+    obs_std: jax.Array    # (K, B) additive obs noise std (neutral 0)
+    obs_bias: jax.Array   # (K, B, O) additive obs bias (neutral 0)
+    p_mul: jax.Array      # (K, B, P) param multiplier (neutral 1)
+    p_add: jax.Array      # (K, B, P) param additive shift (neutral 0)
+    task: jax.Array       # (K, B, T) replacement task
+    task_on: jax.Array    # (K, B) 1 where the row switches the task
+
+    @property
+    def num_events(self) -> int:
+        return self.onset.shape[0]
+
+
+def empty_schedule(env: Env, batch: int) -> Schedule:
+    """A K=0 schedule (the no-perturbation rollout, same program shape-wise
+    for a fixed K; used as the neutral base the compiler fills in)."""
+    return _neutral(env, 0, batch)
+
+
+def _neutral(env: Env, k: int, batch: int) -> Schedule:
+    a, o = env.act_dim, env.obs_dim
+    p = len(env.PARAM_NAMES)
+    t_dim = env.train_tasks().shape[1]
+    return Schedule(
+        onset=jnp.full((k, batch), NEVER, jnp.int32),
+        act_mask=jnp.ones((k, batch, a), jnp.float32),
+        obs_std=jnp.zeros((k, batch), jnp.float32),
+        obs_bias=jnp.zeros((k, batch, o), jnp.float32),
+        p_mul=jnp.ones((k, batch, p), jnp.float32),
+        p_add=jnp.zeros((k, batch, p), jnp.float32),
+        task=jnp.zeros((k, batch, t_dim), jnp.float32),
+        task_on=jnp.zeros((k, batch), jnp.float32))
+
+
+def compile_schedule(env: Env, perts, key: jax.Array, batch: int) -> Schedule:
+    """Draw every spec's per-slot randomization; returns the array schedule.
+
+    Deterministic in (perts, key, batch): the same inputs give the same
+    victims/onsets/magnitudes, so a scenario is reproducible data.
+    """
+    perts = tuple(perts)
+    sched = _neutral(env, len(perts), batch)
+    rows = {f: [getattr(sched, f)[i] for i in range(len(perts))]
+            for f in Schedule._fields}
+    for i, pert in enumerate(perts):
+        k_hit, k_jit, k_body = jax.random.split(jax.random.fold_in(key, i), 3)
+        hit = (jax.random.uniform(k_hit, (batch,)) < pert.frac)
+        onset = pert.step + (
+            jax.random.randint(k_jit, (batch,), 0, pert.jitter + 1)
+            if pert.jitter else jnp.zeros((batch,), jnp.int32))
+        rows["onset"][i] = jnp.where(hit, onset.astype(jnp.int32), NEVER)
+
+        if isinstance(pert, ActuatorDropout):
+            if pert.mask is not None:
+                m = jnp.broadcast_to(
+                    jnp.asarray(pert.mask, jnp.float32),
+                    (batch, env.act_dim))
+            else:
+                # k distinct victims per slot: zero the first k entries of a
+                # per-slot permutation of the actuator indices
+                def one_mask(k_slot):
+                    perm = jax.random.permutation(k_slot, env.act_dim)
+                    return jnp.where(
+                        jnp.isin(jnp.arange(env.act_dim), perm[:pert.k]),
+                        0.0, 1.0)
+                m = jax.vmap(one_mask)(jax.random.split(k_body, batch))
+            rows["act_mask"][i] = m.astype(jnp.float32)
+        elif isinstance(pert, SensorNoise):
+            rows["obs_std"][i] = jnp.full((batch,), pert.std, jnp.float32)
+            if pert.bias:
+                rows["obs_bias"][i] = jax.random.uniform(
+                    k_body, (batch, env.obs_dim), jnp.float32,
+                    -pert.bias, pert.bias)
+        elif isinstance(pert, ParamShift):
+            idx = env.param_index(pert.param)
+            if pert.spread:
+                u = jax.random.uniform(k_body, (batch,), jnp.float32,
+                                       1.0 - pert.spread, 1.0 + pert.spread)
+            else:
+                u = jnp.ones((batch,), jnp.float32)
+            rows["p_mul"][i] = rows["p_mul"][i].at[:, idx].set(
+                pert.scale * u)
+            rows["p_add"][i] = rows["p_add"][i].at[:, idx].set(
+                pert.add * u)
+        elif isinstance(pert, GoalSwitch):
+            if pert.tasks is not None:
+                task = jnp.broadcast_to(
+                    jnp.asarray(pert.tasks, jnp.float32),
+                    (batch, rows["task"][i].shape[-1]))
+            else:
+                pool = (env.eval_tasks() if pert.source == "eval"
+                        else env.train_tasks())
+                pick = jax.random.randint(k_body, (batch,), 0, pool.shape[0])
+                task = pool[pick].astype(jnp.float32)
+            rows["task"][i] = task
+            rows["task_on"][i] = jnp.ones((batch,), jnp.float32)
+        else:
+            raise TypeError(f"unknown perturbation spec {pert!r}")
+    return Schedule(**{f: jnp.stack(rows[f]) if perts else getattr(sched, f)
+                       for f in Schedule._fields})
+
+
+# ---- application (pure, called inside the rollout scan) --------------------
+
+def _active(schedule: Schedule, t: jax.Array) -> jax.Array:
+    """(K, B) float gate: 1 where row k has fired for slot b by step t."""
+    return (t >= schedule.onset).astype(jnp.float32)
+
+
+def effective_state(schedule: Schedule, state: VecEnvState,
+                    t: jax.Array) -> VecEnvState:
+    """The env state with every fired perturbation row folded in.
+
+    Pure data: masks compose multiplicatively, param shifts compose as
+    (mul, add), the LAST fired goal switch wins.  Idempotent given the BASE
+    state (the harness always applies it to the un-perturbed carry).
+    """
+    if schedule.num_events == 0:
+        return state
+    g = _active(schedule, t)                                   # (K, B)
+    mask = state.actuator_mask * jnp.prod(
+        jnp.where(g[:, :, None] > 0, schedule.act_mask, 1.0), axis=0)
+    params = state.params * jnp.prod(
+        jnp.where(g[:, :, None] > 0, schedule.p_mul, 1.0), axis=0)
+    params = params + jnp.sum(g[:, :, None] * schedule.p_add, axis=0)
+    task = state.task
+    for k in range(schedule.num_events):                       # K is static
+        on = (g[k] * schedule.task_on[k])[:, None] > 0
+        task = jnp.where(on, schedule.task[k], task)
+    return state._replace(actuator_mask=mask, params=params, task=task)
+
+
+def transform_obs(schedule: Schedule, obs: jax.Array, t: jax.Array,
+                  key: jax.Array) -> jax.Array:
+    """Sensor-fault model: obs + per-slot bias + white noise, where fired."""
+    if schedule.num_events == 0:
+        return obs
+    g = _active(schedule, t)
+    bias = jnp.sum(g[:, :, None] * schedule.obs_bias, axis=0)
+    std = jnp.sum(g * schedule.obs_std, axis=0)                # (B,)
+    noise = jax.random.normal(jax.random.fold_in(key, t), obs.shape,
+                              jnp.float32)
+    return obs + bias + std[:, None] * noise

@@ -1,0 +1,113 @@
+"""Struct-of-arrays vectorized environments.
+
+`VectorEnv` wraps a single-instance `envs.Env` and resets/steps B
+independent instances — per-slot PRNG keys, tasks, actuator masks, AND
+per-slot dynamics parameters — as one jitted program.  The batch lives in
+the leading axis of every `VecEnvState` leaf (struct of arrays, the same
+layout the fleet engine uses for its ``(B, N, M)`` weight pool), so a
+closed-loop rollout of B envs against B plastic controllers is one
+`lax.scan` over fused, fixed-shape programs: occupancy, tasks, masks, and
+physics constants are all *data*.
+
+The per-slot ``params`` leaf is what makes mid-episode dynamics shifts
+(`repro.scenarios.perturb`) possible with zero recompiles: the wrapped
+env's `dynamics` receives its perturbable constants (``Env.PARAM_NAMES``)
+as a traced vector instead of reading dataclass fields.
+
+Semantics contract (pinned in tests/test_scenarios.py): a `VectorEnv` with
+``B = 1`` produces trajectories bit-identical to stepping the wrapped env
+directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, EnvState
+
+
+class VecEnvState(NamedTuple):
+    """B independent `EnvState`s as a struct of arrays (+ per-slot params)."""
+
+    phys: jax.Array           # (B, phys_dim) float32
+    task: jax.Array           # (B, task_dim) float32
+    actuator_mask: jax.Array  # (B, act_dim) float32
+    t: jax.Array              # (B,) int32
+    params: jax.Array         # (B, P) float32 — Env.PARAM_NAMES values
+
+    def slot(self, i: int) -> EnvState:
+        """View slot i as a single-env `EnvState` (params not included)."""
+        return EnvState(phys=self.phys[i], task=self.task[i],
+                        actuator_mask=self.actuator_mask[i], t=self.t[i])
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorEnv:
+    """B instances of ``env`` stepped as one program.
+
+    All methods are pure and jit/scan-compatible.  ``tasks`` / ``masks`` /
+    ``params`` default to the wrapped env's train task 0 / all-healthy /
+    `default_params`, broadcast to every slot.
+    """
+
+    env: Env
+    batch: int
+
+    # ---- construction ------------------------------------------------------
+
+    def reset(self, key: jax.Array,
+              tasks: Optional[jax.Array] = None,
+              actuator_mask: Optional[jax.Array] = None,
+              params: Optional[jax.Array] = None) -> VecEnvState:
+        """Reset all B slots.  ``key`` is split per slot (independent init)."""
+        keys = jax.random.split(key, self.batch)
+        phys = jax.vmap(self.env.init_phys)(keys).astype(jnp.float32)
+        if tasks is None:
+            tasks = jnp.broadcast_to(self.env.train_tasks()[0],
+                                     (self.batch,
+                                      self.env.train_tasks().shape[1]))
+        tasks = jnp.asarray(tasks, jnp.float32)
+        if tasks.ndim == 1:
+            tasks = jnp.broadcast_to(tasks[None], (self.batch, tasks.shape[0]))
+        if actuator_mask is None:
+            actuator_mask = jnp.ones((self.batch, self.env.act_dim),
+                                     jnp.float32)
+        actuator_mask = jnp.asarray(actuator_mask, jnp.float32)
+        if actuator_mask.ndim == 1:
+            # same mask for every slot; without the broadcast a (act_dim,)
+            # mask would be vmapped over the batch axis (silently wrong
+            # whenever B == act_dim, a shape error otherwise)
+            actuator_mask = jnp.broadcast_to(
+                actuator_mask[None], (self.batch, self.env.act_dim))
+        if params is None:
+            params = jnp.broadcast_to(self.env.default_params(),
+                                      (self.batch,
+                                       len(self.env.PARAM_NAMES)))
+        return VecEnvState(
+            phys=phys, task=tasks, actuator_mask=actuator_mask,
+            t=jnp.zeros((self.batch,), jnp.int32),
+            params=jnp.asarray(params, jnp.float32))
+
+    # ---- stepping ----------------------------------------------------------
+
+    def observe(self, state: VecEnvState) -> jax.Array:
+        """(B, obs_dim) observations."""
+        def one(phys, task, mask, t):
+            return self.env.observe(EnvState(phys, task, mask, t))
+        return jax.vmap(one)(state.phys, state.task, state.actuator_mask,
+                             state.t)
+
+    def step(self, state: VecEnvState, actions: jax.Array
+             ) -> tuple[VecEnvState, jax.Array]:
+        """Step all B slots with (B, act_dim) actions; returns (state, (B,) r)."""
+        def one(phys, task, mask, t, action, params):
+            st, r = self.env.step(EnvState(phys, task, mask, t), action,
+                                  params=params)
+            return st.phys, st.t, r
+        phys, t, r = jax.vmap(one)(state.phys, state.task,
+                                   state.actuator_mask, state.t, actions,
+                                   state.params)
+        return state._replace(phys=phys, t=t), r

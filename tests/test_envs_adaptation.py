@@ -1,4 +1,8 @@
 """Control environments + the two-phase learning loop (paper Secs. II-B, IV)."""
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,8 +12,10 @@ from _hypothesis_compat import given, settings, st
 from repro import envs
 from repro.core import adaptation, es, snn
 
+ALL_ENVS = sorted(envs.ENVS)
 
-@pytest.mark.parametrize("name", ["direction", "velocity", "position"])
+
+@pytest.mark.parametrize("name", ALL_ENVS)
 class TestEnvs:
     def test_reset_step_shapes(self, name):
         env = envs.make(name)
@@ -24,6 +30,14 @@ class TestEnvs:
         assert env.train_tasks().shape[0] == 8
         assert env.eval_tasks().shape[0] == 72
 
+    def test_train_eval_tasks_disjoint(self, name):
+        """Eval tasks are UNSEEN: none coincides with a training task."""
+        env = envs.make(name)
+        train = np.asarray(env.train_tasks())[:, None, :]
+        ev = np.asarray(env.eval_tasks())[None, :, :]
+        dist = np.abs(train - ev).max(axis=-1)      # (8, 72) pairwise
+        assert dist.min() > 1e-3
+
     def test_actuator_mask_disables(self, name):
         env = envs.make(name)
         mask = jnp.zeros((env.act_dim,))
@@ -33,6 +47,28 @@ class TestEnvs:
         s2, _ = env.step(state, -jnp.ones((env.act_dim,)))
         np.testing.assert_allclose(np.asarray(s1.phys), np.asarray(s2.phys),
                                    atol=1e-6)
+
+    def test_action_clipping(self, name):
+        """Actions saturate at [-1, 1]: wild actions behave like +-1."""
+        env = envs.make(name)
+        state = env.reset(jax.random.PRNGKey(0), env.train_tasks()[0])
+        s_wild, r_wild = env.step(state, 100.0 * jnp.ones((env.act_dim,)))
+        s_unit, r_unit = env.step(state, jnp.ones((env.act_dim,)))
+        assert np.array_equal(np.asarray(s_wild.phys),
+                              np.asarray(s_unit.phys))
+        assert np.array_equal(np.asarray(r_wild), np.asarray(r_unit))
+
+    def test_params_vector_matches_static_defaults(self, name):
+        """dynamics(phys, force, default_params()) is bit-identical to the
+        static dataclass-field path (the scenario engine's contract)."""
+        env = envs.make(name)
+        state = env.reset(jax.random.PRNGKey(1), env.train_tasks()[1])
+        a = 0.3 * jnp.ones((env.act_dim,))
+        s1, r1 = env.step(state, a)
+        s2, r2 = env.step(state, a, params=env.default_params())
+        assert np.array_equal(np.asarray(s1.phys), np.asarray(s2.phys))
+        assert np.array_equal(np.asarray(r1), np.asarray(r2))
+        assert len(env.PARAM_NAMES) == env.default_params().shape[0]
 
     @given(seed=st.integers(0, 100))
     @settings(max_examples=5, deadline=None)
@@ -47,6 +83,46 @@ class TestEnvs:
 
         _, rs = jax.lax.scan(body, state, jnp.arange(50))
         assert bool(jnp.isfinite(rs).all())
+
+
+class TestEnvDtypes:
+    @pytest.mark.parametrize("name", ALL_ENVS)
+    def test_state_leaf_dtypes_pinned(self, name):
+        env = envs.make(name)
+        st_ = env.reset(jax.random.PRNGKey(0), env.train_tasks()[0])
+        assert st_.phys.dtype == jnp.float32
+        assert st_.task.dtype == jnp.float32
+        assert st_.actuator_mask.dtype == jnp.float32
+        assert st_.t.dtype == jnp.int32
+        assert env.default_params().dtype == jnp.float32
+
+    def test_dtypes_pinned_under_x64(self):
+        """Regression: `Env.reset`'s default actuator mask (and every other
+        EnvState leaf) must stay float32/int32 even with the global x64
+        flag on — run in a subprocess so the flag cannot leak into this
+        process's other tests."""
+        code = textwrap.dedent("""
+            import jax
+            jax.config.update("jax_enable_x64", True)
+            import jax.numpy as jnp
+            from repro import envs
+            for name, cls in envs.ENVS.items():
+                env = cls()
+                st = env.reset(jax.random.PRNGKey(0), env.train_tasks()[0])
+                assert st.phys.dtype == jnp.float32, (name, st.phys.dtype)
+                assert st.task.dtype == jnp.float32, (name, st.task.dtype)
+                assert st.actuator_mask.dtype == jnp.float32, (
+                    name, st.actuator_mask.dtype)
+                assert st.t.dtype == jnp.int32, (name, st.t.dtype)
+                assert env.default_params().dtype == jnp.float32, name
+                st2, r = env.step(st, jnp.zeros((env.act_dim,), jnp.float32))
+                assert st2.t.dtype == jnp.int32, (name, st2.t.dtype)
+            print("x64-ok")
+        """)
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True, timeout=300)
+        assert proc.returncode == 0, proc.stderr
+        assert "x64-ok" in proc.stdout
 
 
 class TestPEPG:

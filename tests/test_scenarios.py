@@ -1,0 +1,324 @@
+"""Scenario engine: vectorized envs, perturbation schedules, closed-loop
+fleet adaptation (the paper's robust-adaptation claim, asserted)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import envs
+from repro import scenarios as S
+from repro.core import snn
+from repro.scenarios import perturb as P
+
+IMPLS = ("xla", "pallas-interpret")
+
+
+def _vec_state_from_single(venv, st):
+    """A B=1 VecEnvState whose slot 0 is exactly the single EnvState."""
+    vst = venv.reset(jax.random.PRNGKey(0), tasks=st.task[None])
+    return vst._replace(phys=st.phys[None],
+                        actuator_mask=st.actuator_mask[None])
+
+
+@pytest.mark.parametrize("name", sorted(envs.ENVS))
+class TestVectorEnv:
+    def test_b1_bitwise_matches_single_env(self, name):
+        """VectorEnv[B=1] trajectories are BIT-identical to stepping the
+        wrapped env directly (same phys, same rewards)."""
+        env = envs.make(name)
+        st = env.reset(jax.random.PRNGKey(3), env.train_tasks()[2])
+        venv = S.VectorEnv(env, 1)
+        vst = _vec_state_from_single(venv, st)
+        for t in range(25):
+            a = jnp.sin(0.3 * t + jnp.arange(env.act_dim,
+                                             dtype=jnp.float32))
+            st, r = env.step(st, a)
+            vst, vr = venv.step(vst, a[None])
+            assert np.array_equal(np.asarray(st.phys),
+                                  np.asarray(vst.phys[0])), f"t={t}"
+            assert np.array_equal(np.asarray(r), np.asarray(vr[0])), f"t={t}"
+        obs = env.observe(st)
+        vobs = venv.observe(vst)
+        assert np.array_equal(np.asarray(obs), np.asarray(vobs[0]))
+
+    def test_reset_broadcasts_1d_actuator_mask(self, name):
+        """A single (act_dim,) mask means 'this mask in EVERY slot' — with
+        batch == act_dim it must not be consumed as per-slot scalars."""
+        env = envs.make(name)
+        venv = S.VectorEnv(env, env.act_dim)   # the dangerous B == A case
+        mask = jnp.ones((env.act_dim,)).at[0].set(0.0)
+        vst = venv.reset(jax.random.PRNGKey(0), actuator_mask=mask)
+        assert vst.actuator_mask.shape == (env.act_dim, env.act_dim)
+        assert np.array_equal(np.asarray(vst.actuator_mask),
+                              np.broadcast_to(np.asarray(mask),
+                                              (env.act_dim, env.act_dim)))
+
+    def test_per_slot_params_are_independent(self, name):
+        """Shifting slot 1's dynamics params must not touch slot 0."""
+        env = envs.make(name)
+        venv = S.VectorEnv(env, 2)
+        vst = venv.reset(jax.random.PRNGKey(0),
+                         tasks=jnp.broadcast_to(env.train_tasks()[0],
+                                                (2, env.train_tasks().shape[1])))
+        vst = vst._replace(phys=jnp.broadcast_to(vst.phys[0], vst.phys.shape))
+        # additive shift: a uniform multiplier can cancel exactly (e.g.
+        # scaling mass, gain, drag, and spring together leaves the
+        # stabilizer's dynamics invariant)
+        shifted = vst.params.at[1].add(0.5)
+        vst = vst._replace(params=shifted)
+        a = jnp.ones((2, env.act_dim)) * 0.5
+        for _ in range(5):
+            vst, _ = venv.step(vst, a)
+        assert not np.allclose(np.asarray(vst.phys[0]),
+                               np.asarray(vst.phys[1]))
+        # slot 0 matches an unshifted single-env rollout bit-for-bit
+        st = env.reset(jax.random.PRNGKey(9), env.train_tasks()[0])
+        st = st._replace(phys=jax.device_get(venv.reset(
+            jax.random.PRNGKey(0)).phys[0]))
+        for _ in range(5):
+            st, _ = env.step(st, a[0])
+        assert np.array_equal(np.asarray(st.phys), np.asarray(vst.phys[0]))
+
+
+class TestSchedules:
+    def test_dropout_kills_k_actuators_per_hit_slot(self):
+        env = envs.make("direction")
+        sched = P.compile_schedule(
+            env, (P.ActuatorDropout(k=3, step=10),), jax.random.PRNGKey(0),
+            batch=16)
+        mask = np.asarray(sched.act_mask[0])
+        assert mask.shape == (16, 8)
+        assert (mask.sum(axis=1) == 5).all()       # 3 of 8 dead per slot
+        assert set(np.unique(mask)) <= {0.0, 1.0}
+
+    def test_frac_hits_a_strict_subset(self):
+        env = envs.make("direction")
+        sched = P.compile_schedule(
+            env, (P.ActuatorDropout(k=1, step=4, frac=0.5),),
+            jax.random.PRNGKey(1), batch=64)
+        onset = np.asarray(sched.onset[0])
+        hit = onset < P.NEVER
+        assert 0 < hit.sum() < 64
+        # missed slots never fire: their effective mask stays all-healthy
+        venv = S.VectorEnv(env, 64)
+        vst = venv.reset(jax.random.PRNGKey(2))
+        eff = P.effective_state(sched, vst, jnp.int32(100))
+        m = np.asarray(eff.actuator_mask)
+        assert (m[~hit] == 1.0).all()
+        assert (m[hit].sum(axis=1) == 7).all()
+
+    def test_onset_gates_and_does_not_compound(self):
+        """Param shifts apply only after onset and are idempotent over time
+        (re-derived from the base state each step, never compounded)."""
+        env = envs.make("stabilizer")
+        sched = P.compile_schedule(
+            env, (P.ParamShift(param="wind", add=2.0, step=7),
+                  P.ParamShift(param="gain", scale=0.5, step=9)),
+            jax.random.PRNGKey(0), batch=3)
+        venv = S.VectorEnv(env, 3)
+        vst = venv.reset(jax.random.PRNGKey(0))
+        i_wind = env.param_index("wind")
+        i_gain = env.param_index("gain")
+        before = P.effective_state(sched, vst, jnp.int32(6))
+        assert np.allclose(np.asarray(before.params),
+                           np.asarray(vst.params))
+        mid = P.effective_state(sched, vst, jnp.int32(7))
+        assert np.allclose(np.asarray(mid.params[:, i_wind]), 2.0)
+        assert np.allclose(np.asarray(mid.params[:, i_gain]), 4.0)
+        for t in (9, 50, 200):
+            late = P.effective_state(sched, vst, jnp.int32(t))
+            assert np.allclose(np.asarray(late.params[:, i_wind]), 2.0)
+            assert np.allclose(np.asarray(late.params[:, i_gain]), 2.0)
+
+    def test_goal_switch_last_wins(self):
+        env = envs.make("direction")
+        t1 = tuple(float(x) for x in env.eval_tasks()[3])
+        t2 = tuple(float(x) for x in env.eval_tasks()[40])
+        sched = P.compile_schedule(
+            env, (P.GoalSwitch(step=5, tasks=t1),
+                  P.GoalSwitch(step=10, tasks=t2)),
+            jax.random.PRNGKey(0), batch=2)
+        venv = S.VectorEnv(env, 2)
+        vst = venv.reset(jax.random.PRNGKey(0))
+        assert np.allclose(np.asarray(
+            P.effective_state(sched, vst, jnp.int32(7)).task[0]), t1)
+        assert np.allclose(np.asarray(
+            P.effective_state(sched, vst, jnp.int32(12)).task[0]), t2)
+
+    def test_obs_noise_deterministic_and_gated(self):
+        env = envs.make("position")
+        sched = P.compile_schedule(
+            env, (P.SensorNoise(std=0.3, bias=0.1, step=5),),
+            jax.random.PRNGKey(0), batch=4)
+        obs = jnp.zeros((4, env.obs_dim))
+        key = jax.random.PRNGKey(42)
+        before = P.transform_obs(sched, obs, jnp.int32(4), key)
+        assert np.array_equal(np.asarray(before), np.asarray(obs))
+        a1 = P.transform_obs(sched, obs, jnp.int32(6), key)
+        a2 = P.transform_obs(sched, obs, jnp.int32(6), key)
+        b = P.transform_obs(sched, obs, jnp.int32(7), key)
+        assert np.array_equal(np.asarray(a1), np.asarray(a2))
+        assert not np.array_equal(np.asarray(a1), np.asarray(b))
+        assert float(jnp.abs(a1).max()) > 0
+
+
+class TestMetrics:
+    def test_known_geometry(self):
+        r = np.concatenate([np.full(40, -1.0), np.full(30, -3.0),
+                            np.full(30, -1.5)])
+        m = S.adaptation_metrics(r, onset=40, window=20)
+        assert m["pre"] == pytest.approx(-1.0)
+        assert m["post"] == pytest.approx(-3.0)
+        assert m["drop"] == pytest.approx(2.0)
+        assert m["final"] == pytest.approx(-1.5)
+        assert m["recovery_frac"] == pytest.approx(0.75)
+        assert m["time_to_recover"] > 0
+
+    def test_never_recovers(self):
+        r = np.concatenate([np.full(30, -1.0), np.full(70, -3.0)])
+        m = S.adaptation_metrics(r, onset=30, window=20)
+        assert m["recovery_frac"] == pytest.approx(0.0)
+        assert m["time_to_recover"] == -1
+
+    def test_onset_bounds(self):
+        with pytest.raises(ValueError):
+            S.adaptation_metrics(np.zeros(10), onset=10)
+
+
+class TestClosedLoop:
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_b1_fleet_matches_single_controller_rollout(self, impl):
+        """The full closed loop at B=1 reproduces a hand-rolled single-env,
+        single-controller rollout (engine fleet path vs unbatched path; the
+        env dynamics are bit-identical, the controller paths agree to float
+        round-off)."""
+        env = envs.make("stabilizer", episode_len=30, spring=2.5)
+        scfg = S.controller_config(env, impl=impl)
+        theta = S.reference_rule("stabilizer", scfg)
+        st = env.reset(jax.random.PRNGKey(3), env.train_tasks()[0])
+        net = snn.init_state(scfg)
+        rs = []
+        for _ in range(30):
+            obs = env.observe(st)
+            net, a = snn.controller_step(scfg, net, theta, obs)
+            st, r = env.step(st, a)
+            rs.append(float(r))
+
+        prog = S.make_closed_loop(env, scfg, batch=1, steps=30)
+        vst = _vec_state_from_single(
+            prog.venv, env.reset(jax.random.PRNGKey(3),
+                                 env.train_tasks()[0]))
+        res = prog._rollout(prog.init_net(), vst, theta,
+                            P.empty_schedule(env, 1), jnp.int32(31),
+                            jax.random.PRNGKey(0))
+        np.testing.assert_allclose(np.asarray(res.rewards)[:, 0],
+                                   np.asarray(rs), rtol=0, atol=1e-4)
+
+    def test_zero_recompiles_across_schedules_and_freeze(self):
+        """One compiled program serves: clean episode, two different
+        perturbation schedules, and both freeze settings."""
+        spec = S.SCENARIOS["stabilizer-wind"]
+        env = spec.make_env()
+        scfg = S.controller_config(env, impl="xla")
+        theta = S.reference_rule(spec.env_name, scfg)
+        prog = S.make_closed_loop(env, scfg, batch=4, steps=40)
+        key = jax.random.PRNGKey(0)
+        s1 = P.compile_schedule(env, spec.perturbations,
+                                jax.random.PRNGKey(1), 4)
+        # same K as s1: a schedule is pure operand data, so only its VALUES
+        # differ — a different K would be a new shape (one extra trace)
+        s2 = P.compile_schedule(
+            env, (P.ParamShift(param="wind", add=-1.0, step=5),
+                  ), jax.random.PRNGKey(2), 4)
+        prog.run(theta, key, tasks=spec.tasks, schedule=s1)
+        prog.run(theta, key, tasks=spec.tasks, schedule=s2)
+        prog.run(theta, key, tasks=spec.tasks, schedule=s2, freeze_at=10)
+        prog.run(theta, key, tasks=spec.tasks, schedule=s1, freeze_at=0)
+        assert prog.compile_count() == 1
+
+    def test_actions_respect_mask_and_clip(self):
+        """Actions recorded by the harness are in [-1, 1]; a dropout
+        schedule zeroes the masked actuator's effect (env-side)."""
+        spec = S.SCENARIOS["direction-dropout"]
+        env = spec.make_env()
+        scfg = S.controller_config(env, impl="xla")
+        theta = S.reference_rule(spec.env_name, scfg)
+        prog = S.make_closed_loop(env, scfg, batch=4, steps=30)
+        res = prog.run(theta, jax.random.PRNGKey(0), tasks=spec.tasks)
+        a = np.asarray(res.actions)
+        assert np.isfinite(a).all()
+        assert np.isfinite(np.asarray(res.rewards)).all()
+        # controller_step tanh-squashes the readout: recorded actions are
+        # already in [-1, 1] before the env's own clip
+        assert (np.abs(a) <= 1.0).all()
+
+    def test_quant_closed_loop_bitwise_across_backends(self):
+        """The quantized closed loop (integer engine datapath driving float
+        env dynamics through the SAME dequantized actions) is bit-identical
+        between impl="xla" and impl="pallas-interpret"."""
+        spec = S.SCENARIOS["stabilizer-wind"]
+        env = spec.make_env()
+        out = {}
+        for impl in IMPLS:
+            scfg = S.controller_config(env, impl=impl, quant=True)
+            theta = S.reference_rule(spec.env_name, scfg)
+            prog = S.make_closed_loop(env, scfg, batch=4, steps=40)
+            sched = P.compile_schedule(env, spec.perturbations,
+                                       jax.random.PRNGKey(1), 4)
+            out[impl] = prog.run(theta, jax.random.PRNGKey(0),
+                                 tasks=spec.tasks, schedule=sched)
+        assert np.array_equal(np.asarray(out["xla"].rewards),
+                              np.asarray(out["pallas-interpret"].rewards))
+        for wa, wb in zip(out["xla"].net.w, out["pallas-interpret"].net.w):
+            assert np.array_equal(np.asarray(wa), np.asarray(wb))
+
+    def test_freeze_gate_freezes_weights_bit_exactly(self):
+        """freeze_at=0 keeps the (zero-initialized) weights exactly zero in
+        both float and quant modes — the frozen ablation is a true no-op on
+        the synapses, not a small update."""
+        spec = S.SCENARIOS["stabilizer-wind"]
+        env = spec.make_env()
+        for quant in (False, True):
+            scfg = S.controller_config(env, impl="xla", quant=quant)
+            theta = S.reference_rule(spec.env_name, scfg)
+            prog = S.make_closed_loop(env, scfg, batch=2, steps=20)
+            res = prog.run(theta, jax.random.PRNGKey(0), tasks=spec.tasks,
+                           freeze_at=0)
+            for w in res.net.w:
+                assert not np.asarray(w).any(), f"quant={quant}"
+
+
+class TestRecoveryGate:
+    """The acceptance criterion: on the gate scenarios, plasticity-on
+    recovers >= half the perturbation-induced return drop while the
+    frozen-weights ablation does not — on xla AND pallas-interpret, in
+    float32 AND quantized mode, with zero recompiles across perturbation
+    events inside the scan."""
+
+    @pytest.mark.parametrize("name", S.GATE_SCENARIOS)
+    @pytest.mark.parametrize("impl", IMPLS)
+    @pytest.mark.parametrize("mode", ("float32", "quant"))
+    def test_plastic_recovers_frozen_does_not(self, name, impl, mode):
+        spec = S.SCENARIOS[name]
+        env = spec.make_env()
+        scfg = S.controller_config(env, impl=impl, quant=(mode == "quant"))
+        theta = S.reference_rule(spec.env_name, scfg)
+        prog = S.make_closed_loop(env, scfg, batch=spec.batch,
+                                  steps=spec.steps)
+        sched = S.compile_schedule(env, spec.perturbations,
+                                   jax.random.PRNGKey(123), spec.batch)
+        key = jax.random.PRNGKey(7)
+        res_p = prog.run(theta, key, tasks=spec.tasks, schedule=sched)
+        res_f = prog.run(theta, key, tasks=spec.tasks, schedule=sched,
+                         freeze_at=spec.onset)
+        mp = S.adaptation_metrics(res_p.rewards, spec.onset, spec.window)
+        mf = S.adaptation_metrics(res_f.rewards, spec.onset, spec.window)
+        assert mp["drop"] >= 0.02, mp
+        assert mp["recovery_frac"] >= 0.5, mp
+        assert mf["recovery_frac"] <= 0.25, mf
+        assert mp["time_to_recover"] > 0, mp
+        # zero recompiles: plastic + frozen + every perturbation event in
+        # the scan ran through ONE compiled executable
+        assert prog.compile_count() == 1

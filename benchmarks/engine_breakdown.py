@@ -21,6 +21,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 from repro.core import engine
 from repro.launch.mesh import HW
@@ -83,6 +84,93 @@ def measure_wall(b, n, m, iters=5, impls=("xla",)) -> dict:
     return res
 
 
+def measure_launch_overhead(iters: int = 20) -> dict:
+    """Per-launch floor: a NO-OP `pallas_call` vs the real step kernel.
+
+    The no-op kernel copies one (8, 128) tile — everything it costs is
+    launch/dispatch overhead, not compute.  Its share of the control-scale
+    dual-engine step is the fraction a per-step schedule burns on launches
+    alone, and exactly what the time-fused rollout (`engine.rollout`, one
+    launch per K * num_layers steps) amortizes away.
+    """
+    def _noop(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    x = jnp.zeros((8, 128), jnp.float32)
+    fn = jax.jit(pl.pallas_call(
+        _noop, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True))
+    out = fn(x)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(x)
+        jax.block_until_ready(out)
+    noop_us = (time.perf_counter() - t0) / iters * 1e6
+    wall = measure_wall(1, 8, 128, iters=iters,
+                        impls=("pallas-interpret",))
+    step_us = wall["pallas-interpret_us"]
+    return {"impl": "pallas-interpret",
+            "noop_pallas_call_us": noop_us,
+            "step_kernel_us": step_us,
+            "launch_overhead_fraction": min(1.0, noop_us / step_us)}
+
+
+def measure_fused_k_sweep(ks=(1, 2, 4, 8), b: int = 16, n: int = 64,
+                          m: int = 64, iters: int = 3,
+                          impl: str = "pallas-interpret") -> dict:
+    """Fused-vs-per-step window timing: K steps per launch vs K launches.
+
+    Both sides run the SAME fleet workload (B per-stream weight sets, one
+    plastic layer) jitted; the per-step side issues one `layer_step`
+    pallas_call per timestep, the fused side one `engine.rollout` launch
+    for the whole window.  Reported per-TIMESTEP so rows are comparable
+    across K.
+    """
+    key = jax.random.PRNGKey(0)
+    ks_r = jax.random.split(key, 5)
+    x = (jax.random.uniform(ks_r[0], (b, n)) > 0.5).astype(jnp.float32)
+    layer = engine.LayerState(
+        w=jnp.zeros((b, n, m), jnp.float32),
+        v=0.1 * jax.random.normal(ks_r[1], (b, m)),
+        trace_pre=jax.random.uniform(ks_r[2], (b, n)),
+        trace_post=jax.random.uniform(ks_r[3], (b, m)),
+        theta=0.05 * jax.random.normal(ks_r[4], (4, n, m)))
+    params = engine.EngineParams(block_m=m)
+    net = engine.NetworkState(
+        w=(layer.w,), v=(layer.v,),
+        trace=(layer.trace_pre, layer.trace_post),
+        t=jnp.zeros((), jnp.int32))
+    theta = [layer.theta]
+
+    def time_fn(fn, *args):
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    rows = []
+    for k in ks:
+        def per_step(l, xx):
+            for _ in range(k):
+                l, _o = engine.layer_step(l, xx, params=params, impl=impl)
+            return l
+        drives = jnp.broadcast_to(x[None], (k, b, n)).astype(jnp.float32)
+        step_us = time_fn(jax.jit(per_step), layer, x)
+        fused_us = time_fn(
+            jax.jit(functools.partial(engine.rollout, params=[params],
+                                      impl=impl)),
+            net, theta, drives)
+        rows.append({"k": k,
+                     "per_step_us_per_step": step_us / k,
+                     "fused_us_per_step": fused_us / k,
+                     "fused_speedup": step_us / fused_us})
+    return {"impl": impl, "batch": b, "n": n, "m": m, "sweep": rows}
+
+
 def main(quick: bool = False, interpret: bool = False):
     os.makedirs(RESULTS, exist_ok=True)
     # paper scales: control (8-128-8 @ batch 1), MNIST (784-1024-10)
@@ -110,6 +198,22 @@ def main(quick: bool = False, interpret: bool = False):
             for e in ("forward", "plasticity")) for i in (1, 2))
     rows["control_e2e_roofline_us"] = total_us
     print(f"control_e2e,roofline_total,,,{total_us:.3f},  (paper FPGA: 8 us)")
+    # per-launch overhead floor (the cost the fused rollout amortizes)
+    lo = measure_launch_overhead(iters=5 if quick else 20)
+    rows["launch_overhead"] = lo
+    print(f"launch_overhead,noop_vs_step,,,"
+          f"{lo['noop_pallas_call_us']:.1f}us/"
+          f"{lo['step_kernel_us']:.1f}us,"
+          f"{100 * lo['launch_overhead_fraction']:.0f}%")
+    # fused-vs-per-step window: K timesteps per launch vs K launches
+    sweep = measure_fused_k_sweep(ks=(1, 4) if quick else (1, 2, 4, 8),
+                                  iters=2 if quick else 3)
+    rows["fused_k_sweep"] = sweep
+    for r in sweep["sweep"]:
+        print(f"fused_k_sweep,k={r['k']},,,"
+              f"{r['per_step_us_per_step']:.0f}us->"
+              f"{r['fused_us_per_step']:.0f}us,"
+              f"{r['fused_speedup']:.2f}x")
     with open(os.path.join(RESULTS, "engine_breakdown.json"), "w") as f:
         json.dump(rows, f, indent=1)
     return rows

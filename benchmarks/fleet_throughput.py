@@ -27,11 +27,26 @@ Baseline honesty notes:
     of the unbatched step), so expect parity there — the kernel-launch and
     theta-broadcast win this benchmark measures is a Pallas-path property.
 
+The sweep also times the TIME-FUSED path (`engine.rollout`, the rollout
+megakernel of kernels/plasticity/fused): K timesteps of the same layer in
+ONE launch, with state resident across the window.  Per-step launches are
+exactly what makes the per-step rows collapse super-linearly with B on the
+interpret backend; fusing K steps and blocking ``block_b`` streams per
+grid program divides that overhead by K * block_b.
+
     PYTHONPATH=src python benchmarks/fleet_throughput.py [--smoke] [--impl ...]
 
 Writes benchmarks/results/fleet_throughput.json:
     {"sweep": [{"batch": B, "native_steps_per_s": ..., "vmap_steps_per_s":
-    ..., "native_speedup": ...}, ...]}
+    ..., "native_speedup": ..., "native_controller_steps_per_s": ...,
+    "vmap_controller_steps_per_s": ..., "collapse_ratio": ...,
+    "fused_steps_per_s": ..., "fused_controller_steps_per_s": ...,
+    "fused_speedup_vs_per_step": ...}, ...], "fused_k": K, ...}
+
+``collapse_ratio`` is (B * steps/s at B) / (steps/s at B=1) — the
+aggregate-throughput scaling a flat per-launch cost would hold at B; a
+value far below B is the launch-overhead collapse this benchmark exposes
+(and the fused rows repair).
 """
 from __future__ import annotations
 
@@ -98,6 +113,28 @@ def bench_steps_per_s(step_fn, state, x, iters: int) -> float:
     return iters / (time.perf_counter() - t0)
 
 
+def bench_fused_steps_per_s(layer, x, params, impl: str, k: int,
+                            block_b: int, iters: int) -> float:
+    """Per-TIMESTEP rate of the time-fused rollout (K steps per launch)."""
+    b, n = x.shape
+    m = layer.v.shape[-1]
+    net = engine.NetworkState(
+        w=(layer.w,), v=(layer.v,),
+        trace=(layer.trace_pre, layer.trace_post),
+        t=jnp.zeros((), jnp.int32))
+    drives = jnp.broadcast_to(x[None], (k, b, n)).astype(jnp.float32)
+    fn = jax.jit(functools.partial(
+        engine.rollout, params=[params], impl=impl, block_b=block_b))
+    theta = [layer.theta]
+    net2, out = fn(net, theta, drives)         # compile + warm-up
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        net2, out = fn(net2, theta, drives)
+    jax.block_until_ready(out)
+    return iters * k / (time.perf_counter() - t0)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -107,6 +144,10 @@ def main(argv=None):
     ap.add_argument("--n", type=int, default=64)
     ap.add_argument("--m", type=int, default=64)
     ap.add_argument("--block-m", type=int, default=64)
+    ap.add_argument("--k", type=int, default=8,
+                    help="fused-rollout window length (timesteps per launch)")
+    ap.add_argument("--block-b", type=int, default=8,
+                    help="fused-rollout streams per grid program")
     ap.add_argument("--max-batch", type=int, default=None,
                     help="cap the B sweep (the aggregate benchmarks/run.py "
                          "harness uses 256 to bound interpret-mode wall "
@@ -129,7 +170,9 @@ def main(argv=None):
         batches = [b for b in batches if b <= args.max_batch]
     params = engine.EngineParams(block_m=args.block_m)
     sweep = []
-    print("batch,native_steps_per_s,vmap_steps_per_s,native_speedup")
+    print("batch,native_steps_per_s,vmap_steps_per_s,native_speedup,"
+          "fused_steps_per_s,fused_speedup_vs_per_step")
+    native_b1 = None
     for b in batches:
         state, x = make_fleet(b, args.n, args.m, jax.random.PRNGKey(b))
         iters = max(2, min(30, 4096 // b)) if not args.smoke else 2
@@ -139,17 +182,40 @@ def main(argv=None):
         vmapped = bench_steps_per_s(
             functools.partial(_vmap_step, params=params, impl=args.impl),
             state, x, iters)
+        # time-fused path: same workload, K timesteps per launch.  Window
+        # iters scale by K since each launch does K steps of work.
+        fused_iters = max(2, iters // 2) if not args.smoke else 2
+        fused = bench_fused_steps_per_s(state, x, params, args.impl,
+                                        args.k, args.block_b, fused_iters)
+        if native_b1 is None:
+            native_b1 = native                 # batches always start at B=1
         row = {"batch": b, "native_steps_per_s": native,
                "vmap_steps_per_s": vmapped,
                "native_speedup": native / vmapped,
-               "native_controller_steps_per_s": native * b}
+               "native_controller_steps_per_s": native * b,
+               # satellite bugfix: the baseline's per-controller number and
+               # the aggregate-scaling ratio were missing from the schema,
+               # hiding the collapse this PR's fused path repairs
+               "vmap_controller_steps_per_s": vmapped * b,
+               "collapse_ratio": (native * b) / native_b1,
+               "fused_k": args.k,
+               "fused_steps_per_s": fused,
+               "fused_controller_steps_per_s": fused * b,
+               "fused_collapse_ratio": None,   # filled after the sweep
+               "fused_speedup_vs_per_step": fused / native}
         sweep.append(row)
-        print(f"{b},{native:.2f},{vmapped:.2f},{native / vmapped:.2f}")
+        print(f"{b},{native:.2f},{vmapped:.2f},{native / vmapped:.2f},"
+              f"{fused:.2f},{fused / native:.2f}")
+    fused_b1 = sweep[0]["fused_steps_per_s"]
+    for row in sweep:
+        row["fused_collapse_ratio"] = (row["fused_controller_steps_per_s"]
+                                       / fused_b1)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump({"impl": args.impl, "n": args.n, "m": args.m,
-                   "block_m": args.block_m, "smoke": bool(args.smoke),
+                   "block_m": args.block_m, "fused_k": args.k,
+                   "block_b": args.block_b, "smoke": bool(args.smoke),
                    "sweep": sweep}, f, indent=1)
     return 0
 

@@ -8,6 +8,12 @@ time of the PRODUCT path — `snn.controller_step`, every layer routed
 through the PlasticEngine (--impl selects the backend; "xla" default, an
 upper bound — CPU is not the target).
 
+Since the time-fused rollout landed, `snn.controller_step` executes its
+whole ``timesteps x layers`` window as ONE `engine.rollout` launch (a
+single `pallas_call` on the Pallas backends) — the measured wall time here
+is the fused path, the software analogue of the paper's single-pipeline
+8 µs datapath.
+
 Prints a CSV: scale,roofline_us,cpu_wall_us,paper_fpga_us.
 """
 from __future__ import annotations
@@ -53,7 +59,7 @@ def measured_wall_us(cfg: snn.SNNConfig, iters: int = 20) -> float:
 
 def main(quick: bool = False, impl: str = "xla"):
     os.makedirs(RESULTS, exist_ok=True)
-    rows = {"impl": impl}
+    rows = {"impl": impl, "fused_rollout": True}
     print("scale,roofline_us,cpu_wall_us,paper_fpga_us")
     for name, (o, h, a, t) in {
         "control_8_128_8": (8, 128, 8, 4),

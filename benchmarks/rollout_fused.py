@@ -1,0 +1,178 @@
+"""Time-fused rollout megakernel: fused-vs-per-step K-sweep, both datapaths.
+
+Benchmarks `engine.rollout` (kernels/plasticity/fused: K timesteps x all
+layers in ONE `pallas_call`, state VMEM-resident across the window) against
+the per-step schedule (one `layer_step` launch per timestep) on the same
+fleet workload, for the float32 AND the int8/int32 fixed-point datapaths.
+
+Each cell also asserts the fusion contract before timing it: the fused
+window must be BITWISE equal to the scanned xla oracle on the fixed-point
+datapath (integer reductions — loop structure cannot move a bit), and
+float-exact to 1e-6 on float32 (at 64-wide layers XLA contracts the dw
+FMA chain differently in the two programs, the same ULP-level freedom the
+per-step float kernels have always had; `tests/test_fused.py` pins float
+BITWISE at controller scale).  A row only exists if its parity gate held;
+``bitwise_vs_oracle`` records the measured bit-equality per cell.
+
+    PYTHONPATH=src python benchmarks/rollout_fused.py [--smoke] [--impl ...]
+
+Writes benchmarks/results/rollout_fused.json:
+    {"impl": ..., "batch": B, "n": N, "m": M, "block_b": ...,
+     "datapaths": ["float32", "int8"], "sweep": [
+        {"k": K, "datapath": ..., "per_step_us_per_step": ...,
+         "fused_us_per_step": ..., "fused_speedup": ...,
+         "bitwise_vs_oracle": true}, ...]}
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.kernels.plasticity import quant as Q
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def make_net(b: int, n: int, m: int, key: jax.Array, qc=None):
+    """One-layer fleet: B per-stream weight sets, shared rule theta."""
+    ks = jax.random.split(key, 6)
+    if qc is None:
+        w = jnp.zeros((b, n, m), jnp.float32)
+        v = 0.1 * jax.random.normal(ks[1], (b, m))
+        tr_pre = jax.random.uniform(ks[2], (b, n))
+        tr_post = jax.random.uniform(ks[3], (b, m))
+        w_scale = ()
+        x = (jax.random.uniform(ks[0], (b, n)) > 0.5).astype(jnp.float32)
+    else:
+        w = jnp.zeros((b, n, m), jnp.int8)
+        v = Q.to_fixed(0.1 * jax.random.normal(ks[1], (b, m)), qc)
+        tr_pre = Q.to_fixed(jax.random.uniform(ks[2], (b, n)), qc)
+        tr_post = Q.to_fixed(jax.random.uniform(ks[3], (b, m)), qc)
+        w_scale = (jnp.full((b,), qc.w_scale, jnp.float32),)
+        x = Q.to_fixed(
+            (jax.random.uniform(ks[0], (b, n)) > 0.5).astype(jnp.float32),
+            qc)
+    theta = [0.05 * jax.random.normal(ks[4], (4, n, m))]
+    net = engine.NetworkState(w=(w,), v=(v,), trace=(tr_pre, tr_post),
+                              t=jnp.zeros((), jnp.int32), w_scale=w_scale)
+    return net, theta, x
+
+
+def _time_us(fn, *args, iters: int) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_cell(k: int, b: int, n: int, m: int, impl: str, block_b: int,
+               qc, iters: int) -> dict:
+    net, theta, x = make_net(b, n, m, jax.random.PRNGKey(k), qc=qc)
+    params = engine.EngineParams(
+        block_m=m, quant=qc, tau_m=qc.tau_m if qc else 2.0,
+        trace_decay=qc.decay if qc else 0.8)
+    drives = jnp.broadcast_to(x[None], (k, b, n))
+
+    f_fused = jax.jit(functools.partial(engine.rollout, params=[params],
+                                        impl=impl, block_b=block_b))
+    f_oracle = jax.jit(functools.partial(engine.rollout, params=[params],
+                                         impl="xla"))
+    s_f, o_f = f_fused(net, theta, drives)
+    s_x, o_x = f_oracle(net, theta, drives)
+    pairs = list(zip(jax.tree.leaves((s_f, o_f)),
+                     jax.tree.leaves((s_x, o_x))))
+    bitwise = all(np.array_equal(np.asarray(a), np.asarray(c))
+                  for a, c in pairs)
+    if qc is not None and not bitwise:
+        raise AssertionError(
+            f"fixed-point fused rollout drifted from the scanned oracle "
+            f"(k={k}, impl={impl}) — integer reductions must be bitwise")
+    if qc is None:
+        for a, c in pairs:
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(c), rtol=1e-6, atol=1e-6,
+                err_msg=f"float fused rollout drifted beyond ULP noise "
+                        f"(k={k}, impl={impl})")
+
+    def per_step(l_net, xx):
+        # the pre-fusion schedule: one layer_step launch per timestep
+        layer = engine.LayerState(
+            w=l_net.w[0], v=l_net.v[0], trace_pre=l_net.trace[0],
+            trace_post=l_net.trace[1], theta=theta[0],
+            w_scale=l_net.w_scale[0] if l_net.w_scale else None)
+        for i in range(k):
+            seed = (Q.fold_seed(l_net.t.astype(jnp.int32) + i, 0)
+                    if qc is not None else None)
+            layer, _o = engine.layer_step(layer, xx, params=params,
+                                          impl=impl, seed=seed)
+        return layer
+
+    step_us = _time_us(jax.jit(per_step), net, x, iters=iters)
+    fused_us = _time_us(f_fused, net, theta, drives, iters=iters)
+    return {"k": k, "datapath": "int8" if qc else "float32",
+            "per_step_us_per_step": step_us / k,
+            "fused_us_per_step": fused_us / k,
+            "fused_speedup": step_us / fused_us,
+            "bitwise_vs_oracle": bitwise}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (seconds, not minutes)")
+    ap.add_argument("--impl", default="pallas-interpret",
+                    choices=["xla", "pallas", "pallas-interpret"])
+    ap.add_argument("--batch", type=int, default=64,
+                    help="fleet size; the fused win is stream blocking "
+                         "(grid B/block_b vs B), so small pools that fit "
+                         "one grid program understate it")
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--m", type=int, default=64)
+    ap.add_argument("--block-b", type=int, default=8)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.out is None:
+        name = "rollout_fused_smoke.json" if args.smoke \
+            else "rollout_fused.json"
+        args.out = os.path.join(RESULTS, name)
+
+    # smoke keeps the full batch: the fused win comes from stream blocking
+    # (grid B/block_b vs B), which a pool small enough to fit one grid
+    # program cannot show
+    ks = [1, 8] if args.smoke else [1, 2, 4, 8, 16]
+    b = args.batch
+    iters = 2 if args.smoke else 5
+    sweep = []
+    print("k,datapath,per_step_us_per_step,fused_us_per_step,fused_speedup")
+    for qc in (None, Q.QuantConfig()):
+        for k in ks:
+            row = bench_cell(k, b, args.n, args.m, args.impl,
+                             args.block_b, qc, iters)
+            sweep.append(row)
+            print(f"{k},{row['datapath']},"
+                  f"{row['per_step_us_per_step']:.0f},"
+                  f"{row['fused_us_per_step']:.0f},"
+                  f"{row['fused_speedup']:.2f}")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"impl": args.impl, "batch": b, "n": args.n, "m": args.m,
+                   "block_b": args.block_b, "smoke": bool(args.smoke),
+                   "datapaths": ["float32", "int8"], "sweep": sweep},
+                  f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

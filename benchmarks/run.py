@@ -11,6 +11,9 @@
                              zero recompiles + evict/restore bit-equality)
   quant_parity      fixed-pt float-vs-quant control parity + int8 pool bytes
                              (asserted bounds; bit-equal across backends)
+  rollout_fused     perf     time-fused rollout megakernel vs per-step
+                             launches, K-sweep x float/int8 datapaths
+                             (parity gate: quant bitwise, float <= 1e-6)
   robustness        scenario  closed-loop adaptation sweep: scenario x
                              backend x datapath, plastic vs frozen (gate
                              scenarios asserted: recovery >= 0.5 plastic,
@@ -85,6 +88,14 @@ def _scenario_values(obj):
     return _coverage_values(obj, ("scenario", "scenarios", "gate_scenarios"))
 
 
+def _datapath_values(obj):
+    """Datapath coverage: values under 'datapath'/'datapaths'/'mode' keys —
+    the fused-rollout sweep (and any future bench) must keep producing
+    BOTH its float32 and int8 cells; a sweep that silently drops one
+    fails the gate like a lost backend."""
+    return _coverage_values(obj, ("datapath", "datapaths", "mode"))
+
+
 def check_drift(reference: dict, started_at: float) -> list:
     """Compare fresh smoke outputs against the checked-in result schemas.
 
@@ -125,6 +136,10 @@ def check_drift(reference: dict, started_at: float) -> list:
         if lost_sc:
             failures.append(
                 f"{stem}: scenario coverage lost: {sorted(lost_sc)}")
+        lost_dp = _datapath_values(ref) - _datapath_values(fresh)
+        if lost_dp:
+            failures.append(
+                f"{stem}: datapath coverage lost: {sorted(lost_dp)}")
     return failures
 
 
@@ -152,7 +167,8 @@ def main(argv=None):
 
     from benchmarks import (adaptation, engine_breakdown, fleet_throughput,
                             latency, mnist_throughput, quant_parity,
-                            robustness, roofline, serving_churn)
+                            robustness, rollout_fused, roofline,
+                            serving_churn)
 
     for name, fn in (
         ("engine_breakdown", lambda: engine_breakdown.main(quick=quick)),
@@ -172,6 +188,8 @@ def main(argv=None):
              ["--smoke"] if quick else ["--steps", "100"])),
         ("quant_parity",
          lambda: quant_parity.main(["--smoke"] if quick else [])),
+        ("rollout_fused",
+         lambda: rollout_fused.main(["--smoke"] if quick else [])),
         ("robustness",
          lambda: robustness.main(["--smoke"] if quick else [])),
         ("roofline_single", lambda: roofline.main(["--mesh", "single"])),

@@ -48,7 +48,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import plasticity as _P
+from repro.kernels.plasticity import fused as _fused
 from repro.kernels.plasticity import kernel as _kernel
+from repro.kernels.plasticity import quant as _Q
 from repro.kernels.plasticity import ref as _ref
 from repro.kernels.plasticity.quant import QuantConfig
 
@@ -275,3 +278,230 @@ def layer_step(state: LayerState, x: jax.Array, *,
         out = jnp.where(active.astype(bool)[:, None], out,
                         jnp.zeros_like(out))
     return new_state, out
+
+
+def _validate_rollout_params(params) -> None:
+    """Rollout params must agree on everything a single fused window shares
+    (dynamics scalars + datapath); only spiking/plastic may vary by layer."""
+    p0 = params[0]
+    for i, p in enumerate(params):
+        for f in ("tau_m", "v_th", "v_reset", "trace_decay", "w_clip",
+                  "quant"):
+            if getattr(p, f) != getattr(p0, f):
+                raise ValueError(
+                    f"rollout fuses all layers into one window and needs "
+                    f"uniform EngineParams.{f}; layer {i} has "
+                    f"{getattr(p, f)!r} vs layer 0's {getattr(p0, f)!r}")
+
+
+def rollout(state: NetworkState, theta, drives: jax.Array, *,
+            params, impl: str = "xla",
+            teach: Optional[jax.Array] = None,
+            active: Optional[jax.Array] = None,
+            seed: Optional[jax.Array] = None,
+            unroll_k: int = 1, block_b: int = 8
+            ) -> tuple[NetworkState, jax.Array]:
+    """K fused timesteps of the WHOLE layer stack (the rollout megakernel).
+
+    The time-fused analogue of calling `layer_step` K * num_layers times:
+    on the Pallas backends the entire window executes as ONE `pallas_call`
+    (kernels/plasticity/fused) with membranes, traces, the active-slot
+    mask, and the weight tiles VMEM-resident across all K steps; on
+    ``impl="xla"`` a `lax.scan` over the per-step `layer_step` oracle
+    defines the semantics the kernel is pinned against bit-for-bit.
+
+    Args:
+      state:  `NetworkState` — shared weights (N, M) (activations unbatched
+              or batched (B, ·)) or a fleet pool (B, N, M).
+      theta:  per-layer packed (4, N_i, M_i) rules (entries may be None for
+              non-plastic layers).
+      drives: time-major input window — (K, N0), (K, B, N0); int32 fixed
+              point when the params carry a QuantConfig, float otherwise.
+      params: per-layer `EngineParams` sequence (or a single EngineParams
+              applied to every layer); must agree on the dynamics scalars
+              and quant mode (see `_validate_rollout_params`).
+      teach:  optional teaching current for the LAST layer.  Rank selects
+              the semantics: ``teach.ndim == drives.ndim`` is a per-step
+              (K, ·, M) window; ``drives.ndim - 1`` is one held signal
+              broadcast over the window (the classify_window protocol).
+      active: fleet-only (B,) slot mask, constant across the window
+              (admissions/evictions happen BETWEEN windows); inactive
+              slots are bit-frozen for all K steps.
+      seed:   fixed-point mode — base step counter (scalar, or (B,)
+              per-session counters in fleet mode); step k draws its
+              stochastic round from ``fold_seed(seed + k, layer)``, the
+              exact per-step sequence.  Defaults to ``state.t``.
+      unroll_k: Pallas time-loop chunking (0 / >= K = full unroll).  Quant
+              mode computes identical bits at every setting; float mode is
+              bit-pinned against the oracle at the default 1 for
+              controller-scale layers and drifts by ULPs when several
+              steps share one unrolled body or layers are wide (~64+) —
+              FMA-contraction freedom, see kernels/plasticity/fused.  The
+              xla oracle ignores it.
+      block_b: fleet streams per Pallas grid program.
+
+    Returns ``(new_state, outs)`` with outs (K, ·, M_last) and
+    ``new_state.t = state.t + K``.
+    """
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if isinstance(params, EngineParams):
+        params = [params] * state.num_layers
+    params = list(params)
+    if len(params) != state.num_layers:
+        raise ValueError(f"need one EngineParams per layer "
+                         f"({state.num_layers}), got {len(params)}")
+    _validate_rollout_params(params)
+    theta = list(theta)
+    if len(theta) != state.num_layers:
+        raise ValueError(f"need one theta entry per layer "
+                         f"({state.num_layers}; None for non-plastic), "
+                         f"got {len(theta)}")
+    qc = params[0].quant
+    fleet = state.w[0].ndim == 3
+    if drives.ndim not in (2, 3):
+        raise ValueError(f"drives must be (K, N0) or (K, B, N0); got "
+                         f"{drives.shape}")
+    if fleet and drives.ndim != 3:
+        raise ValueError(f"fleet rollout needs drives (K, B, N0); got "
+                         f"{drives.shape}")
+    if active is not None and not fleet:
+        raise ValueError("active slot masks are a fleet-mode contract")
+    k_steps = drives.shape[0]
+    if k_steps < 1:
+        raise ValueError("rollout needs K >= 1 timesteps")
+    if fleet:
+        b = state.w[0].shape[0]
+        if drives.shape[1] != b:
+            raise ValueError(f"fleet rollout needs drives (K, B, N0) with "
+                             f"B = {b}; got {drives.shape}")
+        if active is not None and tuple(active.shape) != (b,):
+            raise ValueError(f"active slot mask must have shape ({b},); "
+                             f"got {tuple(active.shape)}")
+    if qc is not None:
+        # same loud contracts as layer_step (the Pallas path skips it)
+        if params[0].tau_m != qc.tau_m:
+            raise ValueError(
+                f"quant mode implements tau_m = 2**tau_shift = {qc.tau_m}; "
+                f"set EngineParams.tau_m to match (got {params[0].tau_m})")
+        if abs(params[0].trace_decay - qc.decay) > 1e-9:
+            raise ValueError(
+                f"quant mode implements trace_decay = 1 - 2**-trace_shift "
+                f"= {qc.decay}; set EngineParams.trace_decay to match "
+                f"(got {params[0].trace_decay})")
+        checks = [("w", state.w[0], jnp.int8), ("drives", drives, jnp.int32),
+                  ("v", state.v[0], jnp.int32),
+                  ("trace", state.trace[0], jnp.int32)]
+        if teach is not None:
+            checks.append(("teach", teach, jnp.int32))
+        for name, arr, want in checks:
+            if arr.dtype != want:
+                raise ValueError(
+                    f"quant rollout needs {name} of dtype "
+                    f"{jnp.dtype(want).name} (build state via snn.init_state"
+                    f"/quantize_state; quantize drives/teach with "
+                    f"kernels.plasticity.quant.to_fixed); got {arr.dtype}")
+    # teach rank disambiguation: same rank as drives => per-step window;
+    # one less => held signal broadcast over the K steps.
+    if teach is not None:
+        if teach.ndim == drives.ndim - 1:
+            teach = jnp.broadcast_to(teach[None], (k_steps, *teach.shape))
+        elif teach.ndim != drives.ndim:
+            raise ValueError(
+                f"teach must be per-step (K, ..., M) of rank {drives.ndim} "
+                f"or held of rank {drives.ndim - 1}; got {teach.shape}")
+    base_seed = None
+    if qc is not None:
+        base_seed = (jnp.asarray(seed, jnp.int32) if seed is not None
+                     else state.t.astype(jnp.int32))
+
+    if impl == "xla":
+        new_state, outs = _rollout_xla(state, theta, drives, params, teach,
+                                       active, base_seed)
+    else:
+        new_state, outs = _rollout_pallas(
+            state, theta, drives, params, teach, active, base_seed,
+            unroll_k=unroll_k, block_b=block_b,
+            interpret=(impl == "pallas-interpret"))
+    return dataclasses.replace(new_state, t=state.t + k_steps), outs
+
+
+def _rollout_xla(state, theta, drives, params, teach, active, base_seed):
+    """Scanned per-step oracle: the semantic ground truth for the fused
+    kernel (body = snn.timestep's dataflow, layer steps via `layer_step`)."""
+    qc = params[0].quant
+    decay = params[0].trace_decay
+    n_layers = state.num_layers
+    ks = jnp.arange(drives.shape[0], dtype=jnp.int32)
+    xs = (drives, ks) if teach is None else (drives, teach, ks)
+
+    def body(carry, inp):
+        w, v, tr = carry
+        if teach is None:
+            x, k = inp
+            teach_k = None
+        else:
+            x, teach_k, k = inp
+        w, v, tr = list(w), list(v), list(tr)
+        if qc is not None:
+            tr0_new = _Q.trace_update_q(tr[0], x, qc)
+        else:
+            tr0_new = _P.update_trace(tr[0], x, decay)
+        if active is not None:
+            tr0_new = jnp.where(active.astype(bool)[:, None], tr0_new,
+                                tr[0])
+        tr[0] = tr0_new
+        out = None
+        for i in range(n_layers):
+            layer = LayerState(
+                w=w[i], v=v[i], trace_pre=tr[i], trace_post=tr[i + 1],
+                theta=theta[i],
+                w_scale=state.w_scale[i] if state.w_scale else None)
+            layer, out = layer_step(
+                layer, x, params=params[i], impl="xla",
+                teach=teach_k if i == n_layers - 1 else None,
+                active=active,
+                seed=(None if base_seed is None
+                      else _Q.fold_seed(base_seed + k, i)))
+            w[i], v[i], tr[i + 1] = layer.w, layer.v, layer.trace_post
+            x = out
+        return (tuple(w), tuple(v), tuple(tr)), out
+
+    (w, v, tr), outs = jax.lax.scan(body, (state.w, state.v, state.trace),
+                                    xs)
+    return dataclasses.replace(state, w=w, v=v, trace=tr), outs
+
+
+def _rollout_pallas(state, theta, drives, params, teach, active, base_seed,
+                    *, unroll_k, block_b, interpret):
+    """Dispatch the fused megakernel; promotes unbatched shared state to
+    B=1 (the kernel is rank-(B, ·) like the per-step Pallas wrappers)."""
+    qc = params[0].quant
+    fleet = state.w[0].ndim == 3
+    unbatched = not fleet and drives.ndim == 2
+    up = (lambda a: a[None]) if unbatched else (lambda a: a)
+    up_t = (lambda a: a[:, None]) if unbatched else (lambda a: a)
+    p0 = params[0]
+    thetas = [theta[i] if params[i].plastic else None
+              for i in range(state.num_layers)]
+    scales = None
+    if qc is not None:
+        scales = [state.w_scale[i] if state.w_scale
+                  else jnp.float32(qc.w_scale)
+                  for i in range(state.num_layers)]
+    outs, w, v, tr = _fused.rollout_pallas(
+        up_t(drives), state.w, thetas,
+        tuple(up(x) for x in state.v), tuple(up(x) for x in state.trace),
+        spiking=tuple(p.spiking for p in params),
+        plastic=tuple(p.plastic and thetas[i] is not None
+                      for i, p in enumerate(params)),
+        tau_m=p0.tau_m, v_th=p0.v_th, v_reset=p0.v_reset,
+        trace_decay=p0.trace_decay, w_clip=p0.w_clip, qcfg=qc,
+        scales=scales, seed=base_seed,
+        teach=None if teach is None else up_t(teach), active=active,
+        block_b=block_b, unroll_k=unroll_k, interpret=interpret)
+    if unbatched:
+        outs = outs[:, 0]
+        v = tuple(x[0] for x in v)
+        tr = tuple(x[0] for x in tr)
+    return dataclasses.replace(state, w=w, v=v, trace=tr), outs

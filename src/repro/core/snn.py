@@ -85,6 +85,8 @@ class SNNConfig:
     impl: str = "xla"                       # engine backend (see engine.IMPLS)
     block_m: int = 128                      # Pallas postsynaptic tile width
     quant: Optional[QuantConfig] = None     # fixed-point mode (None = float32)
+    unroll_k: int = 1                       # fused-rollout time-loop chunking
+    block_b: int = 8                        # fused-rollout streams per program
 
     @property
     def num_layers(self) -> int:
@@ -321,21 +323,66 @@ def timestep(cfg: SNNConfig, state: NetworkState, theta, drive: jax.Array,
                         t=state.t + 1, w_scale=state.w_scale), out
 
 
+def rollout_window(cfg: SNNConfig, state: NetworkState, theta,
+                   drives: jax.Array,
+                   teach: Optional[jax.Array] = None,
+                   active: Optional[jax.Array] = None,
+                   seed: Optional[jax.Array] = None
+                   ) -> tuple[NetworkState, jax.Array]:
+    """K SNN timesteps as ONE fused engine launch (`engine.rollout`).
+
+    The time-fused counterpart of K `timestep` calls: on the Pallas
+    backends the whole (K timesteps x num_layers) window runs as a single
+    `pallas_call` with membranes, traces, and weights VMEM-resident across
+    the window; on ``impl="xla"`` it scans the per-step oracle, so swapping
+    a timestep loop for `rollout_window` never changes the bits.
+
+    ``drives`` is time-major — (K, N_in) or (K, B, N_in) — already encoded
+    (see `encode`).  `teach`/`active`/`seed` follow the `timestep`
+    contracts; ``teach`` may be one held signal or a per-step (K, ...)
+    window (rank-dispatched by `engine.rollout`).  Like `timestep`, in
+    quant mode `drives`/`teach` are ordinary floats quantized to the
+    fixed-point event bus here and the returned outputs are dequantized,
+    so callers stay representation-agnostic.
+    """
+    qc = cfg.quant
+    if qc is not None:
+        drives = Q.to_fixed(drives, qc)
+        teach = None if teach is None else Q.to_fixed(teach, qc)
+    params = [cfg.engine_params(i) for i in range(cfg.num_layers)]
+    th = [theta[i] if cfg.plastic else None for i in range(cfg.num_layers)]
+    state, outs = engine.rollout(
+        state, th, drives, params=params, impl=cfg.impl, teach=teach,
+        active=active, seed=seed, unroll_k=cfg.unroll_k, block_b=cfg.block_b)
+    if qc is not None:
+        outs = Q.from_fixed(outs, qc)
+    return state, outs
+
+
+def encode_window(cfg: SNNConfig, obs: jax.Array, key: Optional[jax.Array],
+                  t0: jax.Array, k: Optional[int] = None) -> jax.Array:
+    """Encode a held observation into a time-major (K, ...) drive window.
+
+    Reproduces exactly the per-step `encode(cfg, obs, key, t)` sequence a
+    timestep loop would draw for t = t0, t0+1, ..., so precomputing the
+    window for `rollout_window` is bit-neutral (rate encoding folds the
+    same per-step counters into the PRNG key)."""
+    k = cfg.timesteps if k is None else k
+    ts = t0 + jnp.arange(k)
+    return jax.vmap(lambda t: encode(cfg, obs, key, t))(ts)
+
+
 def controller_step(cfg: SNNConfig, state: NetworkState, theta, obs: jax.Array,
                     key: Optional[jax.Array] = None) -> tuple[NetworkState, jax.Array]:
     """One control step = cfg.timesteps SNN timesteps on a held observation.
 
-    Returns (state, action) with action = mean readout over the window.
+    The whole window runs as one fused `rollout_window` launch (a single
+    `pallas_call` on the Pallas backends).  Returns (state, action) with
+    action = mean readout over the window.
     """
     _check_encode_key(cfg, key)
-
-    def body(carry, t):
-        st = carry
-        drive = encode(cfg, obs, key, st.t)
-        st, out = timestep(cfg, st, theta, drive)
-        return st, out
-
-    state, outs = jax.lax.scan(body, state, jnp.arange(cfg.timesteps))
+    drives = encode_window(cfg, obs, key, state.t)
+    state, outs = rollout_window(cfg, state, theta, drives)
     action = outs.mean(axis=0)
     if not cfg.spiking_readout:
         action = jnp.tanh(action)
@@ -349,13 +396,9 @@ def classify_window(cfg: SNNConfig, state: NetworkState, theta, x: jax.Array,
 
     With `teach` (e.g. `label_onehot * amplitude`) the output population is
     driven toward the labelled class during the window, so the plasticity
-    rule performs supervised online learning."""
+    rule performs supervised online learning.  The window is one fused
+    `rollout_window` launch with the teaching current held across it."""
     _check_encode_key(cfg, key)
-
-    def body(st, t):
-        drive = encode(cfg, x, key, st.t)
-        st, out = timestep(cfg, st, theta, drive, teach=teach)
-        return st, out
-
-    state, outs = jax.lax.scan(body, state, jnp.arange(cfg.timesteps))
+    drives = encode_window(cfg, x, key, state.t)
+    state, outs = rollout_window(cfg, state, theta, drives, teach=teach)
     return state, outs.sum(axis=0)

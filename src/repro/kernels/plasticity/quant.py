@@ -153,6 +153,11 @@ def dw_from_int_reductions(hebb_i32, pre_sum_i32, post_sum_i32, theta,
     ``hebb_i32 = trace_pre_fx^T @ trace_post_fx`` and the pre/post sums are
     int32 (order-independent => bit-identical between the oracle's einsum
     and the kernel's per-tile dot); everything below is elementwise.
+
+    A leading stream axis broadcasts: ``hebb (S, N, M)`` with sums
+    ``(S, N)`` / ``(S, M)`` yields a per-stream ``(S, N, M)`` dw — the
+    layout the fused rollout kernel uses for a block of fleet streams
+    (elementwise identical to S separate unbatched calls).
     """
     inv1 = jnp.float32(1.0 / (qc.one * batch))
     inv2 = jnp.float32(1.0 / (qc.one * qc.one * batch))
@@ -160,8 +165,8 @@ def dw_from_int_reductions(hebb_i32, pre_sum_i32, post_sum_i32, theta,
     pre_m = pre_sum_i32.astype(jnp.float32) * inv1
     post_m = post_sum_i32.astype(jnp.float32) * inv1
     th = theta.astype(jnp.float32)
-    return (th[ALPHA] * hebb + th[BETA] * pre_m[:, None]
-            + th[GAMMA] * post_m[None, :] + th[DELTA])
+    return (th[ALPHA] * hebb + th[BETA] * pre_m[..., :, None]
+            + th[GAMMA] * post_m[..., None, :] + th[DELTA])
 
 
 # ---- deterministic stochastic rounding -------------------------------------

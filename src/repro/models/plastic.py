@@ -25,6 +25,7 @@ Applicability notes per arch family are in DESIGN.md §Arch-applicability.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import engine
@@ -87,3 +88,49 @@ def decode_step(params, state: dict, h, cfg: ModelConfig,
     h = h + (params["scale"] * out[:, None, :]).astype(h.dtype)
     return h, {"w_fast": layer.w, "v1": v1, "v2": layer.v,
                "tr1": tr1, "tr2": layer.trace_post}
+
+
+def decode_rollout(params, state: dict, h, cfg: ModelConfig,
+                   trace_decay: float = 0.8, w_clip: float = 4.0):
+    """h (B, K, D) -> (h', new_state).  K plasticity steps, ONE fused launch.
+
+    The multi-token form of K sequential `decode_step` calls — speculative
+    drafts, chunked prefill tails, any case where a decode stream advances
+    several tokens at once.  The presynaptic population is feedforward
+    (v1/s1 depend only on the tokens), so its LIF series is peeled into a
+    cheap scan of per-token projections; the expensive part — K steps of
+    the plastic synaptic layer, forward + four-term rule on every stream's
+    own (N, N) W_fast — then runs as ONE time-fused `engine.rollout`
+    launch (a single `pallas_call` on the Pallas backends) instead of K
+    per-token `layer_step` launches.  Bit-identical to the sequential path
+    (`tests/test_fused.py` pins it): the per-token einsums stay per-token
+    inside scans, and the rollout oracle is the same `layer_step` program.
+    """
+    p_in = params["p_in"].astype(jnp.float32)
+    p_out = params["p_out"].astype(jnp.float32)
+    hk = jnp.swapaxes(h, 0, 1)                       # time-major (K, B, D)
+
+    def pre(v1, h_t):
+        drive = jnp.einsum("bd,dn->bn", h_t.astype(jnp.float32), p_in)
+        v1, s1 = lif_step(v1, drive, LIF)
+        return v1, s1
+
+    v1, s1_series = jax.lax.scan(pre, state["v1"], hk)   # (K, B, N)
+
+    ep = engine.EngineParams(
+        tau_m=LIF.tau_m, v_th=LIF.v_threshold, v_reset=LIF.v_reset,
+        trace_decay=trace_decay, w_clip=w_clip, plastic=True, spiking=True)
+    net = engine.NetworkState(
+        w=(state["w_fast"],), v=(state["v2"],),
+        trace=(state["tr1"], state["tr2"]), t=jnp.zeros((), jnp.int32))
+    net, s2_series = engine.rollout(
+        net, [params["theta"].astype(jnp.float32)], s1_series,
+        params=ep, impl=cfg.adapter_impl)
+
+    def post(_, s2):
+        return None, jnp.einsum("bn,nd->bd", s2, p_out)
+
+    _, outs = jax.lax.scan(post, None, s2_series)        # (K, B, D)
+    h = h + (params["scale"] * jnp.swapaxes(outs, 0, 1)).astype(h.dtype)
+    return h, {"w_fast": net.w[0], "v1": v1, "v2": net.v[0],
+               "tr1": net.trace[0], "tr2": net.trace[1]}

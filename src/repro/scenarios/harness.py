@@ -2,8 +2,12 @@
 
 `make_closed_loop` builds ONE jitted program that drives B vectorized env
 instances (`VectorEnv`) against B plastic SNN controllers through the
-engine's fleet path (``snn.controller_step`` -> ``engine.layer_step`` with
-``w (B, N, M)``) inside a single `lax.scan` over env steps.  Everything
+engine's fleet path (``snn.controller_step`` -> ``engine.rollout`` with
+``w (B, N, M)``) inside a single `lax.scan` over env steps.  Each control
+step's ``cfg.timesteps``-long SNN window is TIME-FUSED: on the Pallas
+backends it is one `pallas_call` per control step (the rollout megakernel,
+kernels/plasticity/fused), not ``timesteps x num_layers`` launches.
+Everything
 episode-varying — tasks, actuator masks, dynamics parameters, perturbation
 schedules, the plasticity freeze step — is an *operand*, so:
 

@@ -134,10 +134,19 @@ class FleetScheduler:
             return snn.timestep(cfg, fleet, theta, drive, teach=teach,
                                 active=active, seed=seeds)
 
+        def _pool_rollout(fleet, window, active, teach, seeds):
+            # K fused pool timesteps in ONE engine launch (the rollout
+            # megakernel): same per-session seed semantics as _pool_step —
+            # step k of the window draws from seeds + k, exactly the
+            # sequence K single steps would draw.
+            return snn.rollout_window(cfg, fleet, theta, window, teach=teach,
+                                      active=active, seed=seeds)
+
         # Fixed shapes everywhere => each of these traces exactly once per
         # signature; `compile_count()` exposes the executable counts the
         # churn benchmark pins.
         self._step = jax.jit(_pool_step)
+        self._rollout = jax.jit(_pool_rollout)
         self._put = jax.jit(_fleet_put, donate_argnums=(0,))
         self._take = jax.jit(_fleet_take)
 
@@ -160,7 +169,8 @@ class FleetScheduler:
     def compile_count(self) -> int:
         """Total executables compiled by the scheduler's jitted programs."""
         return sum(int(f._cache_size())
-                   for f in (self._step, self._put, self._take))
+                   for f in (self._step, self._rollout, self._put,
+                             self._take))
 
     def pool_nbytes(self) -> int:
         """Resident bytes of the fleet pool tensor (all leaves).
@@ -221,16 +231,10 @@ class FleetScheduler:
 
     # ---- stepping --------------------------------------------------------
 
-    def step(self, drives: Mapping[str, jax.Array],
-             teach: Optional[Mapping[str, jax.Array]] = None
-             ) -> Dict[str, jax.Array]:
-        """One fused SNN timestep for the WHOLE pool.
-
-        `drives` maps uid -> input drive ``(obs_dim,)`` (already encoded;
-        the pool is deterministic, matching ``encoding="current"``).  Every
-        admitted session must receive a drive.  Vacant slots get zero drive
-        and are frozen by the active mask.  Returns uid -> readout row.
-        """
+    def _gather_rows(self, drives: Mapping[str, jax.Array],
+                     teach: Optional[Mapping[str, jax.Array]]
+                     ) -> tuple[jax.Array, Optional[jax.Array]]:
+        """Validate uid coverage and pack per-session rows into slot order."""
         missing = [u for u in self.user_slot if u not in drives]
         extra = [u for u in drives if u not in self.user_slot]
         if missing or extra:
@@ -252,21 +256,67 @@ class FleetScheduler:
             for uid, row in teach.items():
                 tarr[self.user_slot[uid]] = np.asarray(row, np.float32)
             tarr = jnp.asarray(tarr)
-        self.fleet, out = self._step(self.fleet, jnp.asarray(drive),
+        return jnp.asarray(drive), tarr
+
+    def step(self, drives: Mapping[str, jax.Array],
+             teach: Optional[Mapping[str, jax.Array]] = None
+             ) -> Dict[str, jax.Array]:
+        """One fused SNN timestep for the WHOLE pool.
+
+        `drives` maps uid -> input drive ``(obs_dim,)`` (already encoded;
+        the pool is deterministic, matching ``encoding="current"``).  Every
+        admitted session must receive a drive.  Vacant slots get zero drive
+        and are frozen by the active mask.  Returns uid -> readout row.
+        """
+        drive, tarr = self._gather_rows(drives, teach)
+        self.fleet, out = self._step(self.fleet, drive,
                                      self._active_mask(), tarr,
                                      jnp.asarray(self._steps.astype(np.int32)))
         for uid, slot in self.user_slot.items():
             self._steps[slot] += 1
         return {uid: out[slot] for uid, slot in self.user_slot.items()}
 
+    def pool_step(self, drives: Mapping[str, jax.Array],
+                  timesteps: Optional[int] = None,
+                  teach: Optional[Mapping[str, jax.Array]] = None
+                  ) -> Dict[str, jax.Array]:
+        """K fused SNN timesteps for the WHOLE pool in ONE engine launch.
+
+        The time-fused form of calling `step` K times on held drives: the
+        whole (K timesteps x layers x slots) window runs as a single
+        `engine.rollout` launch (one `pallas_call` on the Pallas backends),
+        with per-session step counters seeding each step of the window
+        exactly as K single steps would.  ``timesteps`` defaults to
+        ``cfg.timesteps``; occupancy is frozen across the window
+        (admissions/evictions happen between windows, which is already the
+        scheduler's contract — they are host-side events).
+
+        Returns uid -> (K, act_dim) readout WINDOW (callers reduce:
+        `control_step` takes the mean).
+        """
+        k = self.cfg.timesteps if timesteps is None else int(timesteps)
+        if k < 1:
+            raise ValueError(f"pool_step needs timesteps >= 1, got {k}")
+        drive, tarr = self._gather_rows(drives, teach)
+        n_in = self.cfg.layer_sizes[0]
+        window = jnp.broadcast_to(drive[None], (k, self.slots, n_in))
+        self.fleet, outs = self._rollout(
+            self.fleet, window, self._active_mask(), tarr,
+            jnp.asarray(self._steps.astype(np.int32)))
+        for uid, slot in self.user_slot.items():
+            self._steps[slot] += k
+        return {uid: outs[:, slot] for uid, slot in self.user_slot.items()}
+
     def control_step(self, obs: Mapping[str, jax.Array]
                      ) -> Dict[str, jax.Array]:
         """One CONTROL step = ``cfg.timesteps`` pool timesteps on held
         observations (mirrors `snn.controller_step`: mean readout over the
-        window, tanh-squashed unless the readout spikes)."""
-        outs = [self.step(obs) for _ in range(self.cfg.timesteps)]
+        window, tanh-squashed unless the readout spikes).  The window runs
+        as ONE fused `pool_step` launch instead of ``timesteps`` separate
+        pool steps."""
+        outs = self.pool_step(obs)
         actions = {}
-        for uid in obs:
-            a = jnp.stack([o[uid] for o in outs]).mean(axis=0)
+        for uid, window in outs.items():
+            a = window.mean(axis=0)
             actions[uid] = a if self.cfg.spiking_readout else jnp.tanh(a)
         return actions

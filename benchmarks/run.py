@@ -9,6 +9,11 @@
   fleet_throughput  serving  native batched-weights launch vs vmap recipe
   serving_churn     serving  session churn into a fixed slot pool (pinned
                              zero recompiles + evict/restore bit-equality)
+  serving_lm        serving  plastic LM decode pool under churn: layout x
+                             backend x adapter datapath, tokens/s +
+                             windowed rollout path (pinned zero recompiles,
+                             mid-generation evict/re-admit bit-identity,
+                             vacant-slot freeze)
   quant_parity      fixed-pt float-vs-quant control parity + int8 pool bytes
                              (asserted bounds; bit-equal across backends)
   rollout_fused     perf     time-fused rollout megakernel vs per-step
@@ -96,6 +101,14 @@ def _datapath_values(obj):
     return _coverage_values(obj, ("datapath", "datapaths", "mode"))
 
 
+def _layout_values(obj):
+    """Model-layout coverage: values under 'layout'/'layouts' keys — the
+    LM serving sweep must keep producing every backbone family it checked
+    in (dense GQA, Mamba2 SSM, MoE); a sweep that silently drops one fails
+    the gate like a lost backend."""
+    return _coverage_values(obj, ("layout", "layouts"))
+
+
 def check_drift(reference: dict, started_at: float) -> list:
     """Compare fresh smoke outputs against the checked-in result schemas.
 
@@ -140,6 +153,10 @@ def check_drift(reference: dict, started_at: float) -> list:
         if lost_dp:
             failures.append(
                 f"{stem}: datapath coverage lost: {sorted(lost_dp)}")
+        lost_ly = _layout_values(ref) - _layout_values(fresh)
+        if lost_ly:
+            failures.append(
+                f"{stem}: model-layout coverage lost: {sorted(lost_ly)}")
     return failures
 
 
@@ -168,7 +185,7 @@ def main(argv=None):
     from benchmarks import (adaptation, engine_breakdown, fleet_throughput,
                             latency, mnist_throughput, quant_parity,
                             robustness, rollout_fused, roofline,
-                            serving_churn)
+                            serving_churn, serving_lm)
 
     for name, fn in (
         ("engine_breakdown", lambda: engine_breakdown.main(quick=quick)),
@@ -186,6 +203,8 @@ def main(argv=None):
         ("serving_churn",
          lambda: serving_churn.main(
              ["--smoke"] if quick else ["--steps", "100"])),
+        ("serving_lm",
+         lambda: serving_lm.main(["--smoke"] if quick else [])),
         ("quant_parity",
          lambda: quant_parity.main(["--smoke"] if quick else [])),
         ("rollout_fused",

@@ -10,10 +10,16 @@ With --plastic every decode step runs the fused dual-engine program
 backend ("xla" oracle, "pallas" TPU kernel, "pallas-interpret" validation).
 
 With --session-dir the adapter's per-stream fast weights become SESSIONS
-(repro.serving): each batch row is a named user whose learned W_fast is
-checked out of a durable `SessionStore` before decode and checked back in
-after — re-running the driver with the same --session-dir resumes every
-user's plastic memory bit-identically instead of re-zeroing it.
+(repro.serving): each batch row is a named user admitted into a
+`serving.AdapterPool` before decode and evicted (persisted) after —
+re-running the driver with the same --session-dir resumes every user's
+plastic memory bit-identically instead of re-zeroing it.  --adapter-quant
+makes the pool FPGA-faithful fixed-point: int8 W_fast rows with per-user
+scales and deterministic stochastic rounding keyed on each user's own step
+counter.
+
+The model lowers through `models.factory`, so any registered arch — dense
+GQA, MoE, Mamba2 SSM, zamba hybrid — serves through the same driver.
 """
 from __future__ import annotations
 
@@ -28,12 +34,12 @@ from repro.configs import get_config, get_smoke
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_local_mesh
 from repro.launch.steps import make_decode_step, make_prefill
-from repro.models import transformer as T
-from repro.serving import SessionStore, slot_put, slot_take
+from repro.models import factory
+from repro.serving import AdapterPool, SessionStore
 
 
 def generate(cfg, params, prompts, max_len: int, gen: int,
-             temperature: float = 0.0, seed: int = 0, sessions=None):
+             temperature: float = 0.0, seed: int = 0, adapters=None):
     """Greedy/temperature sampling loop.  prompts (B, S) int32.
 
     Returns (tokens (B, gen), per-step latencies, final cache).  The decode
@@ -41,17 +47,21 @@ def generate(cfg, params, prompts, max_len: int, gen: int,
     iteration absorbed the jit compile, skewing decode_ms_p50/mean and
     tokens_per_s; all reported latencies are now steady-state.
 
-    `sessions`: optional list of per-stream adapter session states (pytrees
-    matching one row of ``cache["adapter"]``); scattered into the fresh
-    prefill cache so each stream RESUMES its user's learned fast weights
-    instead of starting from zero (the repro.serving session contract)."""
+    `adapters`: optional `serving.AdapterPool` whose admitted users are the
+    batch rows (user b in slot b).  Its pool pytree REPLACES the fresh
+    prefill cache's adapter entry, so each stream resumes its user's
+    learned fast weights instead of starting from zero; after the loop the
+    learned state flows back into the pool (the caller evicts to persist).
+    """
     prefill = jax.jit(make_prefill(cfg, max_len))
     decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
 
     logits, cache = prefill(params, prompts)
-    if sessions is not None:
-        for b, user in enumerate(sessions):
-            cache["adapter"] = slot_put(cache["adapter"], jnp.int32(b), user)
+    if adapters is not None:
+        # the pool IS the adapter state: one scheduler-admitted row per
+        # batch stream (restored or fresh), installed wholesale — no
+        # per-row scatter loop
+        cache["adapter"] = adapters.pool
     key = jax.random.PRNGKey(seed)
     outs, lats = [], []
     tok = _sample(logits, key, temperature)
@@ -67,6 +77,11 @@ def generate(cfg, params, prompts, max_len: int, gen: int,
         lats.append(time.perf_counter() - t0)
         key = jax.random.fold_in(key, i)
         tok = _sample(logits, key, temperature)
+    if adapters is not None:
+        # hand the learned rows back (the loop's donation consumed the
+        # buffers the pool was holding)
+        adapters.pool = cache["adapter"]
+        adapters.advance_steps(gen)
     return jnp.stack(outs, axis=1), lats, cache
 
 
@@ -91,6 +106,9 @@ def main(argv=None):
                          "dual-engine step (pallas on TPU)")
     ap.add_argument("--kv-quant", action="store_true",
                     help="int8 KV cache (2.3x decode memory-roofline win)")
+    ap.add_argument("--adapter-quant", action="store_true",
+                    help="with --plastic: fixed-point adapter pool (int8 "
+                         "W_fast, per-user scales, int32 membranes/traces)")
     ap.add_argument("--session-dir", default=None,
                     help="with --plastic: durable per-user session store "
                          "for the adapter fast weights; each batch row is a "
@@ -107,19 +125,24 @@ def main(argv=None):
     if args.users and not args.session_dir:
         ap.error("--users names the rows of a durable session store; "
                  "pass --session-dir too")
+    if args.adapter_quant and not args.plastic:
+        ap.error("--adapter-quant quantizes the plastic adapter pool; "
+                 "pass --plastic too")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if args.plastic:
         cfg = cfg.with_(plastic_adapter=True,
                         adapter_neurons=min(128, cfg.d_model),
-                        adapter_impl=args.plastic_impl)
+                        adapter_impl=args.plastic_impl,
+                        adapter_quant=args.adapter_quant)
     if args.kv_quant:
         cfg = cfg.with_(kv_quant=True)
+    model = factory.build(cfg)
     mesh = make_local_mesh()
     max_len = args.prompt_len + args.gen
 
     with shd.use_mesh(mesh), mesh:
-        params = T.init(cfg, jax.random.PRNGKey(args.seed))
+        params = model.init(jax.random.PRNGKey(args.seed))
         prompts = jax.random.randint(
             jax.random.PRNGKey(args.seed + 1),
             (args.batch, args.prompt_len), 0, cfg.vocab)
@@ -129,8 +152,7 @@ def main(argv=None):
         else:
             prompts_in = prompts
 
-        store = users = None
-        sessions = steps = None
+        store = users = pool = None
         if args.session_dir is not None:
             store = SessionStore(root=args.session_dir, capacity=args.batch)
             users = (args.users.split(",") if args.users
@@ -142,24 +164,22 @@ def main(argv=None):
                 raise SystemExit(
                     "--users ids must be unique: two rows sharing a session "
                     "would silently overwrite each other's learned state")
-            n = cfg.adapter_neurons
-            zero_row = lambda: {            # one stream's adapter state
-                "w_fast": jnp.zeros((n, n), jnp.float32),
-                "v1": jnp.zeros((n,), jnp.float32),
-                "v2": jnp.zeros((n,), jnp.float32),
-                "tr1": jnp.zeros((n,), jnp.float32),
-                "tr2": jnp.zeros((n,), jnp.float32)}
-            checked = [store.checkout(u, zero_row) for u in users]
-            sessions = [s for s, _ in checked]
-            steps = [st for _, st in checked]
+            # scheduler-admit path: user b lands in pool slot b (admission
+            # fills free slots in order), restoring persisted fast weights
+            # through the SessionStore's validated checkout
+            pool = AdapterPool(cfg, slots=args.batch, store=store)
+            for u in users:
+                pool.admit(u)
 
         toks, lats, cache = generate(cfg, params, prompts_in, max_len,
                                      args.gen, args.temperature, args.seed,
-                                     sessions=sessions)
-        if store is not None:
-            for b, u in enumerate(users):
-                row = slot_take(cache["adapter"], jnp.int32(b))
-                store.checkin(u, row, steps[b] + args.gen)
+                                     adapters=pool)
+        tokens_learned = None
+        if pool is not None:
+            tokens_learned = [int(pool._steps[pool.user_slot[u]])
+                              for u in users]
+            for u in users:         # evict = gather + write-through persist
+                pool.evict(u)
 
     out = {
         "arch": cfg.name, "plastic": bool(cfg.plastic_adapter),
@@ -172,8 +192,7 @@ def main(argv=None):
         out["sessions"] = {
             "users": users, "resumed": store.restores,
             "created": store.creates,
-            "tokens_learned": [steps[b] + args.gen
-                               for b in range(args.batch)]}
+            "tokens_learned": tokens_learned}
     print(json.dumps(out, indent=1))
     return 0
 

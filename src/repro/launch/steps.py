@@ -3,9 +3,14 @@
 These close over a ModelConfig and return pure functions whose signatures
 match what dryrun.py lowers and train.py/serve.py execute:
 
-    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
-    prefill(params, inputs)              -> (last_logits, cache)
-    decode_step(params, cache, tokens)   -> (logits, cache)
+    train_step(params, opt_state, batch)   -> (params, opt_state, metrics)
+    prefill(params, inputs)                -> (last_logits, cache)
+    decode_step(params, cache, tokens)     -> (logits, cache)
+    decode_window(params, cache, tokens)   -> (logits (B,K,V), cache)
+
+Every builder resolves the config through `models.factory.build`, so any
+registered layout (dense GQA, MoE, Mamba2 SSM, zamba hybrid) lowers through
+the same validated surface — no caller imports `models.transformer`.
 
 Gradient accumulation (microbatches > 1) is a lax.scan over the leading
 batch split — the standard memory knob that fits 72B/314B train cells in
@@ -19,15 +24,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard_constraint
-from repro.models import transformer as T
+from repro.models import factory
 from repro.models.config import ModelConfig
 
 
 def make_loss_fn(cfg: ModelConfig, attn_impl: str = "xla_flash",
                  ssd_impl: str = "xla", remat_policy: str = "nothing"):
+    model = factory.build(cfg)
+
     def loss(params, batch):
-        return T.loss_fn(params, batch, cfg, attn_impl=attn_impl,
-                         ssd_impl=ssd_impl, remat_policy=remat_policy)
+        return model.loss_fn(params, batch, attn_impl=attn_impl,
+                             ssd_impl=ssd_impl, remat_policy=remat_policy)
     return loss
 
 
@@ -76,16 +83,33 @@ def make_train_step(cfg: ModelConfig, opt, *, microbatches: int = 1,
 
 def make_prefill(cfg: ModelConfig, max_len: int,
                  attn_impl: str = "xla_flash", ssd_impl: str = "xla"):
+    model = factory.build(cfg)
+
     def prefill(params, inputs):
-        return T.prefill(params, inputs, cfg, max_len,
-                         attn_impl=attn_impl, ssd_impl=ssd_impl)
+        return model.prefill(params, inputs, max_len,
+                             attn_impl=attn_impl, ssd_impl=ssd_impl)
     return prefill
 
 
 def make_decode_step(cfg: ModelConfig):
+    model = factory.build(cfg)
+
     def decode(params, cache, tokens):
-        return T.decode_step(params, cache, tokens, cfg)
+        return model.decode_step(params, cache, tokens)
     return decode
+
+
+def make_decode_window(cfg: ModelConfig):
+    """Multi-token teacher-forced decode: tokens (B, K) advance every
+    stream K positions in one program — the backbone scans per token while
+    the plastic adapter runs all K plasticity steps as ONE time-fused
+    engine launch (`plastic.decode_rollout`).  Bit-identical to K
+    `decode_step` calls."""
+    model = factory.build(cfg)
+
+    def decode_window(params, cache, tokens):
+        return model.decode_rollout(params, cache, tokens)
+    return decode_window
 
 
 # ---------------------------------------------------------------------------
@@ -96,7 +120,7 @@ def make_decode_step(cfg: ModelConfig):
 def n_active_params(cfg: ModelConfig) -> int:
     """Parameters touched per token (== total for dense; active experts
     only for MoE).  Excludes the input embedding gather (not a matmul)."""
-    total = T.n_params(cfg)
+    total = factory.build(cfg).n_params()
     embed = cfg.vocab * cfg.d_model
     if cfg.moe is None:
         return total - embed

@@ -133,31 +133,61 @@ def plan_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
         init="zeros", dtype=cfg.dtype)
 
 
+def _write_at(cache, row, index, active=None):
+    """Write one new position per stream into the (B,Smax,...) cache.
+
+    Scalar `index` (all streams at the same length — the classic batched
+    decode) lowers to one dynamic_update_slice; a per-slot ``(B,)`` index
+    (the continuous-batching pool, where streams admitted at different
+    times sit at different lengths) scatters each stream's row at its own
+    position.  ``active (B,)`` makes vacant streams' writes no-ops: their
+    cache rows stay bit-frozen instead of being scribbled with garbage
+    (the pool's true-no-op contract — one row-sized gather+select, nothing
+    cache-sized)."""
+    b = cache.shape[0]
+    if index.ndim == 0 and active is None:
+        start = (0, index) + (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(
+            cache, row.astype(cache.dtype), start)
+    idx = (jnp.broadcast_to(index, (b,)) if index.ndim == 0 else index)
+    new = row[:, 0].astype(cache.dtype)
+    if active is not None:
+        old = cache[jnp.arange(b), idx]
+        mask = active.astype(bool).reshape((b,) + (1,) * (old.ndim - 1))
+        new = jnp.where(mask, new, old)
+    return cache.at[jnp.arange(b), idx].set(new)
+
+
 def decode_step(params, x, cache_k, cache_v, index, cfg: ModelConfig,
-                scale_k=None, scale_v=None):
-    """One-token cached attention.  x (B,1,D); cache (B,Smax,KV,HD); index ()
-    is the current length.  Returns (out (B,1,D), new_k, new_v) — plus
-    (new_scale_k, new_scale_v) appended when cfg.kv_quant."""
+                scale_k=None, scale_v=None, active=None):
+    """One-token cached attention.  x (B,1,D); cache (B,Smax,KV,HD); index
+    is the current length — scalar () when every stream decodes in lockstep,
+    or per-slot ``(B,)`` under the continuous-batching pool (each stream
+    writes/attends at its own position; ``active (B,)`` freezes vacant
+    streams' cache rows bit-exactly).  Returns (out (B,1,D), new_k,
+    new_v) — plus (new_scale_k, new_scale_v) appended when cfg.kv_quant."""
     b = x.shape[0]
-    positions = jnp.full((b, 1), index, jnp.int32)
+    index = jnp.asarray(index, jnp.int32)
+    if index.ndim == 0:
+        positions = jnp.full((b, 1), index, jnp.int32)
+    else:
+        positions = index[:, None]
     h = rms_norm(x, params["norm"], cfg.norm_eps)
     q, k, v = _qkv(params, h, cfg, positions)
     if cfg.kv_quant:
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)
-        cache_k = jax.lax.dynamic_update_slice(cache_k, kq, (0, index, 0, 0))
-        cache_v = jax.lax.dynamic_update_slice(cache_v, vq, (0, index, 0, 0))
-        scale_k = jax.lax.dynamic_update_slice(scale_k, ks, (0, index, 0))
-        scale_v = jax.lax.dynamic_update_slice(scale_v, vs, (0, index, 0))
+        cache_k = _write_at(cache_k, kq, index, active)
+        cache_v = _write_at(cache_v, vq, index, active)
+        scale_k = _write_at(scale_k, ks, index, active)
+        scale_v = _write_at(scale_v, vs, index, active)
         # dequant fuses into the attention matmul on TPU; the resident cache
         # (and its HBM reads) are int8 + one f32 scale per (pos, kv-head)
         k_use = dequantize_kv(cache_k, scale_k, cfg.adtype)
         v_use = dequantize_kv(cache_v, scale_v, cfg.adtype)
     else:
-        cache_k = jax.lax.dynamic_update_slice(
-            cache_k, k.astype(cache_k.dtype), (0, index, 0, 0))
-        cache_v = jax.lax.dynamic_update_slice(
-            cache_v, v.astype(cache_v.dtype), (0, index, 0, 0))
+        cache_k = _write_at(cache_k, k, index, active)
+        cache_v = _write_at(cache_v, v, index, active)
         k_use, v_use = cache_k, cache_v
     # causal=False: every cached position is <= current; padding handled by
     # masking positions >= index+1 via kv_len... kv_len must be static, so we
@@ -183,7 +213,11 @@ def _decode_attend(q, k, v, index, cfg: ModelConfig):
     qg = q.reshape(b, 1, kvh, g, hd)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
                    preferred_element_type=jnp.float32) * (hd ** -0.5)
-    valid = (jnp.arange(smax) <= index)[None, None, None, None, :]
+    if index.ndim == 0:
+        valid = (jnp.arange(smax) <= index)[None, None, None, None, :]
+    else:  # per-slot lengths: each stream masks its own tail
+        valid = (jnp.arange(smax)[None, :]
+                 <= index[:, None])[:, None, None, None, :]
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,

@@ -63,6 +63,9 @@ class ModelConfig:
     adapter_neurons: int = 512
     adapter_impl: str = "xla"     # PlasticEngine backend for the adapter
                                   # ("xla" | "pallas" | "pallas-interpret")
+    adapter_quant: bool = False   # fixed-point adapter pool: int8 W_fast
+                                  # with per-slot scales, int32 membranes/
+                                  # traces (EngineParams.quant datapath)
     # int8 KV cache (beyond-paper: halves decode cache reads — the memory
     # roofline term of every decode cell; per-(position, kv-head) scales)
     kv_quant: bool = False
@@ -113,7 +116,8 @@ SHAPES = {
 
 
 def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
-    """long_500k only for sub-quadratic archs (DESIGN.md §Arch-applicability)."""
+    """long_500k only for sub-quadratic archs (see DESIGN.md
+    §Arch-applicability for the layout x shape/adapter composition table)."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, ("skipped: pure full-attention arch — 524k dense-"
                        "attention KV decode is the quadratic regime the "

@@ -24,7 +24,9 @@ from repro.distributed import sharding as shd
 class ParamDesc:
     shape: Tuple[int, ...]
     spec: Tuple[Any, ...]              # logical axes, len == ndim
-    init: str = "normal"               # normal | zeros | ones
+    init: str = "normal"               # normal | zeros | ones | full
+                                       # ("full" fills with `scale` — e.g.
+                                       # the int8 adapter's default w_scale)
     scale: float = 1.0                 # stddev multiplier (normal)
     fan_in: Optional[int] = None       # normal: std = scale / sqrt(fan_in)
     dtype: str = "bfloat16"
@@ -47,6 +49,8 @@ def init_from_plan(plan, key: jax.Array):
             return jnp.zeros(desc.shape, dt)
         if desc.init == "ones":
             return jnp.ones(desc.shape, dt)
+        if desc.init == "full":
+            return jnp.full(desc.shape, desc.scale, dt)
         fan = desc.fan_in if desc.fan_in else (desc.shape[-2] if len(desc.shape) >= 2 else desc.shape[-1])
         std = desc.scale / (fan ** 0.5)
         return (std * jax.random.normal(k, desc.shape)).astype(dt)

@@ -47,8 +47,17 @@ def plan(cfg: ModelConfig, stack: int = 0) -> dict:
     return p
 
 
-def apply(params, x, cfg: ModelConfig, groups: int = 0):
+def apply(params, x, cfg: ModelConfig, groups: int = 0, token_mask=None):
     """x (B,S,D) -> (B,S,D) residual-added MoE FFN.
+
+    ``token_mask`` (B,S) bool marks VALID tokens: masked tokens are routed
+    to the trash row with zero gate weight and — because their expert
+    assignment is rewritten to a sentinel before the dispatch sort — they
+    never consume expert capacity.  This is the continuous-batching pool's
+    no-op contract: a vacant slot's garbage token must not displace an
+    active stream's token from an expert buffer (capacity coupling is the
+    one cross-row interaction in the whole decode path), so active-slot
+    outputs are bit-invariant to neighbour churn.
 
     GROUPED LOCAL DISPATCH (EXPERIMENTS.md §Perf, deepseek/grok cells):
     tokens split into `groups` dispatch groups aligned with the data axis;
@@ -85,6 +94,12 @@ def apply(params, x, cfg: ModelConfig, groups: int = 0):
     probs = jax.nn.softmax(logits, axis=-1)
     gates, expert_idx = jax.lax.top_k(probs, moe.top_k)          # (G,Tg,K)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    if token_mask is not None:
+        # invalid tokens: expert id -> sentinel e, so the stable sort parks
+        # them BEHIND every real assignment — they cannot occupy a capacity
+        # position a valid token would otherwise get
+        mask_g = token_mask.reshape(g_n, tg)
+        expert_idx = jnp.where(mask_g[..., None], expert_idx, e)
 
     cap = max(int(moe.capacity_factor * tg * k / e), 1)
 
@@ -95,7 +110,7 @@ def apply(params, x, cfg: ModelConfig, groups: int = 0):
         sorted_e = flat_e[order]
         pos = jnp.arange(tg * k) - jnp.searchsorted(sorted_e, sorted_e,
                                                     side="left")
-        keep = pos < cap
+        keep = (pos < cap) & (sorted_e < e)
         # dropped slots write to (and read from) a trash row so they never
         # clobber a kept token's buffer slot
         dest = jnp.where(keep, sorted_e * cap + pos, e * cap)

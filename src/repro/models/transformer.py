@@ -247,8 +247,15 @@ def loss_fn(params, batch, cfg: ModelConfig, **fw):
 # ---------------------------------------------------------------------------
 
 
-def cache_plan(cfg: ModelConfig, batch: int, max_len: int) -> dict:
-    """Descriptor pytree for the decode cache (shardable, eval_shape-able)."""
+def cache_plan(cfg: ModelConfig, batch: int, max_len: int,
+               per_slot_index: bool = False) -> dict:
+    """Descriptor pytree for the decode cache (shardable, eval_shape-able).
+
+    ``per_slot_index=True`` gives the cache a ``(batch,)`` sequence index —
+    one length per stream — instead of the scalar lockstep index: the
+    continuous-batching pool layout, where streams admitted at different
+    times decode at different positions (`serving.lm.LMScheduler`).
+    """
     import dataclasses as _dc
     seq_shard = batch == 1  # long-context: shard sequence, not batch
     segs = segments(cfg)
@@ -273,15 +280,19 @@ def cache_plan(cfg: ModelConfig, batch: int, max_len: int) -> dict:
             c["ssm"] = _stack_plan(ssm_mod.plan_cache(cfg, batch, inner),
                                    count)
             seg_caches.append(c)
+    idx_shape, idx_spec = (((batch,), ("data",)) if per_slot_index
+                           else ((), ()))
     out = {"segments": seg_caches,
-           "index": ParamDesc((), (), init="zeros", dtype="int32")}
+           "index": ParamDesc(idx_shape, idx_spec, init="zeros",
+                              dtype="int32")}
     if cfg.plastic_adapter:
         out["adapter"] = plastic.plan_cache(cfg, batch)
     return out
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int):
-    return init_from_plan(cache_plan(cfg, batch, max_len),
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               per_slot_index: bool = False):
+    return init_from_plan(cache_plan(cfg, batch, max_len, per_slot_index),
                           jax.random.PRNGKey(0))
 
 
@@ -343,13 +354,31 @@ def _embed_kv(k, bsz, max_len, cfg):
     return jax.lax.dynamic_update_slice(buf, k, (0,) * k.ndim)
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig):
-    """One decode step.  tokens (B,1) int32.
+def _decode_backbone(params, cache, tokens, cfg: ModelConfig, active=None):
+    """Embed + all segments for ONE new token per stream.  tokens (B,1).
 
-    Returns (logits (B,V), new_cache).  cache["index"] is the number of
-    tokens already resident; the new token is written at that position.
+    Returns (h (B,1,D) pre-final-norm, new segment caches, new index).
+    ``active (B,)`` is the pool's vacant-slot mask, enforcing the TRUE
+    no-op contract on every piece of per-stream state: KV/scale cache rows
+    are write-gated (`attention._write_at`), SSM/conv states are
+    select-gated, per-slot sequence indices freeze, and MoE dispatch
+    sentinels vacant slots' garbage tokens out of expert capacity (the one
+    cross-row interaction in the decode path).  A vacant slot's entire
+    session row is bit-identical after any number of pool steps.  Vacant
+    rows' hidden-state COMPUTE is garbage, but nothing persistent reads it
+    (the adapter and pending-token updates are gated downstream).
     """
     index = cache["index"]
+    token_mask = (None if active is None
+                  else jnp.broadcast_to(active.astype(bool)[:, None],
+                                        tokens.shape))
+
+    def gate_rows(new, old):
+        # freeze vacant streams' state rows (leading axis = stream)
+        if active is None:
+            return new
+        m = active.astype(bool).reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
     h = jnp.take(params["embed"], tokens, axis=0)       # (B,1,D)
     h = shard_constraint(h, ("data", None, None))
 
@@ -363,14 +392,16 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
                     p, k_l, v_l, sk_l, sv_l = xs
                     x, kn, vn, skn, svn = attention.decode_step(
                         p["attn"], x, k_l, v_l, index, cfg,
-                        scale_k=sk_l, scale_v=sv_l)
+                        scale_k=sk_l, scale_v=sv_l, active=active)
                 else:
                     p, k_l, v_l = xs
                     x, kn, vn = attention.decode_step(p["attn"], x, k_l, v_l,
-                                                      index, cfg)
+                                                      index, cfg,
+                                                      active=active)
                     skn = svn = None
                 if _kind == "moe":
-                    x = moe_mod.apply(p["moe"], x, cfg)
+                    x = moe_mod.apply(p["moe"], x, cfg,
+                                      token_mask=token_mask)
                 else:
                     x = _mlp_apply(p["mlp"], x, cfg)
                 if cfg.kv_quant:
@@ -389,8 +420,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
         elif kind == "ssm":
             def body(x, xs):
                 p, st, cv = xs
-                x, st, cv = ssm_mod.decode_step(p, x, st, cv, cfg)
-                return x, (st, cv)
+                x, st_n, cv_n = ssm_mod.decode_step(p, x, st, cv, cfg)
+                return x, (gate_rows(st_n, st), gate_rows(cv_n, cv))
 
             h, (sts, cvs) = jax.lax.scan(body, h, (seg_p, c["ssm"], c["conv"]))
             new_segs.append({"ssm": sts, "conv": cvs})
@@ -402,18 +433,19 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
                     p, k_l, v_l, sk_l, sv_l, st_l = xs
                     x, kn, vn, skn, svn = attention.decode_step(
                         shared_p[0], x, k_l, v_l, index, cfg,
-                        scale_k=sk_l, scale_v=sv_l)
+                        scale_k=sk_l, scale_v=sv_l, active=active)
                 else:
                     p, k_l, v_l, st_l = xs
                     x, kn, vn = attention.decode_step(shared_p[0], x, k_l,
-                                                      v_l, index, cfg)
+                                                      v_l, index, cfg,
+                                                      active=active)
                     skn = svn = None
                 x = _mlp_apply(shared_p[1], x, cfg)
 
                 def inner(xx, ys):
                     pl, st, cv = ys
-                    xx, st, cv = ssm_mod.decode_step(pl, xx, st, cv, cfg)
-                    return xx, (st, cv)
+                    xx, st_n, cv_n = ssm_mod.decode_step(pl, xx, st, cv, cfg)
+                    return xx, (gate_rows(st_n, st), gate_rows(cv_n, cv))
 
                 x, (sts, cvs) = jax.lax.scan(
                     inner, x, (p["ssm"], st_l["ssm"], st_l["conv"]))
@@ -435,15 +467,76 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
                 new_segs.append({"k": ks, "v": vs,
                                  "ssm": {"ssm": sts, "conv": cvs}})
 
-    new_cache = {"segments": new_segs, "index": index + 1}
-    if cfg.plastic_adapter:
-        h, new_cache["adapter"] = plastic.decode_step(
-            params["adapter"], cache["adapter"], h, cfg)
+    if index.ndim == 0:
+        new_index = index + 1
+    else:  # per-slot: vacant slots' sequence positions stay frozen
+        new_index = index + (active.astype(jnp.int32) if active is not None
+                             else 1)
+    return h, new_segs, new_index
 
+
+def _head(params, h, cfg: ModelConfig):
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-    logits = jnp.einsum("bsd,dv->bsv", h, head)[:, 0]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    return shard_constraint(logits, ("data", None, "model"))
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, active=None):
+    """One decode step.  tokens (B,1) int32.
+
+    Returns (logits (B,V), new_cache).  cache["index"] is the number of
+    tokens already resident (scalar for lockstep decode, per-slot ``(B,)``
+    under the continuous-batching pool); the new token is written at that
+    position.  ``active (B,)`` marks resident streams — vacant slots are
+    no-ops: adapter state bit-frozen, per-slot index frozen, no expert
+    capacity consumed, logits garbage nothing reads.
+    """
+    h, new_segs, new_index = _decode_backbone(params, cache, tokens, cfg,
+                                              active=active)
+    new_cache = {"segments": new_segs, "index": new_index}
+    if cfg.plastic_adapter:
+        h, new_cache["adapter"] = plastic.decode_step(
+            params["adapter"], cache["adapter"], h, cfg, active=active)
+    logits = _head(params, h, cfg)[:, 0]
     return shard_constraint(logits, ("data", "model")), new_cache
+
+
+def decode_rollout(params, cache, tokens, cfg: ModelConfig, active=None):
+    """K known tokens per stream in one jitted program.  tokens (B,K) int32.
+
+    Teacher-forced multi-token decode — chunked prompt tails, speculative
+    draft verification, the scheduler's windowed `decode_window`: the
+    backbone advances token-by-token inside a `lax.scan` (each token's
+    attention must see the one before it), but the plastic adapter's K
+    update steps run as ONE time-fused `engine.rollout` launch via
+    `plastic.decode_rollout` instead of K per-token `layer_step` launches.
+    This is sound because the adapter sits AFTER all segments: it touches
+    only the final hidden state (hence the logits), never the KV/SSM
+    caches, so the backbone scan can run to completion first and hand the
+    adapter the whole (B, K, D) window.  Bit-identical to K `decode_step`
+    calls on the same tokens (pinned in tests/test_serving_lm.py).
+
+    Returns (logits (B,K,V), new_cache).  Works for every layout, with or
+    without the adapter.
+    """
+    tk = jnp.swapaxes(tokens, 0, 1)[:, :, None]          # (K,B,1)
+
+    def body(carry, tok):
+        segs, index = carry
+        h, segs, index = _decode_backbone(
+            params, {"segments": segs, "index": index}, tok, cfg,
+            active=active)
+        return (segs, index), h[:, 0]
+
+    (new_segs, new_index), hs = jax.lax.scan(
+        body, (cache["segments"], cache["index"]), tk)
+    h = jnp.swapaxes(hs, 0, 1)                           # (B,K,D)
+    new_cache = {"segments": new_segs, "index": new_index}
+    if cfg.plastic_adapter:
+        h, new_cache["adapter"] = plastic.decode_rollout(
+            params["adapter"], cache["adapter"], h, cfg, active=active)
+    return _head(params, h, cfg), new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -20,12 +20,24 @@ as one fused launch) and millions of such users:
     what makes fixed-shape continuous batching semantically correct rather
     than "idle slots drift anyway".
 
+Both the SNN controller fleet (`FleetScheduler`) and the LM decode pool
+(`lm.LMScheduler`: backbone caches + per-slot sequence indices + plastic
+adapter rows + pending tokens, any `models.factory` layout) ride the same
+generic `scheduler.SessionPool` base — one slot-axes pytree per pool, one
+traced-slot gather/scatter pair, one active-mask no-op contract.
+
 Entry points: ``launch/serve.py --plastic --session-dir`` (LM adapter
-sessions), ``examples/session_serving.py`` (controller pool under churn),
-``benchmarks/serving_churn.py`` (Poisson churn sweep; pins zero recompiles
-after warm-up and evict->restore bit-equality).
+sessions via `lm.AdapterPool`), ``examples/session_serving.py`` (controller
+pool under churn), ``benchmarks/serving_churn.py`` and
+``benchmarks/serving_lm.py`` (churn sweeps; pin zero recompiles after
+warm-up and evict->restore bit-equality).
 """
-from repro.serving.scheduler import FleetScheduler, slot_put, slot_take
+from repro.serving.lm import AdapterPool, LMScheduler
+from repro.serving.scheduler import (SHARED, FleetScheduler, SessionPool,
+                                     make_slot_ops, slot_put, slot_take,
+                                     uniform_axes)
 from repro.serving.sessions import SessionStore
 
-__all__ = ["FleetScheduler", "SessionStore", "slot_put", "slot_take"]
+__all__ = ["AdapterPool", "FleetScheduler", "LMScheduler", "SHARED",
+           "SessionPool", "SessionStore", "make_slot_ops", "slot_put",
+           "slot_take", "uniform_axes"]

@@ -1,0 +1,213 @@
+"""LM decode pool: continuous batching of plastic language-model streams.
+
+The LM counterpart of `scheduler.FleetScheduler`: a fixed pool of B decode
+slots whose session pytree is the WHOLE per-stream decode state —
+
+  * the backbone cache (KV planes / Mamba2 SSM + conv states / zsuper's
+    stacked hybrid caches, any `models.factory` layout),
+  * a per-slot sequence index (streams admitted at different times sit at
+    different lengths),
+  * the FireFly-P plastic adapter state: ``W_fast (N, N)`` float32 or int8
+    (``cfg.adapter_quant``) with its per-session scale and step counter,
+  * the pending next token.
+
+Everything rides the generic `SessionPool` machinery: admission is ONE
+traced-slot scatter of a freshly-prefilled (or store-restored) session,
+eviction is one gather + write-through `SessionStore` persist, and the pool
+decodes as ONE jitted program over all B slots per token (`step`) or per
+K-token window (`decode_window` — the windowed path routes the adapter
+through `plastic.decode_rollout`, so K plasticity steps for every resident
+stream are a single time-fused engine launch).  Occupancy is a runtime
+``active (B,)`` operand: churn never retraces, vacant slots are bit-exact
+no-ops (the MoE dispatch sentinels their garbage tokens out of expert
+capacity, the adapter freezes its synapses, the cache index holds).
+
+`benchmarks/serving_lm.py` pins the contracts: zero recompiles under
+churn, and evict -> persist -> re-admit bit-identity mid-generation, per
+layout x backend x datapath cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import factory, plastic
+from repro.models.config import ModelConfig
+from repro.models.layers import init_from_plan
+from repro.serving.scheduler import SessionPool, uniform_axes
+from repro.serving.sessions import SessionStore
+
+
+class LMScheduler(SessionPool):
+    """Admit/evict LM user streams into a fixed pool of decode slots.
+
+    Args:
+      model:   a `factory.Model` (or anything `factory.build` accepts — a
+               ModelConfig or an arch id).  ``cfg.adapter_impl`` picks the
+               plastic engine backend for the whole pool;
+               ``cfg.adapter_quant`` makes the adapter rows an int8 pool.
+      params:  model parameters (shared by every stream — the model is the
+               deployment, the session is the user).
+      slots:   pool size B; fixes every pool tensor shape forever.
+      max_len: cache length ceiling shared by all slots.
+      store:   `SessionStore` backing eviction/restore.
+    """
+
+    def __init__(self, model, params, slots: int, max_len: int,
+                 store: Optional[SessionStore] = None):
+        if not isinstance(model, factory.Model):
+            model = factory.build(model)
+        if model.cfg.input_mode != "tokens":
+            raise ValueError(
+                f"{model.cfg.name}: LMScheduler pools token streams; "
+                f"input_mode {model.cfg.input_mode!r} is not poolable")
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.max_len = int(max_len)
+        pool = {"cache": model.pool_cache(slots, max_len),
+                "tok": jnp.zeros((slots,), jnp.int32)}
+        axes = {"cache": model.cache_axes(max_len), "tok": 0}
+        super().__init__(pool, axes, slots, store)
+
+        def _prefill_session(params, prompt):
+            # B=1 prompt -> one session row + its first greedy token
+            logits, cache = model.prefill(params, prompt[None, :], max_len)
+            return {"cache": model.session_from_prefill(cache),
+                    "tok": jnp.argmax(logits[0], -1).astype(jnp.int32)}
+
+        def _pool_step(params, pool, active):
+            # one greedy decode token for the WHOLE pool; vacant slots are
+            # no-ops end to end (cache index held, adapter frozen, pending
+            # token carried through)
+            logits, cache = model.decode_step(
+                params, pool["cache"], pool["tok"][:, None], active=active)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            return ({"cache": cache,
+                     "tok": jnp.where(active, nxt, pool["tok"])}, nxt)
+
+        def _pool_window(params, pool, tokens, active):
+            # K teacher-forced tokens for the whole pool in ONE launch: the
+            # backbone scans token-by-token, the adapter runs K plasticity
+            # steps as a single time-fused plastic.decode_rollout
+            logits, cache = model.decode_rollout(
+                params, pool["cache"], tokens, active=active)
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            return ({"cache": cache,
+                     "tok": jnp.where(active, nxt, pool["tok"])}, logits)
+
+        # Fixed shapes => one executable per op (per window length for the
+        # windowed path); compile_count() exposes the totals the churn
+        # benchmark pins.
+        self._prefill = jax.jit(_prefill_session)
+        self._step_fn = jax.jit(_pool_step)
+        self._window_fn = jax.jit(_pool_window)
+        self._jitted += [self._prefill, self._step_fn, self._window_fn]
+
+    # ---- session construction --------------------------------------------
+
+    def _session_factory(self):
+        # slot 0 of the INITIAL pool, not zeros_like of it: quantized
+        # adapter rows carry a non-zero fresh ``w_scale``
+        return self._zero_session
+
+    def admit_prompt(self, uid: str, prompt, evict_lru: bool = False) -> int:
+        """Prefill `prompt` ((S,) int32) into a fresh session and admit it.
+
+        For a uid the `SessionStore` already knows, the persisted session
+        (its cache, adapter memory, and pending token) is restored instead
+        and the prompt is ignored — resumption, not re-prefill.  Returns
+        the slot index; the stream's first greedy token is `pending(uid)`.
+        """
+        prompt = jnp.asarray(prompt, jnp.int32)
+        if prompt.ndim != 1:
+            raise ValueError(f"prompt must be (S,), got {prompt.shape}")
+        return self.admit(
+            uid, evict_lru=evict_lru,
+            factory=lambda: self._prefill(self.params, prompt))
+
+    # ---- inspection -------------------------------------------------------
+
+    def pending(self, uid: str) -> int:
+        """The stream's next token (greedy argmax of its last logits)."""
+        return int(self.pool["tok"][self.user_slot[uid]])
+
+    def session_view(self, uid: str):
+        """Gather `uid`'s session pytree WITHOUT evicting (probe/tests)."""
+        return self._take(self.pool, jnp.int32(self.user_slot[uid]))
+
+    # ---- stepping ---------------------------------------------------------
+
+    def step(self) -> Dict[str, int]:
+        """One greedy decode token for every admitted stream (one launch).
+
+        Each stream consumes its pending token and produces the next;
+        returns uid -> newly generated token (which is also the new
+        pending token)."""
+        self.pool, nxt = self._step_fn(self.params, self.pool,
+                                       self._active_mask())
+        self.advance_steps(1)
+        nxt = np.asarray(nxt)
+        return {uid: int(nxt[slot]) for uid, slot in self.user_slot.items()}
+
+    def decode_window(self, windows: Mapping[str, jax.Array]
+                      ) -> Dict[str, jax.Array]:
+        """K teacher-forced tokens per stream, ONE fused launch per window.
+
+        `windows` maps uid -> ``(K,)`` int32 (same K for every stream —
+        one executable per window length), covering exactly the admitted
+        sessions; ``windows[uid][0]`` is typically the stream's pending
+        token (then draft/forced continuations).  Equivalent to K `step`
+        calls on those tokens — same cache writes, same K adapter
+        plasticity steps (run as one `plastic.decode_rollout` launch), same
+        stochastic-round stream in quant mode — and bit-identical to them
+        (`tests/test_serving_lm.py` pins it).  Returns uid -> ``(K, V)``
+        logits; the new pending token is the last position's argmax.
+        """
+        missing = [u for u in self.user_slot if u not in windows]
+        extra = [u for u in windows if u not in self.user_slot]
+        if missing or extra:
+            raise ValueError(
+                f"windows must cover exactly the admitted sessions; "
+                f"missing {missing}, not admitted {extra}")
+        ks = {int(np.asarray(w).shape[0]) for w in windows.values()}
+        if len(ks) > 1:
+            raise ValueError(f"all windows must share one length, got {ks}")
+        k = ks.pop() if ks else 1
+        tokens = np.zeros((self.slots, k), np.int32)
+        for uid, w in windows.items():
+            tokens[self.user_slot[uid]] = np.asarray(w, np.int32)
+        self.pool, logits = self._window_fn(
+            self.params, self.pool, jnp.asarray(tokens), self._active_mask())
+        self.advance_steps(k)
+        return {uid: logits[slot] for uid, slot in self.user_slot.items()}
+
+
+class AdapterPool(SessionPool):
+    """Adapter-state-only pool: the batch rows of `launch/serve.py`.
+
+    The classic batched-serving driver decodes a fixed batch in lockstep
+    (one shared scalar cache index), so only the plastic adapter rows —
+    each user's learned ``W_fast`` + membranes/traces/step counter (+ scale
+    when ``cfg.adapter_quant``) — are session state.  This pool IS the
+    ``cache["adapter"]`` pytree: admit users before `generate`, install
+    `pool.pool` as the cache's adapter entry, and evict afterwards to
+    persist what each stream learned.
+    """
+
+    def __init__(self, cfg: ModelConfig, slots: int,
+                 store: Optional[SessionStore] = None):
+        if not cfg.plastic_adapter:
+            raise ValueError(f"{cfg.name}: AdapterPool needs "
+                             "cfg.plastic_adapter=True")
+        self.cfg = cfg
+        pool = init_from_plan(plastic.plan_cache(cfg, slots),
+                              jax.random.PRNGKey(0))
+        super().__init__(pool, uniform_axes(pool), slots, store)
+
+    def _session_factory(self):
+        # fresh sessions keep plan inits (quant rows: non-zero w_scale)
+        return self._zero_session

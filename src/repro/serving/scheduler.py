@@ -1,39 +1,50 @@
-"""FleetScheduler: continuous batching of plastic sessions into fixed slots.
+"""Session-pytree slot pools: continuous batching into fixed-shape tensors.
 
 The fleet tensor (PR 2) gives B per-request weight sets one fused launch per
-layer; this module decides WHICH users occupy those B slots over time.  The
-pool is a single fleet `NetworkState` of FIXED shape ``(B, N, M)`` — slots
-are never added or removed, so every jitted program (the pool step and the
-gather/scatter swaps) compiles exactly once per shape and the compile count
-is pinned (`compile_count()`; asserted by benchmarks/serving_churn.py).
+layer; this module decides WHICH users occupy those B slots over time.  A
+pool is ANY pytree of fixed-shape arrays in which each leaf either carries a
+slot axis (one row per resident session) or is shared pool state (a clock).
+Slots are never added or removed, so every jitted program (the pool step and
+the gather/scatter swaps) compiles exactly once per shape and the compile
+count is pinned (`compile_count()`; asserted by benchmarks/serving_churn.py
+and benchmarks/serving_lm.py).
 
-Mechanics per scheduling event:
+Two pools ride the same machinery:
+
+  * `FleetScheduler` — the SNN controller fleet: a `NetworkState` of shape
+    ``(B, N, M)`` stepped through the `engine.layer_step`/`engine.rollout`
+    fleet path.
+  * `serving.lm.LMScheduler` — the LM decode pool: KV/SSM caches
+    ``(L, B, S, ...)``, per-slot sequence indices ``(B,)``, and the plastic
+    adapter's ``W_fast (B, N, N)`` (float32 or int8), all one session
+    pytree.
+
+Mechanics per scheduling event (`SessionPool`):
 
   * ``admit(uid)``  — `SessionStore.checkout` (warm hit / durable restore /
-    fresh zero state), then swap-in: one jitted ``leaf.at[slot].set(user)``
-    scatter per state leaf, with the slot index TRACED so any slot reuses
-    the same executable.
-  * ``evict(uid)``  — swap-out (jitted ``leaf[slot]`` gather), stamp the
-    session's own step counter into ``NetworkState.t``, and
+    fresh state), then swap-in: one jitted per-leaf scatter along each
+    leaf's slot axis, with the slot index TRACED so any slot reuses the
+    same executable.
+  * ``evict(uid)``  — swap-out (jitted per-leaf gather), a subclass
+    finalize hook (e.g. stamping the session's step counter), and
     `SessionStore.checkin` (write-through persist); the vacated slot is
     scatter-cleared to zeros for hygiene.
-  * ``step(drives)``— ONE fused pool step over all B slots through the
-    existing `engine.layer_step` fleet path, with the ``active (B,)`` mask
-    gating vacant slots into true no-ops (weights/membranes/traces frozen
-    bit-exactly, events zero).  Occupancy changes never retrace: the mask
-    is a runtime operand, not a shape.
+  * stepping        — subclass-owned: ONE fused program over all B slots
+    with the ``active (B,)`` mask gating vacant slots into true no-ops
+    (state frozen bit-exactly, outputs zero/ignored).  Occupancy changes
+    never retrace: the mask is a runtime operand, not a shape.
 
-Because fleet-mode streams are mutually independent and the active mask
-freezes state bit-exactly, a session's trajectory is invariant to WHICH
-slot it occupies, to its neighbours, and to evict -> persist -> re-admit
-round-trips — the bit-identity contract `tests/test_serving.py` pins on
-the xla and pallas-interpret backends.
+Because slot rows are mutually independent and the active mask freezes
+state bit-exactly, a session's trajectory is invariant to WHICH slot it
+occupies, to its neighbours, and to evict -> persist -> re-admit
+round-trips — the bit-identity contract `tests/test_serving.py` and
+`tests/test_serving_lm.py` pin on the xla and pallas-interpret backends.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Mapping, Optional
+from typing import Any, Dict, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +53,12 @@ import numpy as np
 from repro.core import snn
 from repro.core.engine import NetworkState
 from repro.serving.sessions import SessionStore
+
+# Axis sentinel: a pool leaf marked SHARED has no slot rows — it is pool-
+# global state (e.g. the fleet clock `NetworkState.t`).  Swap-in carries it
+# through untouched; swap-out returns zeros (the scheduler stamps the
+# session's true host-side value in `_finalize_session`).
+SHARED = "shared"
 
 
 # ---- generic slot gather/scatter (any pytree of leading-slot-rank leaves) --
@@ -59,36 +76,210 @@ def slot_take(pool, slot):
     return jax.tree.map(lambda p: p[slot], pool)
 
 
-def _fleet_put(fleet: NetworkState, slot, user: NetworkState) -> NetworkState:
-    """NetworkState-aware scatter: `t` is the shared pool clock, not a slot
-    row, so it is carried through instead of indexed.  In a quantized pool
-    the per-layer ``w_scale`` rows are slot state like everything else —
-    a restored session brings its own scale into whatever slot it lands in
+def _put_leaf(p, u, ax, slot):
+    if ax == SHARED:
+        return p
+    idx = (slice(None),) * ax + (slot,)
+    return p.at[idx].set(u.astype(p.dtype))
+
+
+def _take_leaf(p, ax, slot):
+    if ax == SHARED:
+        return jnp.zeros_like(p)
+    return jnp.take(p, slot, axis=ax)
+
+
+def make_slot_ops(axes):
+    """Jitted (put, take) for a pool whose per-leaf slot axes are `axes`.
+
+    `axes` is a pytree matching the pool structure whose leaves are either
+    an int (the axis carrying slot rows in that leaf) or `SHARED`.  The
+    slot index is traced, so every slot reuses one executable per op.
+    """
+    def put(pool, slot, user):
+        return jax.tree.map(
+            lambda p, u, ax: _put_leaf(p, u, ax, slot), pool, user, axes)
+
+    def take(pool, slot):
+        return jax.tree.map(
+            lambda p, ax: _take_leaf(p, ax, slot), pool, axes)
+
+    return (jax.jit(put, donate_argnums=(0,)), jax.jit(take))
+
+
+def uniform_axes(tree, axis=0):
+    """Axes pytree assigning one slot `axis` to every leaf of `tree`."""
+    return jax.tree.map(lambda _: axis, tree)
+
+
+# ---- the generic pool ------------------------------------------------------
+
+
+class SessionPool:
+    """Admit/evict user sessions into a fixed-shape slot pool (base class).
+
+    Subclasses provide the pool pytree + its slot-axes pytree and own the
+    stepping programs; this base owns occupancy bookkeeping, LRU admission,
+    the jitted traced-slot swaps, per-session step counters, and the
+    `SessionStore` round-trip.
+
+    Args:
+      pool:  the pool pytree (must start ZEROED in its slot rows — the
+             vacated-slot hygiene scatter reuses slot 0 of this initial
+             pool as the zero template).
+      axes:  pytree matching `pool`: per-leaf slot axis (int) or `SHARED`.
+      slots: pool size B; fixes every pool tensor shape forever.
+      store: `SessionStore` backing eviction/restore; a private in-RAM
+             store is created if omitted.
+    """
+
+    def __init__(self, pool, axes, slots: int,
+                 store: Optional[SessionStore] = None):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        self.slots = slots
+        self.store = store if store is not None else SessionStore()
+        self.pool = pool
+        self._axes = axes
+        self._put, self._take = make_slot_ops(axes)
+        self._zero_session = self._take(pool, jnp.int32(0))
+        # the pool-mode session template (abstract): what every admitted
+        # payload must look like, passed to `SessionStore.checkout` so
+        # admission never has to eval_shape the factory (a jitted prefill
+        # factory would grow a trace-cache entry per admission otherwise)
+        self._template = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            self._zero_session)
+        self.slot_user: list = [None] * slots        # slot -> uid | None
+        self.user_slot: Dict[str, int] = {}          # uid -> slot
+        self._steps = np.zeros(slots, np.int64)      # per-session step count
+        self._admit_seq = np.zeros(slots, np.int64)  # admission order (LRU)
+        self._seq = 0
+        self.evictions = 0
+        self._jitted = [self._put, self._take]       # compile_count sources
+
+    # ---- occupancy -------------------------------------------------------
+
+    @property
+    def active_users(self) -> list:
+        return [u for u in self.slot_user if u is not None]
+
+    @property
+    def free_slots(self) -> int:
+        return self.slots - len(self.user_slot)
+
+    def _active_mask(self) -> jax.Array:
+        mask = np.zeros(self.slots, np.bool_)
+        for s, u in enumerate(self.slot_user):
+            mask[s] = u is not None
+        return jnp.asarray(mask)
+
+    def compile_count(self) -> int:
+        """Total executables compiled by the pool's jitted programs."""
+        return sum(int(f._cache_size()) for f in self._jitted)
+
+    def pool_nbytes(self) -> int:
+        """Resident bytes of the pool pytree (all leaves).
+
+        The quantized-pool headline: int8 weight planes instead of float32
+        mean the same HBM holds ~4x more resident sessions (weights
+        dominate the session footprint).
+        """
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.pool))
+
+    # ---- session template hooks -----------------------------------------
+
+    def _session_factory(self):
+        """Fresh (zero) session for a brand-new user; subclasses may
+        override with richer construction (e.g. an LM prefill)."""
+        return jax.tree.map(jnp.zeros_like, self._zero_session)
+
+    def _finalize_session(self, user, step: int):
+        """Hook: adjust a just-gathered session before persisting it
+        (e.g. stamp the host-side step counter into a SHARED leaf)."""
+        return user
+
+    # ---- admission / eviction -------------------------------------------
+
+    def admit(self, uid: str, evict_lru: bool = False, factory=None) -> int:
+        """Place `uid` into a free slot (restoring persisted state if any).
+
+        Returns the slot index.  With ``evict_lru=True`` a full pool evicts
+        its least-recently-admitted session to make room; otherwise a full
+        pool raises RuntimeError.  `factory` overrides the fresh-session
+        constructor for THIS admission (it is also the `SessionStore`
+        validation template, so it must build the session pytree the pool
+        expects).
+        """
+        if uid in self.user_slot:
+            raise ValueError(f"session {uid!r} is already in slot "
+                             f"{self.user_slot[uid]}")
+        free = [s for s, u in enumerate(self.slot_user) if u is None]
+        if not free:
+            if not evict_lru:
+                raise RuntimeError(
+                    f"pool is full ({self.slots} slots); pass evict_lru=True "
+                    "or evict a session first")
+            lru = min((s for s in range(self.slots)),
+                      key=lambda s: self._admit_seq[s])
+            self.evict(self.slot_user[lru])
+            free = [lru]
+        slot = free[0]
+        state, step = self.store.checkout(
+            uid, self._session_factory if factory is None else factory,
+            template=self._template)
+        # normalize to device arrays: a store restore hands back HOST
+        # (numpy) leaves, and numpy arguments key a SEPARATE jit cache
+        # entry — without this, the first restore-admission after warm-up
+        # would read as a recompile under the pinned-zero churn gate
+        state = jax.tree.map(jnp.asarray, state)
+        self.pool = self._put(self.pool, jnp.int32(slot), state)
+        self.slot_user[slot] = uid
+        self.user_slot[uid] = slot
+        self._steps[slot] = step
+        self._admit_seq[slot] = self._seq
+        self._seq += 1
+        return slot
+
+    def evict(self, uid: str) -> None:
+        """Swap `uid` out, persist it durably, and clear its slot."""
+        slot = self.user_slot.pop(uid, None)
+        if slot is None:
+            raise KeyError(f"session {uid!r} is not in the pool")
+        user = self._take(self.pool, jnp.int32(slot))
+        user = self._finalize_session(user, int(self._steps[slot]))
+        self.store.checkin(uid, user, int(self._steps[slot]))
+        self.slot_user[slot] = None
+        # hygiene: scatter zeros over the vacated slot so no stale user data
+        # lingers in the pool tensor (the active mask already freezes it)
+        self.pool = self._put(self.pool, jnp.int32(slot), self._zero_session)
+        self._steps[slot] = 0
+        self.evictions += 1
+
+    def advance_steps(self, k: int) -> None:
+        """Advance every admitted session's host-side step counter by k."""
+        for slot in self.user_slot.values():
+            self._steps[slot] += k
+
+
+# ---- the SNN controller fleet ---------------------------------------------
+
+
+def _network_axes(fleet: NetworkState) -> NetworkState:
+    """Slot axes of a fleet NetworkState: every leaf carries slot rows on
+    axis 0 except the shared pool clock `t`.  In a quantized pool the
+    per-layer ``w_scale`` rows are slot state like everything else — a
+    restored session brings its own scale into whatever slot it lands in
     (the int8 payload is meaningless without it)."""
     return NetworkState(
-        w=tuple(f.at[slot].set(u.astype(f.dtype))
-                for f, u in zip(fleet.w, user.w)),
-        v=tuple(f.at[slot].set(u.astype(f.dtype))
-                for f, u in zip(fleet.v, user.v)),
-        trace=tuple(f.at[slot].set(u.astype(f.dtype))
-                    for f, u in zip(fleet.trace, user.trace)),
-        t=fleet.t,
-        w_scale=tuple(f.at[slot].set(u.astype(f.dtype))
-                      for f, u in zip(fleet.w_scale, user.w_scale)))
+        w=tuple(0 for _ in fleet.w),
+        v=tuple(0 for _ in fleet.v),
+        trace=tuple(0 for _ in fleet.trace),
+        t=SHARED,
+        w_scale=tuple(0 for _ in fleet.w_scale))
 
 
-def _fleet_take(fleet: NetworkState, slot) -> NetworkState:
-    """NetworkState-aware gather; `t` is zeroed (the scheduler stamps the
-    session's true host-side step count after the gather)."""
-    return NetworkState(
-        w=tuple(f[slot] for f in fleet.w),
-        v=tuple(f[slot] for f in fleet.v),
-        trace=tuple(f[slot] for f in fleet.trace),
-        t=jnp.zeros((), jnp.int32),
-        w_scale=tuple(f[slot] for f in fleet.w_scale))
-
-
-class FleetScheduler:
+class FleetScheduler(SessionPool):
     """Admit/evict user sessions into a fixed-shape controller slot pool.
 
     Args:
@@ -108,21 +299,10 @@ class FleetScheduler:
 
     def __init__(self, cfg: snn.SNNConfig, theta, slots: int,
                  store: Optional[SessionStore] = None):
-        if slots < 1:
-            raise ValueError(f"slots must be >= 1, got {slots}")
         self.cfg = cfg
         self.theta = theta
-        self.slots = slots
-        self.store = store if store is not None else SessionStore()
-        self.fleet: NetworkState = snn.init_state(cfg, batch=slots,
-                                                  fleet=True)
-        self._zero_user: NetworkState = snn.init_state(cfg)  # clear template
-        self.slot_user: list = [None] * slots        # slot -> uid | None
-        self.user_slot: Dict[str, int] = {}          # uid -> slot
-        self._steps = np.zeros(slots, np.int64)      # per-session step count
-        self._admit_seq = np.zeros(slots, np.int64)  # admission order (LRU)
-        self._seq = 0
-        self.evictions = 0
+        fleet = snn.init_state(cfg, batch=slots, fleet=True)
+        super().__init__(fleet, _network_axes(fleet), slots, store)
 
         def _pool_step(fleet, drive, active, teach, seeds):
             # `seeds` are the PER-SESSION step counters (host bookkeeping
@@ -147,87 +327,25 @@ class FleetScheduler:
         # churn benchmark pins.
         self._step = jax.jit(_pool_step)
         self._rollout = jax.jit(_pool_rollout)
-        self._put = jax.jit(_fleet_put, donate_argnums=(0,))
-        self._take = jax.jit(_fleet_take)
+        self._jitted += [self._step, self._rollout]
 
-    # ---- occupancy -------------------------------------------------------
-
+    # the historical attribute name: the pool pytree IS the fleet state
     @property
-    def active_users(self) -> list:
-        return [u for u in self.slot_user if u is not None]
+    def fleet(self) -> NetworkState:
+        return self.pool
 
-    @property
-    def free_slots(self) -> int:
-        return self.slots - len(self.user_slot)
+    @fleet.setter
+    def fleet(self, value: NetworkState) -> None:
+        self.pool = value
 
-    def _active_mask(self) -> jax.Array:
-        mask = np.zeros(self.slots, np.bool_)
-        for s, u in enumerate(self.slot_user):
-            mask[s] = u is not None
-        return jnp.asarray(mask)
+    def _session_factory(self):
+        return snn.init_state(self.cfg)
 
-    def compile_count(self) -> int:
-        """Total executables compiled by the scheduler's jitted programs."""
-        return sum(int(f._cache_size())
-                   for f in (self._step, self._rollout, self._put,
-                             self._take))
-
-    def pool_nbytes(self) -> int:
-        """Resident bytes of the fleet pool tensor (all leaves).
-
-        The quantized-pool headline: with ``cfg.quant`` the (B, N, M)
-        weight planes are int8 instead of float32, so the same HBM holds
-        ~4x more resident sessions (weights dominate: N*M vs N+M rows).
-        """
-        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.fleet))
-
-    # ---- admission / eviction -------------------------------------------
-
-    def admit(self, uid: str, evict_lru: bool = False) -> int:
-        """Place `uid` into a free slot (restoring persisted state if any).
-
-        Returns the slot index.  With ``evict_lru=True`` a full pool evicts
-        its least-recently-admitted session to make room; otherwise a full
-        pool raises RuntimeError.
-        """
-        if uid in self.user_slot:
-            raise ValueError(f"session {uid!r} is already in slot "
-                             f"{self.user_slot[uid]}")
-        free = [s for s, u in enumerate(self.slot_user) if u is None]
-        if not free:
-            if not evict_lru:
-                raise RuntimeError(
-                    f"pool is full ({self.slots} slots); pass evict_lru=True "
-                    "or evict a session first")
-            lru = min((s for s in range(self.slots)),
-                      key=lambda s: self._admit_seq[s])
-            self.evict(self.slot_user[lru])
-            free = [lru]
-        slot = free[0]
-        state, step = self.store.checkout(uid, lambda: snn.init_state(self.cfg))
-        self.fleet = self._put(self.fleet, jnp.int32(slot), state)
-        self.slot_user[slot] = uid
-        self.user_slot[uid] = slot
-        self._steps[slot] = step
-        self._admit_seq[slot] = self._seq
-        self._seq += 1
-        return slot
-
-    def evict(self, uid: str) -> None:
-        """Swap `uid` out, persist it durably, and clear its slot."""
-        slot = self.user_slot.pop(uid, None)
-        if slot is None:
-            raise KeyError(f"session {uid!r} is not in the pool")
-        user = self._take(self.fleet, jnp.int32(slot))
-        user = dataclasses.replace(
-            user, t=jnp.asarray(int(self._steps[slot]), jnp.int32))
-        self.store.checkin(uid, user, int(self._steps[slot]))
-        self.slot_user[slot] = None
-        # hygiene: scatter zeros over the vacated slot so no stale user data
-        # lingers in the pool tensor (the active mask already freezes it)
-        self.fleet = self._put(self.fleet, jnp.int32(slot), self._zero_user)
-        self._steps[slot] = 0
-        self.evictions += 1
+    def _finalize_session(self, user: NetworkState, step: int) -> NetworkState:
+        # the generic swap-out zeroes the SHARED pool clock; stamp the
+        # session's true host-side step count before it is persisted
+        return dataclasses.replace(
+            user, t=jnp.asarray(step, jnp.int32))
 
     # ---- stepping --------------------------------------------------------
 
@@ -272,8 +390,7 @@ class FleetScheduler:
         self.fleet, out = self._step(self.fleet, drive,
                                      self._active_mask(), tarr,
                                      jnp.asarray(self._steps.astype(np.int32)))
-        for uid, slot in self.user_slot.items():
-            self._steps[slot] += 1
+        self.advance_steps(1)
         return {uid: out[slot] for uid, slot in self.user_slot.items()}
 
     def pool_step(self, drives: Mapping[str, jax.Array],
@@ -303,8 +420,7 @@ class FleetScheduler:
         self.fleet, outs = self._rollout(
             self.fleet, window, self._active_mask(), tarr,
             jnp.asarray(self._steps.astype(np.int32)))
-        for uid, slot in self.user_slot.items():
-            self._steps[slot] += k
+        self.advance_steps(k)
         return {uid: outs[:, slot] for uid, slot in self.user_slot.items()}
 
     def control_step(self, obs: Mapping[str, jax.Array]

@@ -86,8 +86,8 @@ class SessionStore:
                 and latest_step(os.path.join(self.root, str(uid)))
                 is not None)
 
-    def checkout(self, uid: str, factory: Callable[[], Any]
-                 ) -> Tuple[Any, int]:
+    def checkout(self, uid: str, factory: Callable[[], Any],
+                 template: Any = None) -> Tuple[Any, int]:
         """Return ``(state, step)`` for `uid`; the caller owns it exclusively
         until `checkin`.
 
@@ -104,11 +104,19 @@ class SessionStore:
         would silently destroy the session (a float weight cast to int8
         truncates to garbage).  Migrating a float session into a quantized
         pool is an explicit, sanctioned operation: `snn.quantize_state`.
-        The template is ABSTRACT (`jax.eval_shape` — ShapeDtypeStructs, no
-        device allocation), so warm-hit admission stays allocation-free;
-        only a brand-new user pays for a concrete ``factory()``.
+        The template is ABSTRACT (ShapeDtypeStructs, no device allocation),
+        so warm-hit admission stays allocation-free; only a brand-new user
+        pays for a concrete ``factory()``.  Callers that already know the
+        pool-mode template (a `SessionPool` knows its session pytree
+        statically) pass it via ``template`` — otherwise it is derived with
+        ``jax.eval_shape(factory)``.  Passing it matters when the factory
+        wraps a jitted program (the LM prefill): every `eval_shape` of a
+        jitted call adds a trace-cache entry, which would read as a
+        "recompile" per admission under the churn benchmarks' pinned-zero
+        compile counts.
         """
-        template = jax.eval_shape(factory)
+        if template is None:
+            template = jax.eval_shape(factory)
         if uid in self._warm:
             self.warm_hits += 1
             state, step = self._warm.pop(uid)

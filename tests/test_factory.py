@@ -1,0 +1,119 @@
+"""Config-registry factory smoke: every arch in `repro.configs` must build
+through `models.factory` — param plan, abstract trace of the serving entry
+points, and (one arch per layout) a concrete tiny prefill/decode step — so
+an arch the factory cannot lower fails tier-1 instead of failing at serve
+time.  Also pins the factory's validation surface: the informative
+firefly-snn TypeError, layout checks, and the structural slot-axis
+inference the serving pool rides on (DESIGN.md §Arch-applicability).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke
+from repro.models import factory
+from repro.models.config import ModelConfig
+
+LM_ARCHS = [a for a in ARCHS if a != "firefly-snn"]
+# one representative per layout for the concrete (allocating) smoke
+LAYOUT_REPS = ["qwen3-4b", "deepseek-moe-16b", "mamba2-1.3b", "zamba2-7b"]
+
+
+class TestRegistryCoverage:
+    @pytest.mark.parametrize("arch", LM_ARCHS)
+    def test_every_arch_builds_and_traces(self, arch):
+        """plan + abstract forward/prefill/decode for EVERY registry entry
+        (eval_shape: no allocation, catches lowering bugs)."""
+        model = factory.build(arch, smoke=True)
+        assert isinstance(model.cfg, ModelConfig)
+        assert model.n_params() > 0
+        assert model.plan() is not None
+
+        cfg = model.cfg
+        max_len = 16
+        params = model.abstract()
+        if cfg.input_mode == "tokens":
+            prompt = jax.ShapeDtypeStruct((2, 4), jnp.int32)
+        else:
+            prompt = jax.ShapeDtypeStruct((2, 4, cfg.d_model), cfg.adtype)
+        logits, cache = jax.eval_shape(
+            lambda p, x: model.prefill(p, x, max_len), params, prompt)
+        assert logits.shape == (2, cfg.vocab)  # last-position logits
+        # decode always consumes token IDS — embeddings-mode archs (musicgen,
+        # pixtral) prefill with embeddings but generate vocab ids
+        step_tok = jax.ShapeDtypeStruct((2, 1), jnp.int32)
+        logits2, _ = jax.eval_shape(model.decode_step, params, cache,
+                                    step_tok)
+        assert logits2.shape[0] == 2
+
+    @pytest.mark.parametrize("arch", LAYOUT_REPS)
+    def test_layout_rep_concrete_prefill_decode(self, arch):
+        """One arch per layout runs a REAL tiny prefill + decode step."""
+        model = factory.build(arch, smoke=True)
+        params = model.init(jax.random.PRNGKey(0))
+        prompt = jnp.arange(8, dtype=jnp.int32).reshape(2, 4) % model.cfg.vocab
+        logits, cache = model.prefill(params, prompt, max_len=12)
+        assert np.isfinite(np.asarray(logits)).all()
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits2, cache = model.decode_step(params, cache, tok[:, None])
+        assert logits2.shape == (2, model.cfg.vocab)
+        assert np.isfinite(np.asarray(logits2)).all()
+
+
+class TestValidation:
+    def test_firefly_snn_refused_with_pointer(self):
+        """The SNN controller config is not an LM backbone: the error must
+        say where it DOES serve (FleetScheduler), not just reject it."""
+        with pytest.raises(TypeError, match="FleetScheduler"):
+            factory.build(get_smoke("firefly-snn"))
+
+    def test_unknown_arch(self):
+        with pytest.raises(KeyError, match="unknown arch"):
+            factory.build("qwen9-999t")
+
+    def test_overrides_apply(self):
+        model = factory.build("qwen3-4b", smoke=True, plastic_adapter=True,
+                              adapter_neurons=8, adapter_quant=True)
+        assert model.cfg.plastic_adapter
+        assert model.cfg.adapter_neurons == 8
+        assert model.cfg.adapter_quant
+
+    def test_bad_adapter_impl_rejected(self):
+        with pytest.raises(ValueError, match="adapter_impl"):
+            factory.build("qwen3-4b", smoke=True, plastic_adapter=True,
+                          adapter_impl="cuda")
+
+
+class TestPoolPlumbing:
+    @pytest.mark.parametrize("arch", LAYOUT_REPS)
+    def test_cache_axes_match_pool(self, arch):
+        """The inferred slot axis of every pooled-cache leaf really is the
+        slot axis: its extent equals the pool size, and no other layout
+        information is hand-tabled."""
+        model = factory.build(arch, smoke=True)
+        slots, max_len = 3, 8
+        pool = jax.eval_shape(lambda: model.pool_cache(slots, max_len))
+        axes = model.cache_axes(max_len)
+        leaves = jax.tree.leaves(jax.tree.map(
+            lambda leaf, ax: leaf.shape[ax] == slots, pool, axes))
+        assert leaves and all(leaves)
+
+    @pytest.mark.parametrize("arch", ["qwen3-4b", "zamba2-7b"])
+    def test_session_from_prefill_matches_template(self, arch):
+        """A squeezed B=1 prefill cache is exactly one session row of the
+        pool (the scatter the scheduler admits, the pytree the store
+        persists)."""
+        model = factory.build(arch, smoke=True)
+        max_len = 8
+        params = model.abstract()
+        prompt = jax.ShapeDtypeStruct((1, 4), jnp.int32)
+        _, cache1 = jax.eval_shape(
+            lambda p, x: model.prefill(p, x, max_len), params, prompt)
+        session = jax.eval_shape(model.session_from_prefill, cache1)
+        template = model.session_template(max_len)
+        assert jax.tree.map(lambda a, b: (a.shape, a.dtype)
+                            == (b.shape, b.dtype), session, template)
+        assert all(jax.tree.leaves(jax.tree.map(
+            lambda a, b: a.shape == b.shape and a.dtype == b.dtype,
+            session, template)))

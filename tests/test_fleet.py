@@ -258,7 +258,7 @@ class TestPlasticAdapterFleet:
         state = {
             "w_fast": jnp.zeros((b, n, n)), "v1": jnp.zeros((b, n)),
             "v2": jnp.zeros((b, n)), "tr1": jnp.zeros((b, n)),
-            "tr2": jnp.zeros((b, n)),
+            "tr2": jnp.zeros((b, n)), "t": jnp.zeros((b,), jnp.int32),
         }
         h = jax.random.normal(ks[3], (b, 1, cfg.d_model))
         return cfg, params, state, h

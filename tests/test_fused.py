@@ -437,6 +437,7 @@ class TestFusedCallers:
         state = {k: jnp.zeros((B, N, N)) if k == "w_fast"
                  else jnp.zeros((B, N))
                  for k in ("w_fast", "v1", "v2", "tr1", "tr2")}
+        state["t"] = jnp.zeros((B,), jnp.int32)  # per-session step counter
         h = jax.random.normal(ks[3], (B, K, 16))
         cfg = ModelConfig(**base, adapter_impl="xla")
 

@@ -1,0 +1,225 @@
+"""Observability overhead gate: telemetry must be (near-)free.
+
+The fleet telemetry of `repro.obs` is designed as a STATIC trace variant:
+``telemetry=False`` programs are byte-identical to the uninstrumented
+build, and ``telemetry=True`` adds exactly one extra stable executable per
+jitted entry point whose device-side cost is a per-slot reduction fused
+into the existing launch.  This benchmark turns both claims into gates:
+
+  1. THROUGHPUT — steady-state `FleetScheduler.pool_step` rate at fleet
+     size B, telemetry-off vs telemetry-on (which includes the host-side
+     `record_fleet_telemetry` rollup — the real serving cost).  Median of
+     ``--repeats`` timing passes.  Full mode (B=256) asserts the overhead
+     stays <= ``--max-overhead`` (5%); smoke mode (B=16) records but does
+     not assert (tiny-problem timings are launch-overhead noise).
+
+  2. COMPILE DELTA — after warming both variants of both entry points,
+     `compiled_programs()` must show EXACTLY one executable per variant:
+     telemetry never churns the trace cache per step, and the off-path
+     programs are untouched by instrumenting a run.
+
+  3. WATCHDOG-SILENT CHURN — with the recompile watchdog ARMED, a churn
+     loop (evict -> re-admit -> step, cycling restore and fresh-create
+     admissions) must trigger ZERO violations: the whole observability
+     stack — metrics, telemetry variants, store counters — introduces no
+     shape or signature drift.  Any violation fails the bench (the CI
+     obs-smoke job runs this on xla AND pallas-interpret).
+
+    PYTHONPATH=src python benchmarks/obs_overhead.py [--smoke] [--impl ...]
+
+Writes benchmarks/results/obs_overhead[_smoke].json plus a metrics-
+registry snapshot (obs_overhead_metrics[_smoke].json — the artifact the
+CI job uploads).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import time
+
+import jax
+import numpy as np
+
+from repro.core import snn
+from repro.obs import watchdog as _watchdog
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _make_sched(impl: str, slots: int, admitted: int):
+    from repro.serving.scheduler import FleetScheduler
+
+    cfg = snn.SNNConfig(layer_sizes=(32, 64, 8), timesteps=8, plastic=True,
+                        encoding="current", impl=impl)
+    theta = snn.init_theta(cfg, jax.random.PRNGKey(0), scale=0.05)
+    sched = FleetScheduler(cfg, theta, slots=slots)
+    for i in range(admitted):
+        sched.admit(f"user{i}")
+    return sched
+
+
+def _drives(sched):
+    rng = np.random.default_rng(1)
+    n_in = sched.cfg.layer_sizes[0]
+    return {u: rng.standard_normal(n_in).astype(np.float32) * 2.0
+            for u in sched.active_users}
+
+
+def _steps_per_s(sched, drives, telemetry: bool, iters: int,
+                 repeats: int) -> float:
+    """Median steady-state pool_step (window) rate over `repeats` passes."""
+    k = sched.cfg.timesteps
+    sched.pool_step(drives, telemetry=telemetry)       # compile + warm
+    jax.block_until_ready(sched.fleet.v)
+    rates = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            sched.pool_step(drives, telemetry=telemetry)
+        # drain the dispatch queue INSIDE the timed region: the off-path
+        # never transfers anything to host, so without this it would be
+        # timed against work still in flight (the telemetry path syncs
+        # every call through the host gauge rollup)
+        jax.block_until_ready(sched.fleet.v)
+        rates.append(iters * k / (time.perf_counter() - t0))
+    return statistics.median(rates)
+
+
+def bench_overhead(impl: str, slots: int, iters: int, repeats: int) -> dict:
+    sched = _make_sched(impl, slots, admitted=slots)
+    drives = _drives(sched)
+    off = _steps_per_s(sched, drives, False, iters, repeats)
+    on = _steps_per_s(sched, drives, True, iters, repeats)
+    return {"impl": impl, "batch": slots,
+            "steps_per_s_off": off, "steps_per_s_on": on,
+            "overhead_frac": 1.0 - on / off,
+            "metrics": sched.metrics.snapshot()}
+
+
+def check_compile_delta(impl: str, slots: int) -> dict:
+    """Exactly one stable executable per (entry point x variant)."""
+    sched = _make_sched(impl, slots, admitted=max(1, slots // 2))
+    drives = _drives(sched)
+    base = dict(sched.compiled_programs())
+    # warm every stepping entry point, both variants, twice (a second call
+    # that retraced would show as count 2)
+    for _ in range(2):
+        sched.step(drives)
+        sched.step(drives, telemetry=True)
+        sched.pool_step(drives)
+        sched.pool_step(drives, telemetry=True)
+    progs = sched.compiled_programs()
+    expected = {"pool_step": 1, "pool_rollout": 1,
+                "pool_step_telemetry": 1, "pool_rollout_telemetry": 1}
+    errors = [f"{name}: {progs.get(name)} executables, expected {want}"
+              for name, want in expected.items() if progs.get(name) != want]
+    # instrumenting must not have touched the swap programs either
+    for name in ("slot_put", "slot_take"):
+        if progs[name] != base[name]:
+            errors.append(f"{name}: grew {base[name]} -> {progs[name]} "
+                          "during stepping")
+    return {"impl": impl, "programs": progs, "errors": errors}
+
+
+def check_watchdog_churn(impl: str, slots: int, cycles: int) -> dict:
+    """Churn under an armed watchdog: zero compiles tolerated."""
+    watch = _watchdog.install()
+    sched = _make_sched(impl, slots, admitted=slots)
+    # warmup: every program the churn loop will hit, including the
+    # restore-admission path (evict then re-admit) and a fresh create
+    drives = _drives(sched)
+    sched.pool_step(drives, telemetry=True)
+    sched.evict("user0")
+    sched.admit("user0")                       # restore path
+    sched.evict("user0")
+    sched.admit("fresh0")                      # create path (new uid)
+    sched.evict("fresh0")
+    sched.admit("user0")
+    sched.pool_step(_drives(sched), telemetry=True)
+    watch.reset()
+    with watch.armed():
+        for c in range(cycles):
+            uid = sched.active_users[c % len(sched.active_users)]
+            sched.evict(uid)
+            sched.admit(f"fresh{c + 1}" if c % 3 == 2 else uid,
+                        evict_lru=True)
+            sched.pool_step(_drives(sched), telemetry=True)
+    return {"impl": impl, "cycles": cycles,
+            "violations": watch.violations,
+            "signatures": list(watch.violation_signatures)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="B=16 quick pass for CI (no overhead assertion)")
+    ap.add_argument("--impl", default="xla",
+                    choices=["xla", "pallas", "pallas-interpret"])
+    ap.add_argument("--batch", type=int, default=None,
+                    help="fleet size (default 256 full / 16 smoke)")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--churn-cycles", type=int, default=None)
+    ap.add_argument("--max-overhead", type=float, default=0.05,
+                    help="telemetry-on throughput cost gate (full mode)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    slots = args.batch if args.batch else (16 if args.smoke else 256)
+    iters = args.iters if args.iters else (3 if args.smoke else 20)
+    cycles = (args.churn_cycles if args.churn_cycles
+              else (6 if args.smoke else 24))
+    if args.out is None:
+        args.out = os.path.join(
+            RESULTS,
+            "obs_overhead_smoke.json" if args.smoke else "obs_overhead.json")
+
+    failures = []
+
+    overhead = bench_overhead(args.impl, slots, iters, args.repeats)
+    print(f"[throughput] B={slots} impl={args.impl}: "
+          f"off={overhead['steps_per_s_off']:.1f} steps/s, "
+          f"on={overhead['steps_per_s_on']:.1f} steps/s, "
+          f"overhead={overhead['overhead_frac'] * 100:+.2f}%")
+    if not args.smoke and overhead["overhead_frac"] > args.max_overhead:
+        failures.append(
+            f"telemetry overhead {overhead['overhead_frac'] * 100:.2f}% "
+            f"exceeds the {args.max_overhead * 100:.0f}% gate")
+
+    compile_delta = check_compile_delta(args.impl, slots)
+    print(f"[compile] {compile_delta['programs']}")
+    failures += compile_delta["errors"]
+
+    churn = check_watchdog_churn(args.impl, min(slots, 8), cycles)
+    print(f"[watchdog] {churn['cycles']} churn cycles: "
+          f"{churn['violations']} violations")
+    if churn["violations"]:
+        failures.append(
+            f"watchdog fired during churn: {churn['signatures']}")
+
+    out = {"impl": args.impl, "smoke": bool(args.smoke), "batch": slots,
+           "iters": iters, "repeats": args.repeats,
+           "max_overhead": args.max_overhead,
+           "overhead": {k: v for k, v in overhead.items() if k != "metrics"},
+           "compile_delta": {"programs": compile_delta["programs"],
+                             "errors": compile_delta["errors"]},
+           "watchdog_churn": churn,
+           "failures": failures}
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    # metrics snapshot artifact: obs_overhead_metrics[_smoke].json (the
+    # _smoke suffix stays LAST so the run.py drift gate pairs the stems)
+    snap_path = os.path.join(
+        RESULTS, "obs_overhead_metrics_smoke.json" if args.smoke
+        else "obs_overhead_metrics.json")
+    with open(snap_path, "w") as f:
+        json.dump(overhead["metrics"], f, indent=1, sort_keys=True)
+    print(f"wrote {args.out} and {snap_path}; "
+          f"{len(failures)} failures: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -70,7 +70,8 @@ def churn_cell(cfg, theta, slots: int, arrival: float, depart: float,
     user_pool = [f"u{i:03d}" for i in range(4 * slots)]  # ids recycle ->
     next_uid = 0                                         # disk restores
     admit_lat = []
-    occupancy = 0
+    n_admits = 2                         # the benchmark's OWN event log
+    occupancy = 0                        # (warm-up did 2 admits/2 evicts)
     t0 = time.perf_counter()
     for t in range(steps):
         for _ in range(int(rng.poisson(arrival))):
@@ -81,6 +82,7 @@ def churn_cell(cfg, theta, slots: int, arrival: float, depart: float,
             ta = time.perf_counter()
             sched.admit(uid, evict_lru=True)
             admit_lat.append(time.perf_counter() - ta)
+            n_admits += 1
         for uid in list(sched.active_users):
             if rng.random() < depart:
                 sched.evict(uid)
@@ -107,6 +109,28 @@ def churn_cell(cfg, theta, slots: int, arrival: float, depart: float,
         for w, b in zip(sched.fleet.w, frozen_before))
     assert idle_frozen, "idle slot drifted — active mask is not a no-op"
 
+    # ---- metrics reconciliation ------------------------------------------
+    # The store's obs counters must agree with the benchmark's own event
+    # log: every admission is exactly one checkout (warm hit | disk
+    # restore | fresh create), every eviction exactly one durable persist.
+    snap = store.metrics.snapshot()
+
+    def ctr(name):
+        return int(snap[name]["value"])
+
+    checkouts = (ctr("session_store_warm_hits_total")
+                 + ctr("session_store_restores_total")
+                 + ctr("session_store_creates_total"))
+    assert checkouts == n_admits, (
+        f"store checkouts {checkouts} != admissions {n_admits} — the obs "
+        "counters drifted from the event log")
+    assert ctr("session_store_persists_total") == sched.evictions, (
+        f"store persists {ctr('session_store_persists_total')} != "
+        f"evictions {sched.evictions}")
+    pool_snap = sched.metrics.snapshot()
+    assert int(pool_snap["pool_admissions_total"]["value"]) == n_admits
+    assert int(pool_snap["pool_evictions_total"]["value"]) == sched.evictions
+
     lat_ms = sorted(x * 1e3 for x in admit_lat) or [0.0]
     return {
         "slots": slots, "arrival_rate": arrival, "depart_rate": depart,
@@ -121,6 +145,10 @@ def churn_cell(cfg, theta, slots: int, arrival: float, depart: float,
         "compiled_programs": warm_compiles,
         "recompiles_after_warmup": recompiles,
         "idle_slot_frozen": bool(idle_frozen),
+        "warm_hits": ctr("session_store_warm_hits_total"),
+        "store_creates": ctr("session_store_creates_total"),
+        "store_persists": ctr("session_store_persists_total"),
+        "metrics_reconciled": True,
     }
 
 

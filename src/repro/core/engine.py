@@ -54,6 +54,8 @@ from repro.kernels.plasticity import kernel as _kernel
 from repro.kernels.plasticity import quant as _Q
 from repro.kernels.plasticity import ref as _ref
 from repro.kernels.plasticity.quant import QuantConfig
+from repro.obs.telemetry import (FleetTelemetry, sat_threshold,
+                                 sat_threshold_q)
 
 IMPLS = ("xla", "pallas", "pallas-interpret")
 
@@ -127,12 +129,19 @@ class EngineParams:
     quant: Optional[QuantConfig] = None  # fixed-point mode (None = float32)
 
 
+def _occupancy(active, b) -> jax.Array:
+    if active is None:
+        return jnp.ones((b,), jnp.float32)
+    return active.reshape(-1).astype(jnp.float32)
+
+
 def layer_step(state: LayerState, x: jax.Array, *,
                params: EngineParams = EngineParams(),
                impl: str = "xla",
                teach: Optional[jax.Array] = None,
                active: Optional[jax.Array] = None,
-               seed: Optional[jax.Array] = None
+               seed: Optional[jax.Array] = None,
+               telemetry: bool = False
                ) -> tuple[LayerState, jax.Array]:
     """One fused forward+plasticity step for one layer.
 
@@ -156,10 +165,19 @@ def layer_step(state: LayerState, x: jax.Array, *,
              deterministic stochastic round of dw (scalar; fleet mode takes
              a ``(B,)`` vector of per-SESSION counters so a session's
              update stream is invariant to its slot).  Defaults to 0.
+      telemetry: fleet-only STATIC flag — the backends emit one extra
+             reduced output (per-slot raw sums) inside the same fused
+             program, returned here normalized as an `obs.FleetTelemetry`
+             third result.  Because the flag is static, telemetry-off
+             traces are byte-identical to the uninstrumented program and
+             telemetry-on is exactly one additional stable executable per
+             entry point (never per-step churn).
 
     Returns:
       ``(new_state, out)`` — ``out`` is the layer's output events: spikes for
-      spiking layers, the membrane potential for the leaky readout.
+      spiking layers, the membrane potential for the leaky readout.  With
+      ``telemetry=True``: ``(new_state, out, FleetTelemetry)`` (vacant
+      slots report zeros in every telemetry field).
     """
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
@@ -232,6 +250,12 @@ def layer_step(state: LayerState, x: jax.Array, *,
         raise ValueError(
             "active slot masks are a fleet-mode (w (B, N, M)) contract; "
             f"got w {state.w.shape} with an active mask")
+    if telemetry:
+        if not fleet:
+            raise ValueError(
+                "telemetry is a fleet-mode (w (B, N, M)) contract: per-slot "
+                f"rows need a leading stream rank; got w {state.w.shape}")
+        kw["telemetry"] = True
 
     # Select the backend function; the quant variants take the per-tile
     # weight scale as an extra positional between w and theta.
@@ -251,7 +275,7 @@ def layer_step(state: LayerState, x: jax.Array, *,
               ("pallas", True): _kernel.dual_engine_fleet_step_pallas}
     if impl == "xla":
         fn = fn[("xla", fleet)]
-        spikes, v, tpost, w = fn(
+        res = fn(
             x, state.w, *scale_args, state.theta, state.v, state.trace_pre,
             state.trace_post, teach=teach, **kw)
     else:
@@ -259,14 +283,15 @@ def layer_step(state: LayerState, x: jax.Array, *,
         unbatched = not fleet and x.ndim == 1
         up = (lambda a: a[None]) if unbatched else (lambda a: a)
         fn = fn[("pallas", fleet)]
-        spikes, v, tpost, w = fn(
+        res = fn(
             up(x), state.w, *scale_args, state.theta, up(state.v),
             up(state.trace_pre), up(state.trace_post),
             teach=None if teach is None else up(teach),
             block_m=params.block_m, interpret=(impl == "pallas-interpret"),
             **kw)
         if unbatched:
-            spikes, v, tpost = spikes[0], v[0], tpost[0]
+            res = (res[0][0], res[1][0], res[2][0]) + tuple(res[3:])
+    spikes, v, tpost, w = res[:4]
 
     new_state = dataclasses.replace(state, w=w, v=v, trace_post=tpost)
     out = spikes if params.spiking else v
@@ -277,7 +302,17 @@ def layer_step(state: LayerState, x: jax.Array, *,
         # layers too — a pooled consumer must never see a stale membrane.
         out = jnp.where(active.astype(bool)[:, None], out,
                         jnp.zeros_like(out))
-    return new_state, out
+    if not telemetry:
+        return new_state, out
+    # Normalize the raw per-slot sums into per-neuron / per-synapse means.
+    b, n, m = state.w.shape
+    raw = res[4]
+    tel = FleetTelemetry(
+        spike_rate=raw[:, 0] / m,
+        mean_abs_dw=raw[:, 1] / (n * m),
+        sat_frac=raw[:, 2] / m,
+        occupancy=_occupancy(active, b))
+    return new_state, out, tel
 
 
 def _validate_rollout_params(params) -> None:
@@ -299,7 +334,8 @@ def rollout(state: NetworkState, theta, drives: jax.Array, *,
             teach: Optional[jax.Array] = None,
             active: Optional[jax.Array] = None,
             seed: Optional[jax.Array] = None,
-            unroll_k: int = 1, block_b: int = 8
+            unroll_k: int = 1, block_b: int = 8,
+            telemetry: bool = False
             ) -> tuple[NetworkState, jax.Array]:
     """K fused timesteps of the WHOLE layer stack (the rollout megakernel).
 
@@ -339,9 +375,18 @@ def rollout(state: NetworkState, theta, drives: jax.Array, *,
               FMA-contraction freedom, see kernels/plasticity/fused.  The
               xla oracle ignores it.
       block_b: fleet streams per Pallas grid program.
+      telemetry: fleet-only STATIC flag — emit an `obs.FleetTelemetry` of
+              per-slot WINDOW means as a third result: spike_rate/sat_frac
+              accumulate per step inside the window (averaged over steps
+              and layers), mean_abs_dw is the NET weight motion
+              ``|w_end - w_start| / (N*M) / (K * n_plastic)`` — the
+              activity measure that survives the fixed-point grid, and
+              the one that costs one reduction per window rather than one
+              per step.  Off-path traces stay byte-identical.
 
     Returns ``(new_state, outs)`` with outs (K, ·, M_last) and
-    ``new_state.t = state.t + K``.
+    ``new_state.t = state.t + K``; with ``telemetry=True``:
+    ``(new_state, outs, FleetTelemetry)``.
     """
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
@@ -367,6 +412,10 @@ def rollout(state: NetworkState, theta, drives: jax.Array, *,
                          f"{drives.shape}")
     if active is not None and not fleet:
         raise ValueError("active slot masks are a fleet-mode contract")
+    if telemetry and not fleet:
+        raise ValueError(
+            "telemetry is a fleet-mode (w (B, N, M)) contract: per-slot "
+            "rows need a leading stream rank")
     k_steps = drives.shape[0]
     if k_steps < 1:
         raise ValueError("rollout needs K >= 1 timesteps")
@@ -416,27 +465,52 @@ def rollout(state: NetworkState, theta, drives: jax.Array, *,
                      else state.t.astype(jnp.int32))
 
     if impl == "xla":
-        new_state, outs = _rollout_xla(state, theta, drives, params, teach,
-                                       active, base_seed)
+        res = _rollout_xla(state, theta, drives, params, teach,
+                           active, base_seed, telemetry=telemetry)
     else:
-        new_state, outs = _rollout_pallas(
+        res = _rollout_pallas(
             state, theta, drives, params, teach, active, base_seed,
             unroll_k=unroll_k, block_b=block_b,
-            interpret=(impl == "pallas-interpret"))
-    return dataclasses.replace(new_state, t=state.t + k_steps), outs
+            interpret=(impl == "pallas-interpret"), telemetry=telemetry)
+    new_state, outs = res[0], res[1]
+    new_state = dataclasses.replace(new_state, t=state.t + k_steps)
+    if not telemetry:
+        return new_state, outs
+    return new_state, outs, res[2]
 
 
-def _rollout_xla(state, theta, drives, params, teach, active, base_seed):
+def _rollout_xla(state, theta, drives, params, teach, active, base_seed,
+                 *, telemetry=False):
     """Scanned per-step oracle: the semantic ground truth for the fused
-    kernel (body = snn.timestep's dataflow, layer steps via `layer_step`)."""
+    kernel (body = snn.timestep's dataflow, layer steps via `layer_step`).
+
+    With ``telemetry`` the scan carry grows a (B, 2) [spike, saturation]
+    accumulator mirroring the fused kernel's in-register one; the |dw|
+    column is the NET window motion computed ONCE post-scan from the
+    weight carry — the scan body never touches per-step weight deltas, so
+    the telemetry variant adds two cheap reductions per step, not an
+    O(B*N*M) pass.
+    """
     qc = params[0].quant
     decay = params[0].trace_decay
     n_layers = state.num_layers
     ks = jnp.arange(drives.shape[0], dtype=jnp.int32)
     xs = (drives, ks) if teach is None else (drives, teach, ks)
 
+    def _event_units(out, spiking):
+        """|events| in event units from a layer's gated output (the readout
+        membrane maps back through its event nonlinearity; inactive slots'
+        zeroed outputs stay zero under both)."""
+        if qc is not None:
+            ev = out if spiking else jnp.clip(out, -qc.one, qc.one)
+            return jnp.abs(ev).astype(jnp.float32) / qc.one
+        return jnp.abs(out if spiking else jnp.tanh(out))
+
     def body(carry, inp):
-        w, v, tr = carry
+        if telemetry:
+            w, v, tr, acc = carry
+        else:
+            (w, v, tr), acc = carry, None
         if teach is None:
             x, k = inp
             teach_k = None
@@ -464,16 +538,64 @@ def _rollout_xla(state, theta, drives, params, teach, active, base_seed):
                 seed=(None if base_seed is None
                       else _Q.fold_seed(base_seed + k, i)))
             w[i], v[i], tr[i + 1] = layer.w, layer.v, layer.trace_post
+            if telemetry:
+                m_i = out.shape[-1]
+                ev_f = _event_units(out, params[i].spiking)
+                if qc is not None:
+                    sat = jnp.abs(layer.v) >= sat_threshold_q(
+                        params[i].v_th, qc)
+                else:
+                    sat = jnp.abs(layer.v) >= sat_threshold(params[i].v_th)
+                acc = acc + jnp.stack(
+                    [jnp.sum(ev_f, axis=1) / m_i,
+                     jnp.sum(sat.astype(jnp.float32), axis=1) / m_i],
+                    axis=1)
             x = out
-        return (tuple(w), tuple(v), tuple(tr)), out
+        new = (tuple(w), tuple(v), tuple(tr))
+        return (new + (acc,) if telemetry else new), out
 
-    (w, v, tr), outs = jax.lax.scan(body, (state.w, state.v, state.trace),
-                                    xs)
-    return dataclasses.replace(state, w=w, v=v, trace=tr), outs
+    carry0 = (state.w, state.v, state.trace)
+    if telemetry:
+        carry0 = carry0 + (jnp.zeros((state.w[0].shape[0], 2), jnp.float32),)
+    carry, outs = jax.lax.scan(body, carry0, xs)
+    w, v, tr = carry[0], carry[1], carry[2]
+    new_state = dataclasses.replace(state, w=w, v=v, trace=tr)
+    if not telemetry:
+        return new_state, outs
+
+    k_steps = drives.shape[0]
+    kl = float(k_steps * n_layers)
+    acc = carry[3]
+    spike_rate, sat_frac = acc[:, 0] / kl, acc[:, 1] / kl
+    plast = [i for i in range(n_layers)
+             if params[i].plastic and theta[i] is not None]
+    if plast:
+        dw_sum = jnp.zeros_like(spike_rate)
+        for i in plast:
+            n_i, m_i = state.w[i].shape[-2], state.w[i].shape[-1]
+            d = jnp.abs(w[i].astype(jnp.int32)
+                        - state.w[i].astype(jnp.int32)).astype(jnp.float32) \
+                if qc is not None else jnp.abs(w[i] - state.w[i])
+            per_slot = jnp.sum(d, axis=(1, 2))
+            if qc is not None:
+                sc = (state.w_scale[i] if state.w_scale
+                      else jnp.float32(qc.w_scale))
+                per_slot = per_slot * jnp.asarray(sc).reshape(-1)
+            dw_sum = dw_sum + per_slot / (n_i * m_i)
+        mean_dw = dw_sum / float(k_steps * len(plast))
+    else:
+        mean_dw = jnp.zeros_like(spike_rate)
+    occ = _occupancy(active, state.w[0].shape[0])
+    gate = occ if active is not None else jnp.ones_like(occ)
+    tel = FleetTelemetry(spike_rate=spike_rate * gate,
+                         mean_abs_dw=mean_dw * gate,
+                         sat_frac=sat_frac * gate,
+                         occupancy=occ)
+    return new_state, outs, tel
 
 
 def _rollout_pallas(state, theta, drives, params, teach, active, base_seed,
-                    *, unroll_k, block_b, interpret):
+                    *, unroll_k, block_b, interpret, telemetry=False):
     """Dispatch the fused megakernel; promotes unbatched shared state to
     B=1 (the kernel is rank-(B, ·) like the per-step Pallas wrappers)."""
     qc = params[0].quant
@@ -489,7 +611,7 @@ def _rollout_pallas(state, theta, drives, params, teach, active, base_seed,
         scales = [state.w_scale[i] if state.w_scale
                   else jnp.float32(qc.w_scale)
                   for i in range(state.num_layers)]
-    outs, w, v, tr = _fused.rollout_pallas(
+    res = _fused.rollout_pallas(
         up_t(drives), state.w, thetas,
         tuple(up(x) for x in state.v), tuple(up(x) for x in state.trace),
         spiking=tuple(p.spiking for p in params),
@@ -499,9 +621,18 @@ def _rollout_pallas(state, theta, drives, params, teach, active, base_seed,
         trace_decay=p0.trace_decay, w_clip=p0.w_clip, qcfg=qc,
         scales=scales, seed=base_seed,
         teach=None if teach is None else up_t(teach), active=active,
+        telemetry=telemetry,
         block_b=block_b, unroll_k=unroll_k, interpret=interpret)
+    outs, w, v, tr = res[:4]
     if unbatched:
         outs = outs[:, 0]
         v = tuple(x[0] for x in v)
         tr = tuple(x[0] for x in tr)
-    return dataclasses.replace(state, w=w, v=v, trace=tr), outs
+    new_state = dataclasses.replace(state, w=w, v=v, trace=tr)
+    if not telemetry:
+        return new_state, outs
+    raw = res[4]                       # finalized, already gated (B, 3)
+    tel = FleetTelemetry(spike_rate=raw[:, 0], mean_abs_dw=raw[:, 1],
+                         sat_frac=raw[:, 2],
+                         occupancy=_occupancy(active, raw.shape[0]))
+    return new_state, outs, tel

@@ -249,7 +249,8 @@ def encode(cfg: SNNConfig, obs: jax.Array, key: Optional[jax.Array], t: jax.Arra
 def timestep(cfg: SNNConfig, state: NetworkState, theta, drive: jax.Array,
              teach: Optional[jax.Array] = None,
              active: Optional[jax.Array] = None,
-             seed: Optional[jax.Array] = None
+             seed: Optional[jax.Array] = None,
+             telemetry: bool = False
              ) -> tuple[NetworkState, jax.Array]:
     """One SNN timestep: every layer routed through the PlasticEngine.
 
@@ -286,6 +287,12 @@ def timestep(cfg: SNNConfig, state: NetworkState, theta, drive: jax.Array,
     fixed-point event bus here — and the returned output is dequantized
     back to float, so callers (controller_step, classify_window, the
     scheduler) are representation-agnostic.
+
+    `telemetry` (fleet-only, static): also return a network-level
+    `FleetTelemetry` — per-layer engine telemetry averaged over the
+    layers (spike rate / saturation over all layers, |dw| over the
+    plastic ones) — as a third element.  Off (the default) leaves the
+    traced program byte-identical to the uninstrumented build.
     """
     qc = cfg.quant
     w, v, tr = list(state.w), list(state.v), list(state.trace)
@@ -305,29 +312,45 @@ def timestep(cfg: SNNConfig, state: NetworkState, theta, drive: jax.Array,
         tr0_new = jnp.where(active.astype(bool)[:, None], tr0_new, tr[0])
     tr[0] = tr0_new
     out = None
+    tels = []
     for i in range(cfg.num_layers):
         last = i == cfg.num_layers - 1
         layer = engine.LayerState(
             w=w[i], v=v[i], trace_pre=tr[i], trace_post=tr[i + 1],
             theta=theta[i] if cfg.plastic else None,
             w_scale=state.w_scale[i] if state.w_scale else None)
-        layer, out = engine.layer_step(
+        res = engine.layer_step(
             layer, x, params=cfg.engine_params(i), impl=cfg.impl,
             teach=teach if last else None, active=active,
-            seed=None if base_seed is None else Q.fold_seed(base_seed, i))
+            seed=None if base_seed is None else Q.fold_seed(base_seed, i),
+            telemetry=telemetry)
+        layer, out = res[0], res[1]
+        if telemetry:
+            tels.append(res[2])
         w[i], v[i], tr[i + 1] = layer.w, layer.v, layer.trace_post
         x = out
     if qc is not None:
         out = Q.from_fixed(out, qc)
-    return NetworkState(w=tuple(w), v=tuple(v), trace=tuple(tr),
-                        t=state.t + 1, w_scale=state.w_scale), out
+    new_state = NetworkState(w=tuple(w), v=tuple(v), trace=tuple(tr),
+                             t=state.t + 1, w_scale=state.w_scale)
+    if not telemetry:
+        return new_state, out
+    nl = float(cfg.num_layers)
+    tel = engine.FleetTelemetry(
+        spike_rate=sum(t.spike_rate for t in tels) / nl,
+        mean_abs_dw=(sum(t.mean_abs_dw for t in tels) / nl
+                     if cfg.plastic else jnp.zeros_like(tels[0].spike_rate)),
+        sat_frac=sum(t.sat_frac for t in tels) / nl,
+        occupancy=tels[0].occupancy)
+    return new_state, out, tel
 
 
 def rollout_window(cfg: SNNConfig, state: NetworkState, theta,
                    drives: jax.Array,
                    teach: Optional[jax.Array] = None,
                    active: Optional[jax.Array] = None,
-                   seed: Optional[jax.Array] = None
+                   seed: Optional[jax.Array] = None,
+                   telemetry: bool = False
                    ) -> tuple[NetworkState, jax.Array]:
     """K SNN timesteps as ONE fused engine launch (`engine.rollout`).
 
@@ -338,9 +361,11 @@ def rollout_window(cfg: SNNConfig, state: NetworkState, theta,
     a timestep loop for `rollout_window` never changes the bits.
 
     ``drives`` is time-major — (K, N_in) or (K, B, N_in) — already encoded
-    (see `encode`).  `teach`/`active`/`seed` follow the `timestep`
-    contracts; ``teach`` may be one held signal or a per-step (K, ...)
-    window (rank-dispatched by `engine.rollout`).  Like `timestep`, in
+    (see `encode`).  `teach`/`active`/`seed`/`telemetry` follow the
+    `timestep` contracts (telemetry: fleet-only, window-averaged
+    `FleetTelemetry` as a third element); ``teach`` may be one held
+    signal or a per-step (K, ...) window (rank-dispatched by
+    `engine.rollout`).  Like `timestep`, in
     quant mode `drives`/`teach` are ordinary floats quantized to the
     fixed-point event bus here and the returned outputs are dequantized,
     so callers stay representation-agnostic.
@@ -351,11 +376,15 @@ def rollout_window(cfg: SNNConfig, state: NetworkState, theta,
         teach = None if teach is None else Q.to_fixed(teach, qc)
     params = [cfg.engine_params(i) for i in range(cfg.num_layers)]
     th = [theta[i] if cfg.plastic else None for i in range(cfg.num_layers)]
-    state, outs = engine.rollout(
+    res = engine.rollout(
         state, th, drives, params=params, impl=cfg.impl, teach=teach,
-        active=active, seed=seed, unroll_k=cfg.unroll_k, block_b=cfg.block_b)
+        active=active, seed=seed, unroll_k=cfg.unroll_k, block_b=cfg.block_b,
+        telemetry=telemetry)
+    state, outs = res[0], res[1]
     if qc is not None:
         outs = Q.from_fixed(outs, qc)
+    if telemetry:
+        return state, outs, res[2]
     return state, outs
 
 

@@ -73,13 +73,25 @@ from jax.experimental import pallas as pl
 
 from repro.core.plasticity import ALPHA, BETA, GAMMA, DELTA
 from repro.kernels.plasticity import quant as Q
+from repro.obs.telemetry import sat_threshold, sat_threshold_q
 
 
 def _rollout_kernel(*refs, n_layers, k_steps, spiking, plastic, fleet,
                     batch, tau_m, v_th, v_reset, trace_decay, w_clip, qcfg,
-                    has_teach, has_active, unroll_k):
+                    has_teach, has_active, unroll_k, telemetry):
     """One grid program = the FULL K-step window for its block of streams
-    (fleet) or the whole batch (shared weights)."""
+    (fleet) or the whole batch (shared weights).
+
+    ``telemetry`` (fleet only) extends the time-loop carry with a (bb, 2)
+    [spike, saturation] accumulator and appends one finalized (bb, 3)
+    output — the per-slot MEANS of `obs.FleetTelemetry`.  The |dw| column
+    is NET weight motion |w_end - w_start| from the already-resident
+    carry, not a per-step accumulation: per-step deltas would add a
+    (bb, N, M) reduction to every iteration of the hot loop (and on the
+    fixed-point grid per-step dw is mostly sub-quantum noise anyway),
+    while net motion costs one reduction per WINDOW on registers the
+    write-back touches regardless.
+    """
     it = iter(refs)
     drives_ref = next(it)
     w_refs = [next(it) for _ in range(n_layers)]
@@ -95,6 +107,7 @@ def _rollout_kernel(*refs, n_layers, k_steps, spiking, plastic, fleet,
     w_outs = [next(it) for _ in range(n_layers)]
     v_outs = [next(it) for _ in range(n_layers)]
     tr_outs = [next(it) for _ in range(n_layers + 1)]
+    tel_out = next(it) if telemetry else None
 
     compute = jnp.float32 if qcfg is None else jnp.int32
     # Load the window's whole working set ONCE: weight tiles, membranes and
@@ -116,7 +129,11 @@ def _rollout_kernel(*refs, n_layers, k_steps, spiking, plastic, fleet,
             scales = [scale_refs[i][0, 0] for i in range(n_layers)]
             base_seed = seed_ref[0, 0]
 
-    def one_step(k, ws, vs, trs):
+    def one_step(k, carry):
+        if telemetry:
+            ws, vs, trs, tel = carry
+        else:
+            (ws, vs, trs), tel = carry, None
         ws, vs, trs = list(ws), list(vs), list(trs)
         x = drives_ref[pl.ds(k, 1)][0].astype(compute)   # (bb, N0) event bus
         # input-population Trace Update Unit (gated exactly as snn.timestep)
@@ -210,6 +227,21 @@ def _rollout_kernel(*refs, n_layers, k_steps, spiking, plastic, fleet,
                 ws[i] = w_new
             vs[i] = v_upd
             trs[i + 1] = tpost_new
+            if telemetry:
+                # Per-layer means accumulate step by step; events are
+                # already gated (zeros for vacant slots), the saturation
+                # term is gated once at finalize.
+                m_i = events.shape[-1]
+                ev_f = jnp.abs(events).astype(jnp.float32)
+                if qcfg is not None:
+                    ev_f = ev_f * (1.0 / qcfg.one)
+                    sat = jnp.abs(v_upd) >= sat_threshold_q(v_th, qcfg)
+                else:
+                    sat = jnp.abs(v_upd) >= sat_threshold(v_th)
+                tel = tel + jnp.stack(
+                    [jnp.sum(ev_f, axis=1) / m_i,
+                     jnp.sum(sat.astype(jnp.float32), axis=1) / m_i],
+                    axis=1)
             out = events if spiking[i] else v_upd
             if gate is not None and not spiking[i]:
                 # readout output IS the membrane; inactive slots must still
@@ -217,24 +249,27 @@ def _rollout_kernel(*refs, n_layers, k_steps, spiking, plastic, fleet,
                 out = jnp.where(gate, out, jnp.zeros_like(out))
             x = out
         out_ref[pl.ds(k, 1)] = x[None].astype(out_ref.dtype)
-        return tuple(ws), tuple(vs), tuple(trs)
+        new = (tuple(ws), tuple(vs), tuple(trs))
+        return new + ((tel,) if telemetry else ())
 
     carry = (ws0, vs0, trs0)
+    if telemetry:
+        carry = carry + (jnp.zeros((ws0[0].shape[0], 2), jnp.float32),)
     if unroll_k <= 0 or unroll_k >= k_steps:
         for k in range(k_steps):                      # full unroll
-            carry = one_step(k, *carry)
+            carry = one_step(k, carry)
     else:
         n_chunks = k_steps // unroll_k
 
         def chunk(c, carry):
             for j in range(unroll_k):
-                carry = one_step(c * unroll_k + j, *carry)
+                carry = one_step(c * unroll_k + j, carry)
             return carry
 
         carry = jax.lax.fori_loop(0, n_chunks, chunk, carry)
         for k in range(n_chunks * unroll_k, k_steps):  # remainder
-            carry = one_step(k, *carry)
-    ws, vs, trs = carry
+            carry = one_step(k, carry)
+    ws, vs, trs = carry[0], carry[1], carry[2]
     # single write-back: K steps of dw land in HBM as ONE weight store
     for i in range(n_layers):
         w_outs[i][...] = ws[i].astype(w_outs[i].dtype)
@@ -242,13 +277,37 @@ def _rollout_kernel(*refs, n_layers, k_steps, spiking, plastic, fleet,
     for i in range(n_layers + 1):
         tr_outs[i][...] = trs[i].astype(tr_outs[i].dtype)
 
+    if telemetry:
+        tel_acc = carry[3]
+        kl = float(k_steps * n_layers)
+        spike_rate = tel_acc[:, 0] / kl
+        sat_frac = tel_acc[:, 1] / kl
+        plast = [i for i in range(n_layers) if plastic[i]]
+        if plast:
+            dw_sum = jnp.zeros_like(spike_rate)
+            for i in plast:
+                n_i, m_i = ws[i].shape[-2], ws[i].shape[-1]
+                d = jnp.abs(ws[i] - ws0[i]).astype(jnp.float32)
+                per_slot = jnp.sum(d, axis=(1, 2))
+                if qcfg is not None:
+                    per_slot = per_slot * scales[i][:, 0]
+                dw_sum = dw_sum + per_slot / (n_i * m_i)
+            mean_dw = dw_sum / float(k_steps * len(plast))
+        else:
+            mean_dw = jnp.zeros_like(spike_rate)
+        row = jnp.stack([spike_rate, mean_dw, sat_frac], axis=1)  # (bb, 3)
+        if gate is not None:
+            row = row * gate.astype(jnp.float32)      # (bb, 1) broadcast
+        tel_out[...] = row
+
 
 def rollout_pallas(drives, ws, thetas, vs, traces, *, spiking, plastic,
                    tau_m: float = 2.0, v_th: float = 1.0,
                    v_reset: float = 0.0, trace_decay: float = 0.8,
                    w_clip: float = 4.0, qcfg=None, scales=None, seed=None,
-                   teach=None, active=None, block_b: int = 8,
-                   unroll_k: int = 1, interpret: bool = False):
+                   teach=None, active=None, telemetry: bool = False,
+                   block_b: int = 8, unroll_k: int = 1,
+                   interpret: bool = False):
     """K fused timesteps of the whole layer stack in one pallas_call.
 
     Args:
@@ -270,11 +329,17 @@ def rollout_pallas(drives, ws, thetas, vs, traces, *, spiking, plastic,
                normalized by engine.rollout).
       active:  fleet-only (B,) slot mask; inactive streams are bit-frozen
                across the whole window and emit zero events.
+      telemetry: fleet-only static flag — append a finalized (B, 3)
+               float32 output of per-slot means [spike_rate, mean |dw|
+               (net window motion), sat_frac] (`obs.telemetry` schema;
+               vacant slots all-zero).  Off keeps the program
+               byte-identical to the unistrumented one.
       block_b: fleet streams per grid program (stream-blocked execution).
       unroll_k: time-loop chunking (see module docstring); bit-pinned vs
                the oracle at 1 (and at every setting in quant mode).
 
-    Returns ``(outs, ws, vs, traces)`` with outs (K, B, M_last).
+    Returns ``(outs, ws, vs, traces)`` with outs (K, B, M_last), plus the
+    (B, 3) telemetry row when ``telemetry=True``.
     """
     k_steps, b, n0 = drives.shape
     n_layers = len(ws)
@@ -287,6 +352,9 @@ def rollout_pallas(drives, ws, thetas, vs, traces, *, spiking, plastic,
             raise ValueError(f"layer {i} marked plastic but theta is None")
     has_teach = teach is not None
     has_active = active is not None
+    if telemetry and not fleet:
+        raise ValueError("telemetry is a fleet-mode contract "
+                         "(per-slot rows need a leading stream rank)")
 
     if fleet:
         bb = min(block_b, b)
@@ -366,18 +434,23 @@ def rollout_pallas(drives, ws, thetas, vs, traces, *, spiking, plastic,
         out_specs.append(pl.BlockSpec((bb, sizes[i]), rmap))
         out_shape.append(
             jax.ShapeDtypeStruct(traces[i].shape, traces[i].dtype))
+    if telemetry:
+        out_specs.append(pl.BlockSpec((bb, 3), rmap))
+        out_shape.append(jax.ShapeDtypeStruct((b, 3), jnp.float32))
 
     kernel = functools.partial(
         _rollout_kernel, n_layers=n_layers, k_steps=k_steps,
         spiking=spiking, plastic=plastic, fleet=fleet, batch=b,
         tau_m=tau_m, v_th=v_th, v_reset=v_reset, trace_decay=trace_decay,
         w_clip=w_clip, qcfg=qcfg, has_teach=has_teach,
-        has_active=has_active, unroll_k=int(unroll_k))
+        has_active=has_active, unroll_k=int(unroll_k),
+        telemetry=telemetry)
     res = pl.pallas_call(
         kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
         out_shape=out_shape, interpret=interpret)(*operands)
     outs = res[0]
     ws_new = tuple(res[1:1 + n_layers])
     vs_new = tuple(res[1 + n_layers:1 + 2 * n_layers])
-    trs_new = tuple(res[1 + 2 * n_layers:])
-    return outs, ws_new, vs_new, trs_new
+    trs_new = tuple(res[1 + 2 * n_layers:2 + 3 * n_layers])
+    base = (outs, ws_new, vs_new, trs_new)
+    return base + ((res[2 + 3 * n_layers],) if telemetry else ())

@@ -54,6 +54,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.plasticity import ALPHA, BETA, GAMMA, DELTA
 from repro.kernels.plasticity import quant as Q
+from repro.obs.telemetry import sat_threshold, sat_threshold_q
 
 
 def _forward_engine(x, w, v_ref, tpost_ref, teach_ref, s_out, v_out,
@@ -186,7 +187,8 @@ def dual_engine_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
 
 def _fleet_kernel(x_ref, w_ref, v_ref, tpost_ref, *refs,
                   tau_m, v_th, v_reset, trace_decay, w_clip,
-                  plastic, spiking, has_teach, has_active):
+                  plastic, spiking, has_teach, has_active, telemetry,
+                  m_total, bm):
     """One program = one request stream x one postsynaptic tile.
 
     Per-sample semantics throughout: the Hebbian term is the outer product
@@ -194,12 +196,20 @@ def _fleet_kernel(x_ref, w_ref, v_ref, tpost_ref, *refs,
     tile belongs to this stream alone.  With ``has_active`` the stream's
     scalar slot flag gates every state write (weights, membrane, traces
     frozen; events zeroed) so vacated fleet slots are true no-ops.
+
+    ``telemetry`` appends a per-tile (1, 1, 3) partial-sums output —
+    [sum |events|, sum |dw|, saturated-membrane count], gated like the
+    state writes — which the wrapper reduces over tiles to the raw (B, 3)
+    row of `obs.telemetry`.  Computed from the already-written output
+    tiles while they are still VMEM-resident: the telemetry variant adds
+    three register reductions per program, never a second pass over HBM.
     """
     rest = list(refs)
     theta_ref = rest.pop(0) if plastic else None
     tpre_ref = rest.pop(0) if plastic else None
     teach_ref = rest.pop(0) if has_teach else None
     active_ref = rest.pop(0) if has_active else None
+    tel_out = rest.pop() if telemetry else None
     s_out, v_out, tpost_out, w_out = rest
     gate = None if active_ref is None else active_ref[0, 0] > 0
 
@@ -223,7 +233,24 @@ def _fleet_kernel(x_ref, w_ref, v_ref, tpost_ref, *refs,
             w_new = jnp.where(gate, w_new, w)     # dw gated: slot frozen
         w_out[0] = w_new.astype(w_out.dtype)
     else:
+        w_new = w
         w_out[0] = w.astype(w_out.dtype)
+
+    if telemetry:
+        # Mask columns past M: a ragged final tile's padding lanes hold
+        # whatever the pipeline faulted in (NaN under interpret) and must
+        # not reach the reductions.
+        col_ok = (jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1)
+                  + pl.program_id(0) * bm) < m_total
+        ev = s_out[...].astype(jnp.float32)       # already gated (zeros)
+        vv = v_out[...].astype(jnp.float32)       # frozen old v if inactive
+        spike_sum = jnp.sum(jnp.where(col_ok, jnp.abs(ev), 0.0))
+        dw_sum = jnp.sum(jnp.where(col_ok, jnp.abs(w_new - w), 0.0))
+        sat_cnt = jnp.sum(jnp.where(
+            col_ok & (jnp.abs(vv) >= sat_threshold(v_th)), 1.0, 0.0))
+        g = jnp.float32(1.0) if gate is None else gate.astype(jnp.float32)
+        tel_out[...] = (jnp.stack([spike_sum, dw_sum, sat_cnt])
+                        * g).reshape(1, 1, 3)
 
 
 def dual_engine_fleet_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
@@ -232,11 +259,19 @@ def dual_engine_fleet_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
                                   trace_decay: float = 0.8,
                                   w_clip: float = 4.0, plastic: bool = True,
                                   spiking: bool = True, teach=None,
-                                  active=None, block_m: int = 128,
+                                  active=None, telemetry: bool = False,
+                                  block_m: int = 128,
                                   interpret: bool = False):
     """Fleet pallas-call wrapper.  Shapes as in ref.dual_engine_fleet_step:
     x (B,N), w (B,N,M) per-request, theta (4,N,M) shared, v/traces (B,·),
-    active (B,) slot mask (inactive slots frozen bit-exactly, events zero)."""
+    active (B,) slot mask (inactive slots frozen bit-exactly, events zero).
+
+    ``telemetry`` appends a raw (B, 3) float32 per-slot sums output (the
+    `obs.telemetry` schema): the kernel emits per-tile partials into a
+    (B, tiles, 3) buffer — each grid program owns its own block, so no
+    cross-program accumulation is assumed — and the wrapper folds the tile
+    axis.  A static flag: off-trace is byte-identical to the 4-output
+    program."""
     b, n = x.shape
     b2, n2, m = w.shape
     assert (b, n) == (b2, n2), (x.shape, w.shape)
@@ -259,7 +294,8 @@ def dual_engine_fleet_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
     kernel = functools.partial(
         _fleet_kernel, tau_m=tau_m, v_th=v_th, v_reset=v_reset,
         trace_decay=trace_decay, w_clip=w_clip, plastic=plastic,
-        spiking=spiking, has_teach=has_teach, has_active=has_active)
+        spiking=spiking, has_teach=has_teach, has_active=has_active,
+        telemetry=telemetry, m_total=m, bm=bm)
 
     in_specs = [
         pl.BlockSpec((1, n), lambda j, i: (i, 0)),         # this stream's x
@@ -284,24 +320,36 @@ def dual_engine_fleet_step_pallas(x, w, theta, v, trace_pre, trace_post, *,
         in_specs.append(pl.BlockSpec((1, 1), lambda j, i: (i, 0)))
         operands.append(active)
 
-    return pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # events
+        pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # v out
+        pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # post trace
+        pl.BlockSpec((1, n, bm), lambda j, i: (i, 0, j)),  # w out
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, m), x.dtype),
+        jax.ShapeDtypeStruct((b, m), v.dtype),
+        jax.ShapeDtypeStruct((b, m), trace_post.dtype),
+        jax.ShapeDtypeStruct((b, n, m), w.dtype),
+    ]
+    if telemetry:
+        # Per-tile partial sums; each program writes its own (i, j) block.
+        out_specs.append(pl.BlockSpec((1, 1, 3), lambda j, i: (i, j, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((b, pl.cdiv(m, bm), 3), jnp.float32))
+
+    res = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # events
-            pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # v out
-            pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # post trace
-            pl.BlockSpec((1, n, bm), lambda j, i: (i, 0, j)),  # w out
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, m), x.dtype),
-            jax.ShapeDtypeStruct((b, m), v.dtype),
-            jax.ShapeDtypeStruct((b, m), trace_post.dtype),
-            jax.ShapeDtypeStruct((b, n, m), w.dtype),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(*operands)
+    if not telemetry:
+        return res
+    # Fold the tile axis of the partials -> raw (B, 3) telemetry row.
+    return tuple(res[:4]) + (res[4].sum(axis=1),)
 
 
 # ---- fixed-point (quantized) kernels ---------------------------------------
@@ -444,7 +492,7 @@ def dual_engine_step_q_pallas(x, w, scale, theta, v, trace_pre, trace_post,
 
 def _fleet_kernel_q(x_ref, w_ref, scale_ref, v_ref, tpost_ref, seed_ref,
                     *refs, qcfg, v_th, v_reset, w_clip, plastic, spiking,
-                    has_teach, has_active, m_total, bm):
+                    has_teach, has_active, m_total, bm, telemetry):
     """Quantized fleet program: one request stream x one postsynaptic tile.
 
     The stream's int8 weight tile is promoted to int32 in registers (the
@@ -457,6 +505,7 @@ def _fleet_kernel_q(x_ref, w_ref, scale_ref, v_ref, tpost_ref, seed_ref,
     tpre_ref = rest.pop(0) if plastic else None
     teach_ref = rest.pop(0) if has_teach else None
     active_ref = rest.pop(0) if has_active else None
+    tel_out = rest.pop() if telemetry else None
     s_out, v_out, tpost_out, w_out = rest
     gate = None if active_ref is None else active_ref[0, 0] > 0
     scale = scale_ref[0, 0]
@@ -483,7 +532,28 @@ def _fleet_kernel_q(x_ref, w_ref, scale_ref, v_ref, tpost_ref, seed_ref,
             w_new = jnp.where(gate, w_new, w_i32)   # dw gated: slot frozen
         w_out[0] = w_new.astype(w_out.dtype)
     else:
+        w_new = w_i32
         w_out[0] = w_i32.astype(w_out.dtype)
+
+    if telemetry:
+        # Raw sums in the SAME units as the float datapath: 0/`one` events
+        # divided back to event units, |dw| in int8 grid steps x scale.
+        # Ragged-final-tile padding columns are masked out of every
+        # reduction (their lanes hold pipeline garbage past M).
+        col_ok = (jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1)
+                  + pl.program_id(0) * bm) < m_total
+        ev = s_out[...].astype(jnp.float32)         # already gated (zeros)
+        vv = v_out[...].astype(jnp.int32)           # frozen old v if inactive
+        spike_sum = jnp.sum(jnp.where(col_ok, jnp.abs(ev), 0.0)) \
+            * (1.0 / qcfg.one)
+        dsteps = jnp.abs(w_new - w_i32).astype(jnp.float32)
+        dw_sum = jnp.sum(jnp.where(col_ok, dsteps, 0.0)) * scale
+        sat_cnt = jnp.sum(jnp.where(
+            col_ok & (jnp.abs(vv) >= sat_threshold_q(v_th, qcfg)),
+            1.0, 0.0))
+        g = jnp.float32(1.0) if gate is None else gate.astype(jnp.float32)
+        tel_out[...] = (jnp.stack([spike_sum, dw_sum, sat_cnt])
+                        * g).reshape(1, 1, 3)
 
 
 def dual_engine_fleet_step_q_pallas(x, w, scale, theta, v, trace_pre,
@@ -491,12 +561,15 @@ def dual_engine_fleet_step_q_pallas(x, w, scale, theta, v, trace_pre,
                                     v_reset: float = 0.0, w_clip: float = 4.0,
                                     plastic: bool = True, spiking: bool = True,
                                     teach=None, seed=None, active=None,
+                                    telemetry: bool = False,
                                     block_m: int = 128,
                                     interpret: bool = False):
     """Quantized fleet pallas-call.  Shapes as ref.dual_engine_fleet_step_q:
     x (B,N) int32, w (B,N,M) int8 (stays int8 in HBM), scale (B,) f32 per
     slot, theta (4,N,M) f32 shared, v/traces (B,.) int32, seed (B,) int32
-    per-session step counters, active (B,) slot mask."""
+    per-session step counters, active (B,) slot mask.  ``telemetry``
+    appends the raw (B, 3) float32 per-slot sums (obs.telemetry schema,
+    float units) exactly like the float fleet wrapper."""
     b, n = x.shape
     b2, n2, m = w.shape
     assert (b, n) == (b2, n2), (x.shape, w.shape)
@@ -522,7 +595,8 @@ def dual_engine_fleet_step_q_pallas(x, w, scale, theta, v, trace_pre,
     kernel = functools.partial(
         _fleet_kernel_q, qcfg=qcfg, v_th=v_th, v_reset=v_reset,
         w_clip=w_clip, plastic=plastic, spiking=spiking,
-        has_teach=has_teach, has_active=has_active, m_total=m, bm=bm)
+        has_teach=has_teach, has_active=has_active, m_total=m, bm=bm,
+        telemetry=telemetry)
 
     in_specs = [
         pl.BlockSpec((1, n), lambda j, i: (i, 0)),         # this stream's x
@@ -546,21 +620,31 @@ def dual_engine_fleet_step_q_pallas(x, w, scale, theta, v, trace_pre,
         in_specs.append(pl.BlockSpec((1, 1), lambda j, i: (i, 0)))
         operands.append(active)
 
-    return pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # events
+        pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # v out
+        pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # post trace
+        pl.BlockSpec((1, n, bm), lambda j, i: (i, 0, j)),  # w out (int8)
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, m), jnp.int32),
+        jax.ShapeDtypeStruct((b, m), jnp.int32),
+        jax.ShapeDtypeStruct((b, m), jnp.int32),
+        jax.ShapeDtypeStruct((b, n, m), jnp.int8),
+    ]
+    if telemetry:
+        out_specs.append(pl.BlockSpec((1, 1, 3), lambda j, i: (i, j, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((b, pl.cdiv(m, bm), 3), jnp.float32))
+
+    res = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # events
-            pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # v out
-            pl.BlockSpec((1, bm), lambda j, i: (i, j)),        # post trace
-            pl.BlockSpec((1, n, bm), lambda j, i: (i, 0, j)),  # w out (int8)
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, m), jnp.int32),
-            jax.ShapeDtypeStruct((b, m), jnp.int32),
-            jax.ShapeDtypeStruct((b, m), jnp.int32),
-            jax.ShapeDtypeStruct((b, n, m), jnp.int8),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(*operands)
+    if not telemetry:
+        return res
+    return tuple(res[:4]) + (res[4].sum(axis=1),)

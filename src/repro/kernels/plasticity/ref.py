@@ -37,6 +37,40 @@ import jax.numpy as jnp
 
 from repro.core.plasticity import ALPHA, BETA, GAMMA, DELTA
 from repro.kernels.plasticity import quant as Q
+from repro.obs.telemetry import sat_threshold, sat_threshold_q
+
+
+def _fleet_telemetry_raw(events, v_out, w_old, w_new, active, *,
+                         v_th, scale=None, qcfg=None):
+    """Raw per-slot telemetry sums ``(B, 3) float32`` (obs.telemetry schema).
+
+    Computed from the already-gated fleet outputs: col 0 = sum |events|
+    (event units — the fixed-point 0/``one`` grid is divided out), col 1 =
+    sum |dw| in float weight units (int8 grid steps x per-slot scale on the
+    quantized path), col 2 = count of membranes at >= SAT_FRACTION of
+    threshold.  The whole row is multiplied by the active mask: events and
+    dw are already zero for vacant slots (events gated, w frozen), but the
+    frozen membrane of a vacant slot may well sit near threshold — without
+    the gate col 2 would leak stale state.
+    """
+    if qcfg is not None:
+        spike_sum = jnp.sum(jnp.abs(events), axis=1).astype(jnp.float32) \
+            / qcfg.one
+        dsteps = jnp.abs(w_new.astype(jnp.int32) - w_old.astype(jnp.int32))
+        abs_dw = jnp.sum(dsteps, axis=(1, 2)).astype(jnp.float32) \
+            * jnp.asarray(scale, jnp.float32).reshape(-1)
+        sat = jnp.abs(v_out) >= sat_threshold_q(v_th, qcfg)
+    else:
+        spike_sum = jnp.sum(jnp.abs(events), axis=1).astype(jnp.float32)
+        abs_dw = jnp.sum(
+            jnp.abs(w_new.astype(jnp.float32) - w_old.astype(jnp.float32)),
+            axis=(1, 2))
+        sat = jnp.abs(v_out) >= sat_threshold(v_th)
+    sat_cnt = jnp.sum(sat, axis=1).astype(jnp.float32)
+    raw = jnp.stack([spike_sum, abs_dw, sat_cnt], axis=1)
+    if active is not None:
+        raw = raw * active.reshape(-1, 1).astype(jnp.float32)
+    return raw
 
 
 def dual_engine_step(x, w, theta, v, trace_pre, trace_post, *,
@@ -88,7 +122,8 @@ def dual_engine_fleet_step(x, w, theta, v, trace_pre, trace_post, *,
                            tau_m: float = 2.0, v_th: float = 1.0,
                            v_reset: float = 0.0, trace_decay: float = 0.8,
                            w_clip: float = 4.0, plastic: bool = True,
-                           spiking: bool = True, teach=None, active=None):
+                           spiking: bool = True, teach=None, active=None,
+                           telemetry: bool = False):
     """Fleet oracle: per-request weights, per-sample dw, shared rule.
 
     Shapes: x (B,N), w (B,N,M), theta (4,N,M)|None, v (B,M),
@@ -127,19 +162,24 @@ def dual_engine_fleet_step(x, w, theta, v, trace_pre, trace_post, *,
             lambda xb, wb, vb, tpb, tqb, tb:
                 step(xb, wb, theta, vb, tpb, tqb, teach=tb)
         )(x, w, v, trace_pre, trace_post, teach)
-    if active is None:
+    if active is not None:
+        # Slot gating: select the OLD value wholesale for inactive streams
+        # (the same computed-then-selected structure the Pallas kernel
+        # uses), so the frozen state is bit-identical, not
+        # recomputed-and-close.
+        events, v_out, tp_new, w_new = out
+        a = active.reshape(-1).astype(bool)
+        assert a.shape[0] == x.shape[0], (active.shape, x.shape)
+        events = jnp.where(a[:, None], events, jnp.zeros_like(events))
+        v_out = jnp.where(a[:, None], v_out, v.astype(v_out.dtype))
+        tp_new = jnp.where(a[:, None], tp_new,
+                           trace_post.astype(tp_new.dtype))
+        w_new = jnp.where(a[:, None, None], w_new, w.astype(w_new.dtype))
+        out = (events, v_out, tp_new, w_new)
+    if not telemetry:
         return out
-    # Slot gating: select the OLD value wholesale for inactive streams (the
-    # same computed-then-selected structure the Pallas kernel uses), so the
-    # frozen state is bit-identical, not recomputed-and-close.
-    events, v_out, tp_new, w_new = out
-    a = active.reshape(-1).astype(bool)
-    assert a.shape[0] == x.shape[0], (active.shape, x.shape)
-    events = jnp.where(a[:, None], events, jnp.zeros_like(events))
-    v_out = jnp.where(a[:, None], v_out, v.astype(v_out.dtype))
-    tp_new = jnp.where(a[:, None], tp_new, trace_post.astype(tp_new.dtype))
-    w_new = jnp.where(a[:, None, None], w_new, w.astype(w_new.dtype))
-    return events, v_out, tp_new, w_new
+    tel = _fleet_telemetry_raw(out[0], out[1], w, out[3], active, v_th=v_th)
+    return out + (tel,)
 
 
 # ---- fixed-point (quantized) oracle ----------------------------------------
@@ -196,7 +236,8 @@ def dual_engine_fleet_step_q(x, w, scale, theta, v, trace_pre, trace_post, *,
                              qcfg: Q.QuantConfig, v_th: float = 1.0,
                              v_reset: float = 0.0, w_clip: float = 4.0,
                              plastic: bool = True, spiking: bool = True,
-                             teach=None, seed=None, active=None):
+                             teach=None, seed=None, active=None,
+                             telemetry: bool = False):
     """Fixed-point fleet oracle: int8 per-request weights, per-slot scale.
 
     Shapes: x (B,N) int32, w (B,N,M) int8, scale (B,) f32, theta (4,N,M)
@@ -233,13 +274,18 @@ def dual_engine_fleet_step_q(x, w, scale, theta, v, trace_pre, trace_post, *,
             lambda xb, wb, sb, vb, tpb, tqb, sd, tb:
                 step(xb, wb, sb, theta, vb, tpb, tqb, seed=sd, teach=tb)
         )(x, w, scale, v, trace_pre, trace_post, seed, teach)
-    if active is None:
+    if active is not None:
+        events, v_out, tp_new, w_new = out
+        a = active.reshape(-1).astype(bool)
+        assert a.shape[0] == b, (active.shape, x.shape)
+        events = jnp.where(a[:, None], events, jnp.zeros_like(events))
+        v_out = jnp.where(a[:, None], v_out, v.astype(v_out.dtype))
+        tp_new = jnp.where(a[:, None], tp_new,
+                           trace_post.astype(tp_new.dtype))
+        w_new = jnp.where(a[:, None, None], w_new, w)
+        out = (events, v_out, tp_new, w_new)
+    if not telemetry:
         return out
-    events, v_out, tp_new, w_new = out
-    a = active.reshape(-1).astype(bool)
-    assert a.shape[0] == b, (active.shape, x.shape)
-    events = jnp.where(a[:, None], events, jnp.zeros_like(events))
-    v_out = jnp.where(a[:, None], v_out, v.astype(v_out.dtype))
-    tp_new = jnp.where(a[:, None], tp_new, trace_post.astype(tp_new.dtype))
-    w_new = jnp.where(a[:, None, None], w_new, w)
-    return events, v_out, tp_new, w_new
+    tel = _fleet_telemetry_raw(out[0], out[1], w, out[3], active,
+                               v_th=v_th, scale=scale, qcfg=qcfg)
+    return out + (tel,)

@@ -35,11 +35,15 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_local_mesh
 from repro.launch.steps import make_decode_step, make_prefill
 from repro.models import factory
+from repro.obs import MetricsRegistry, phase
+from repro.obs import watchdog as _watchdog
 from repro.serving import AdapterPool, SessionStore
 
 
 def generate(cfg, params, prompts, max_len: int, gen: int,
-             temperature: float = 0.0, seed: int = 0, adapters=None):
+             temperature: float = 0.0, seed: int = 0, adapters=None,
+             registry=None, watch=None, metrics_json=None,
+             metrics_interval: int = 0):
     """Greedy/temperature sampling loop.  prompts (B, S) int32.
 
     Returns (tokens (B, gen), per-step latencies, final cache).  The decode
@@ -52,11 +56,26 @@ def generate(cfg, params, prompts, max_len: int, gen: int,
     prefill cache's adapter entry, so each stream resumes its user's
     learned fast weights instead of starting from zero; after the loop the
     learned state flows back into the pool (the caller evicts to persist).
+
+    `registry`: optional `obs.MetricsRegistry` — per-step decode latencies
+    go into the ``serve_decode_seconds`` histogram and throughput into the
+    ``serve_tokens_per_s`` gauge.  `watch`: optional `RecompileWatchdog`,
+    ARMED only after loop iteration 0 (the decode step is AOT-compiled
+    up-front, but the sampling helpers — argmax/categorical/fold_in — are
+    tiny jitted programs that legitimately compile on first use inside the
+    loop); from iteration 1 on, any backend compile is a violation.
+    `metrics_json` + ``metrics_interval > 0``: dump a registry snapshot to
+    that path every `metrics_interval` decode steps (and the caller dumps
+    once more at exit).
     """
     prefill = jax.jit(make_prefill(cfg, max_len))
     decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
 
-    logits, cache = prefill(params, prompts)
+    m_decode = (registry.histogram("serve_decode_seconds",
+                                   "per-token decode step latency")
+                if registry is not None else None)
+    with phase("serve.prefill"):
+        logits, cache = prefill(params, prompts)
     if adapters is not None:
         # the pool IS the adapter state: one scheduler-admitted row per
         # batch stream (restored or fresh), installed wholesale — no
@@ -69,14 +88,33 @@ def generate(cfg, params, prompts, max_len: int, gen: int,
     # cache buffers or advancing the generation state; the loop calls the
     # compiled executable, so no iteration pays trace+compile.
     decode_c = decode.lower(params, cache, tok[:, None]).compile()
-    for i in range(gen):
-        outs.append(tok)
-        t0 = time.perf_counter()
-        logits, cache = decode_c(params, cache, tok[:, None])
-        logits.block_until_ready()
-        lats.append(time.perf_counter() - t0)
-        key = jax.random.fold_in(key, i)
-        tok = _sample(logits, key, temperature)
+    armed = False
+    try:
+        for i in range(gen):
+            if i == 1 and watch is not None:
+                watch.arm()
+                armed = True
+            outs.append(tok)
+            t0 = time.perf_counter()
+            with phase("serve.decode_step"):
+                logits, cache = decode_c(params, cache, tok[:, None])
+                logits.block_until_ready()
+            dt = time.perf_counter() - t0
+            lats.append(dt)
+            if m_decode is not None:
+                m_decode.observe(dt)
+            key = jax.random.fold_in(key, i)
+            tok = _sample(logits, key, temperature)
+            if (metrics_json and metrics_interval > 0 and registry is not None
+                    and (i + 1) % metrics_interval == 0):
+                registry.to_json(metrics_json)
+    finally:
+        if armed:
+            watch.disarm()
+    if registry is not None and lats:
+        registry.gauge("serve_tokens_per_s",
+                       "steady-state decode throughput (whole batch)"
+                       ).set(prompts.shape[0] * len(lats) / sum(lats))
     if adapters is not None:
         # hand the learned rows back (the loop's donation consumed the
         # buffers the pool was holding)
@@ -118,6 +156,12 @@ def main(argv=None):
                          "(default user0..user{B-1}); needs --session-dir")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-json", default=None,
+                    help="write a metrics-registry JSON snapshot here "
+                         "(final, plus periodic with --metrics-interval)")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    help="with --metrics-json: also dump every N decode "
+                         "steps (0 = final snapshot only)")
     args = ap.parse_args(argv)
     if (args.session_dir or args.users) and not args.plastic:
         ap.error("--session-dir/--users require --plastic (sessions are "
@@ -152,9 +196,13 @@ def main(argv=None):
         else:
             prompts_in = prompts
 
+        registry = MetricsRegistry()
+        watch = _watchdog.install(registry)
+        watch.reset()
         store = users = pool = None
         if args.session_dir is not None:
-            store = SessionStore(root=args.session_dir, capacity=args.batch)
+            store = SessionStore(root=args.session_dir, capacity=args.batch,
+                                 registry=registry)
             users = (args.users.split(",") if args.users
                      else [f"user{b}" for b in range(args.batch)])
             if len(users) != args.batch:
@@ -167,13 +215,17 @@ def main(argv=None):
             # scheduler-admit path: user b lands in pool slot b (admission
             # fills free slots in order), restoring persisted fast weights
             # through the SessionStore's validated checkout
-            pool = AdapterPool(cfg, slots=args.batch, store=store)
+            pool = AdapterPool(cfg, slots=args.batch, store=store,
+                               registry=registry)
             for u in users:
                 pool.admit(u)
 
         toks, lats, cache = generate(cfg, params, prompts_in, max_len,
                                      args.gen, args.temperature, args.seed,
-                                     adapters=pool)
+                                     adapters=pool, registry=registry,
+                                     watch=watch,
+                                     metrics_json=args.metrics_json,
+                                     metrics_interval=args.metrics_interval)
         tokens_learned = None
         if pool is not None:
             tokens_learned = [int(pool._steps[pool.user_slot[u]])
@@ -187,12 +239,18 @@ def main(argv=None):
         "decode_ms_p50": sorted(lats)[len(lats) // 2] * 1e3,
         "decode_ms_mean": sum(lats) / len(lats) * 1e3,
         "tokens_per_s": args.batch * len(lats) / sum(lats),
+        "recompiles_after_warmup": watch.violations,
     }
+    if watch.violations:
+        out["recompile_signatures"] = watch.violation_signatures
     if store is not None:
         out["sessions"] = {
             "users": users, "resumed": store.restores,
             "created": store.creates,
             "tokens_learned": tokens_learned}
+    if args.metrics_json:
+        registry.to_json(args.metrics_json)
+        out["metrics_json"] = args.metrics_json
     print(json.dumps(out, indent=1))
     return 0
 

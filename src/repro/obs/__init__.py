@@ -1,0 +1,38 @@
+"""Observability: in-band fleet telemetry, host metrics, recompile watchdog.
+
+Three layers, matching how FireFly-P itself is measured (the paper's 8 us /
+0.713 W headline numbers come from instrumenting the RUNNING accelerator,
+not from offline benchmarks):
+
+  * `obs.telemetry`  — DEVICE-side per-slot fleet telemetry (spike rate,
+    mean |dw|, membrane saturation, occupancy) computed INSIDE the fused
+    dual-engine programs as extra reduced outputs.  Telemetry is a static
+    trace variant (a `telemetry=` flag on `engine.layer_step` /
+    `engine.rollout` and the schedulers), never a runtime branch: the
+    telemetry-off program is byte-identical to the uninstrumented one and
+    telemetry-on adds exactly one stable executable per entry point.
+  * `obs.metrics`    — HOST-side counters/gauges/histograms with
+    Prometheus-text + JSON snapshot exporters; the serving stack
+    (SessionStore, SessionPool, launch/serve.py, scenarios/harness) records
+    admit/evict/checkout latencies, warm-cache hit rate, occupancy, and
+    tokens/s into per-component registries.
+  * `obs.watchdog`   — the RECOMPILE WATCHDOG: a `jax.monitoring` compile
+    listener that turns the benchmarks' "zero recompiles after warmup"
+    assertion into a runtime monitor (warn + counter + offending program
+    name on any unexpected cache miss while armed).
+
+`benchmarks/obs_overhead.py` gates the cost: telemetry-on fleet stepping
+within 5% of telemetry-off at B=256, exactly one extra program per used
+entry point, watchdog silent under churn.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               REGISTRY, phase)
+from repro.obs.telemetry import (SAT_FRACTION, FleetTelemetry,
+                                 adapter_telemetry, record_fleet_telemetry)
+from repro.obs.watchdog import RecompileWatchdog, watchdog
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY", "phase",
+    "SAT_FRACTION", "FleetTelemetry", "adapter_telemetry",
+    "record_fleet_telemetry", "RecompileWatchdog", "watchdog",
+]

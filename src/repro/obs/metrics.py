@@ -1,0 +1,257 @@
+"""Host-side metrics: counters/gauges/histograms + Prometheus/JSON export.
+
+A deliberately small, dependency-free registry (the container bakes no
+prometheus_client) with the exposition semantics monitoring stacks expect:
+
+  * `Counter`   — monotonically increasing total (``_total`` suffix by
+    convention): admissions, evictions, warm-cache hits, restores.
+  * `Gauge`     — point-in-time value: pool occupancy, tokens/s, the fleet
+    telemetry means.
+  * `Histogram` — cumulative le-buckets + sum/count (Prometheus histogram
+    exposition) plus a bounded reservoir of raw observations so the
+    benchmarks can report true p50s: admit/evict/checkout/restore/decode
+    latencies.
+
+Every serving component owns a `MetricsRegistry` (SessionStore, each
+SessionPool, launch/serve.py, the scenario harness) rather than mutating a
+process-global singleton, so two pools in one process never alias counters;
+`REGISTRY` exists as the default for one-off scripts.  Exporters:
+`prometheus_text()` (text exposition format) and `snapshot()` (JSON-able
+dict — the schema `benchmarks/serving_churn.py` reconciles against its own
+event log and the CI obs-smoke job uploads as an artifact).
+
+`phase(name)` annotates a host-side serving phase (admit, swap-in/out, pool
+step, decode window) with `jax.profiler.TraceAnnotation`, so device
+profiles attribute time to scheduling events; it degrades to a no-op
+timer-only context when the profiler is unavailable.
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+import time
+from contextlib import contextmanager
+from typing import Dict, Iterable, Optional
+
+# Default le-buckets: 100 us .. ~100 s in half-decade steps — spans warm
+# admissions (sub-ms), disk restores (ms..tens of ms), and decode windows.
+DEFAULT_BUCKETS = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1,
+                   1.0, 3.0, 10.0, 30.0, 100.0)
+_RESERVOIR = 4096      # raw observations kept per histogram (for percentiles)
+
+
+class Counter:
+    """Monotonic counter (increase-only)."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name, self.help = name, help
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name}: cannot decrease "
+                             f"(inc({amount}))")
+        with self._lock:
+            self._value += amount
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def snapshot(self) -> dict:
+        return {"type": self.kind, "value": self._value}
+
+
+class Gauge:
+    """Point-in-time value (set/add)."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name, self.help = name, help
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self._value = float(value)
+
+    def add(self, amount: float) -> None:
+        with self._lock:
+            self._value += amount
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def snapshot(self) -> dict:
+        return {"type": self.kind, "value": self._value}
+
+
+class Histogram:
+    """Cumulative-bucket histogram + bounded raw reservoir for percentiles."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: Iterable[float] = DEFAULT_BUCKETS):
+        self.name, self.help = name, help
+        self.buckets = tuple(sorted(buckets))
+        self._counts = [0] * (len(self.buckets) + 1)   # last = +Inf
+        self._sum = 0.0
+        self._count = 0
+        self._raw: list = []
+        self._lock = threading.Lock()
+
+    def observe(self, value: float) -> None:
+        value = float(value)
+        with self._lock:
+            i = 0
+            while i < len(self.buckets) and value > self.buckets[i]:
+                i += 1
+            self._counts[i] += 1
+            self._sum += value
+            self._count += 1
+            if len(self._raw) < _RESERVOIR:
+                self._raw.append(value)
+
+    @contextmanager
+    def time(self):
+        """Observe the wall-clock duration of the with-block (seconds)."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.observe(time.perf_counter() - t0)
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    @property
+    def mean(self) -> float:
+        return self._sum / self._count if self._count else 0.0
+
+    def percentile(self, p: float) -> float:
+        """p in [0, 100] from the raw reservoir (exact while it fits)."""
+        with self._lock:
+            if not self._raw:
+                return 0.0
+            s = sorted(self._raw)
+            k = min(len(s) - 1, max(0, int(math.ceil(p / 100.0 * len(s))) - 1))
+            return s[k]
+
+    def snapshot(self) -> dict:
+        cum, out = 0, {}
+        for le, c in zip(self.buckets, self._counts):
+            cum += c
+            out[f"{le:g}"] = cum
+        return {"type": self.kind, "count": self._count, "sum": self._sum,
+                "mean": self.mean, "p50": self.percentile(50),
+                "p99": self.percentile(99), "buckets": out}
+
+
+class MetricsRegistry:
+    """Get-or-create registry of named metrics with stable export schema."""
+
+    def __init__(self, namespace: str = ""):
+        self.namespace = namespace
+        self._metrics: Dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, cls, name: str, help: str, **kw):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, help, **kw)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as {m.kind}, "
+                    f"requested {cls.kind}")
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Iterable[float] = DEFAULT_BUCKETS) -> Histogram:
+        return self._get(Histogram, name, help, buckets=buckets)
+
+    def timer(self, name: str, help: str = ""):
+        """Context manager timing the with-block into histogram `name`."""
+        return self.histogram(name, help).time()
+
+    # ---- export ----------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """JSON-able {metric name -> typed snapshot} (stable schema)."""
+        with self._lock:
+            metrics = list(self._metrics.values())
+        return {m.name: m.snapshot() for m in metrics}
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=1, sort_keys=True)
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition format (histograms as le-buckets)."""
+        with self._lock:
+            metrics = list(self._metrics.values())
+        lines = []
+        for m in sorted(metrics, key=lambda m: m.name):
+            if m.help:
+                lines.append(f"# HELP {m.name} {m.help}")
+            lines.append(f"# TYPE {m.name} {m.kind}")
+            if isinstance(m, Histogram):
+                cum = 0
+                for le, c in zip(m.buckets, m._counts):
+                    cum += c
+                    lines.append(f'{m.name}_bucket{{le="{le:g}"}} {cum}')
+                lines.append(f'{m.name}_bucket{{le="+Inf"}} {m.count}')
+                lines.append(f"{m.name}_sum {m.sum:g}")
+                lines.append(f"{m.name}_count {m.count}")
+            else:
+                lines.append(f"{m.name} {m.value:g}")
+        return "\n".join(lines) + "\n"
+
+
+REGISTRY = MetricsRegistry()     # default registry for one-off scripts
+
+
+@contextmanager
+def phase(name: str, histogram: Optional[Histogram] = None):
+    """Annotate a serving phase for profilers (+ optional latency record).
+
+    Wraps the block in `jax.profiler.TraceAnnotation(name)` so device
+    profiles attribute time to scheduling events (admit, swap_in, swap_out,
+    pool_step, decode_window); if a `Histogram` is given the block's
+    wall-clock duration is observed into it.  Profiler-free environments
+    degrade to the timer alone.
+    """
+    t0 = time.perf_counter()
+    try:
+        from jax.profiler import TraceAnnotation
+        ctx = TraceAnnotation(name)
+    except Exception:           # pragma: no cover - profiler unavailable
+        ctx = None
+    try:
+        if ctx is not None:
+            with ctx:
+                yield
+        else:                   # pragma: no cover
+            yield
+    finally:
+        if histogram is not None:
+            histogram.observe(time.perf_counter() - t0)

@@ -1,0 +1,181 @@
+"""Device-side fleet telemetry: the per-slot health vector and its schema.
+
+The fused dual-engine programs (ref / Pallas, float / fixed-point, per-step
+/ time-fused rollout) optionally emit one extra reduced output per slot —
+raw per-slot sums ``(B, 3) float32``:
+
+    col 0   spike_sum   sum of |events| over the layer, in EVENT units
+                        (spikes are 1.0; the fixed-point datapath's
+                        0/``one`` events are pre-divided by ``one`` so both
+                        datapaths report in the same units)
+    col 1   abs_dw_sum  sum of |dw| over the (N, M) synapse block, in
+                        FLOAT weight units (int8 grid steps x w_scale on
+                        the quantized path)
+    col 2   sat_cnt     number of postsynaptic membranes with
+                        |v| >= SAT_FRACTION * v_th after the update — the
+                        fixed-point clip diagnostic (a membrane parked
+                        near threshold saturates the int32 grid first)
+
+Vacant slots (``active == 0``) report exact zeros: the raw row is gated by
+the same mask that bit-freezes the slot's state, so telemetry can never
+leak a frozen slot's stale membrane or trace values.
+
+`engine.layer_step` / `engine.rollout` normalize the raw sums into a
+`FleetTelemetry` — per-slot MEANS that are comparable across layer widths,
+window lengths, and datapaths.  Telemetry is a static trace variant: the
+``telemetry=`` flag is a Python bool (part of the jit static signature),
+never a traced value, so the off-path program is byte-identical to the
+uninstrumented one and the on-path adds exactly one stable executable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# A membrane counts as "saturated" when |v| reaches this fraction of the
+# firing threshold after the update.  0.9 flags the pile-up region where
+# the fixed-point datapath's int32 membrane grid loses headroom, while
+# staying below the reset discontinuity at v_th itself.
+SAT_FRACTION = 0.9
+
+
+def sat_threshold(v_th: float) -> float:
+    """Float-datapath saturation threshold on |v|."""
+    return SAT_FRACTION * float(v_th)
+
+
+def sat_threshold_q(v_th: float, qcfg) -> int:
+    """Fixed-point saturation threshold on the int32 membrane |v_fx|.
+
+    Rounded once on the host so both backends compare against the same
+    integer constant (mirrors how `quant.py` materializes ``vth_fx``).
+    """
+    return int(round(SAT_FRACTION * float(v_th) * qcfg.one))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FleetTelemetry:
+    """Per-slot fleet health vector — all fields ``(B,) float32``.
+
+    spike_rate   mean |event| per postsynaptic neuron per step (0..1 for
+                 spiking layers; mean |readout| for readout layers)
+    mean_abs_dw  mean |dw| per synapse per step, float weight units.  For
+                 windowed rollouts this is the NET weight motion over the
+                 window, |w_end - w_start| / (N*M) / (K * n_plastic) — the
+                 quantity that survives the fixed-point grid (per-step dw
+                 below one grid step rounds stochastically, so net motion
+                 is the honest activity measure on both datapaths).
+    sat_frac     fraction of postsynaptic membranes at >= SAT_FRACTION of
+                 threshold after the step (fixed-point headroom monitor)
+    occupancy    the slot's active flag as 0.0/1.0 (so host-side rollups
+                 can mask and occupancy-weight without a second transfer)
+
+    Vacant slots report exact zeros in every field.
+    """
+
+    spike_rate: jax.Array
+    mean_abs_dw: jax.Array
+    sat_frac: jax.Array
+    occupancy: jax.Array
+
+    @staticmethod
+    def zeros(batch: int) -> "FleetTelemetry":
+        z = jnp.zeros((batch,), jnp.float32)
+        return FleetTelemetry(spike_rate=z, mean_abs_dw=z, sat_frac=z,
+                              occupancy=z)
+
+
+def adapter_telemetry(before: dict, after: dict, active,
+                      *, qcfg=None, trace_decay: float = 0.8,
+                      v_th: float = 1.0) -> FleetTelemetry:
+    """`FleetTelemetry` for the LM fast-weight adapter, from cache deltas.
+
+    The adapter's decode step is one fleet `engine.layer_step` buried
+    inside the backbone's jitted decode program, so instead of threading a
+    flag through every layout's forward pass we recover the same three
+    signals as a pure function of the adapter cache before/after the step
+    (both already live in the decode program, so this traces into the SAME
+    launch — no extra transfer):
+
+      * spikes: the postsynaptic trace update is ``tr2' = decay*tr2 + s2``
+        (fixed-point: ``tr2' = tr2 - (tr2 >> trace_shift) + ev``), so the
+        event vector is recovered EXACTLY as ``tr2' - decay(tr2)``.
+      * |dw|: straight from the ``w_fast`` delta (x per-slot ``w_scale``
+        on the int8 grid).
+      * saturation: from the postsynaptic membrane ``v2``.
+
+    Everything is gated by ``active``: a frozen slot's unchanged traces
+    would otherwise "recover" a phantom event ``(1-decay)*tr2`` != 0.
+
+    ``before``/``after`` are adapter cache dicts (`models/plastic.py`
+    ``plan_cache`` schema: w_fast, v2, tr2, w_scale, ...).
+    """
+    act = jnp.asarray(active).astype(jnp.float32)
+    n = before["tr2"].shape[-1]
+
+    if qcfg is not None:
+        tr2_b = before["tr2"]
+        decayed = tr2_b - (tr2_b >> qcfg.trace_shift)
+        s2 = (after["tr2"] - decayed).astype(jnp.float32) / qcfg.one
+        dw_steps = (after["w_fast"].astype(jnp.int32)
+                    - before["w_fast"].astype(jnp.int32))
+        abs_dw = jnp.abs(dw_steps).astype(jnp.float32) * \
+            before["w_scale"][:, None, None]
+        sat = (jnp.abs(after["v2"]) >= sat_threshold_q(v_th, qcfg))
+    else:
+        s2 = after["tr2"] - trace_decay * before["tr2"]
+        abs_dw = jnp.abs(after["w_fast"] - before["w_fast"])
+        sat = (jnp.abs(after["v2"]) >= sat_threshold(v_th))
+
+    spike_rate = jnp.mean(jnp.abs(s2), axis=-1).astype(jnp.float32)
+    mean_abs_dw = (jnp.sum(abs_dw, axis=(-2, -1)) / (n * n)
+                   ).astype(jnp.float32)
+    sat_frac = jnp.mean(sat.astype(jnp.float32), axis=-1)
+    return FleetTelemetry(spike_rate=spike_rate * act,
+                          mean_abs_dw=mean_abs_dw * act,
+                          sat_frac=sat_frac * act,
+                          occupancy=act)
+
+
+def record_fleet_telemetry(registry, tel: FleetTelemetry,
+                           prefix: str = "fleet") -> dict:
+    """Fold a device `FleetTelemetry` into host gauges (one transfer).
+
+    Gauges are occupancy-weighted means over ACTIVE slots — vacant slots'
+    mandated zeros must not dilute the fleet's health numbers:
+
+        {prefix}_spike_rate   {prefix}_mean_abs_dw
+        {prefix}_sat_frac     {prefix}_occupancy (fraction of slots active)
+
+    Returns the scalar values as a dict for callers that also log them.
+    """
+    import numpy as np
+
+    occ = np.asarray(tel.occupancy, dtype=np.float64)
+    n_active = float(occ.sum())
+    b = max(1, occ.shape[0])
+
+    def active_mean(x) -> float:
+        if n_active == 0:
+            return 0.0
+        return float(np.asarray(x, dtype=np.float64).sum() / n_active)
+
+    vals = {
+        f"{prefix}_spike_rate": active_mean(tel.spike_rate),
+        f"{prefix}_mean_abs_dw": active_mean(tel.mean_abs_dw),
+        f"{prefix}_sat_frac": active_mean(tel.sat_frac),
+        f"{prefix}_occupancy": n_active / b,
+    }
+    help_text = {
+        f"{prefix}_spike_rate": "mean |event|/neuron/step over active slots",
+        f"{prefix}_mean_abs_dw": "mean |dw|/synapse/step over active slots",
+        f"{prefix}_sat_frac": "fraction of membranes near threshold",
+        f"{prefix}_occupancy": "fraction of pool slots active",
+    }
+    for name, v in vals.items():
+        registry.gauge(name, help_text[name]).set(v)
+    return vals

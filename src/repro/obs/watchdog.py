@@ -1,0 +1,183 @@
+"""Recompile watchdog: "zero recompiles after warmup" as a runtime monitor.
+
+The serving benchmarks pin their no-recompile invariants offline
+(`serving_churn.py` asserts `compile_count()` deltas are zero under
+churn).  This module makes the same invariant observable at serve time:
+after warmup, ANY backend compilation is a bug — a shape drifted, a
+Python scalar leaked into a traced signature, a new entry point was hit —
+and the watchdog reports it the moment it happens, with the offending
+program's name.
+
+Mechanics (jax 0.4.x):
+
+  * `jax.monitoring.register_event_duration_secs_listener` delivers every
+    `/jax/core/compile/backend_compile_duration` event — the authoritative
+    "XLA compiled something" signal — but carries NO program name.
+  * The name travels on the `jax._src.dispatch` logger instead:
+    "Finished XLA compilation of {fun_name} in ..." is logged immediately
+    BEFORE the monitoring event fires (same thread, same call), so a DEBUG
+    `logging.Handler` on that logger pairs names with events.
+
+`jax.monitoring` has no per-listener unregister (only a global
+`clear_event_listeners`), so the watchdog is a process-wide singleton
+(`obs.watchdog.watchdog`) whose `install()` is idempotent — importing or
+re-installing never stacks listeners.
+
+Usage:
+
+    watchdog.install()
+    ... warmup: admit sessions, run one step per entry point ...
+    with watchdog.armed():
+        serve()                       # any compile -> warning + counter
+    assert watchdog.violations == 0, watchdog.violation_signatures
+"""
+from __future__ import annotations
+
+import logging
+import re
+import threading
+from contextlib import contextmanager
+from typing import List, Optional
+
+# Mirrors jax._src.dispatch.BACKEND_COMPILE_EVENT (a string constant; we
+# keep our own copy rather than importing the private module).
+BACKEND_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_DISPATCH_LOGGER = "jax._src.dispatch"
+_COMPILE_MSG = re.compile(r"Finished XLA compilation of (?P<name>.+?) in ")
+
+
+class _NameCapture(logging.Handler):
+    """DEBUG handler on the jax dispatch logger capturing program names."""
+
+    def __init__(self, watchdog: "RecompileWatchdog"):
+        super().__init__(level=logging.DEBUG)
+        self._watchdog = watchdog
+
+    def emit(self, record: logging.LogRecord) -> None:
+        try:
+            m = _COMPILE_MSG.match(record.getMessage())
+        except Exception:       # pragma: no cover - malformed record
+            return
+        if m:
+            self._watchdog._last_name = m.group("name")
+        # install() lowers the dispatch logger to DEBUG and stops
+        # propagation (so forcing DEBUG records into existence does not
+        # spam whatever root handler the host app configured); anything
+        # the logger would have surfaced anyway (--jax_log_compiles logs
+        # at WARNING) is forwarded to the root handlers here.
+        if record.levelno >= logging.WARNING:
+            logging.getLogger().handle(record)
+
+
+class RecompileWatchdog:
+    """Singleton compile monitor: count compiles, flag them while armed."""
+
+    def __init__(self):
+        self._installed = False
+        self._armed = 0                 # re-entrant arm depth
+        self._lock = threading.Lock()
+        self._last_name: Optional[str] = None
+        self.compiles = 0               # all backend compiles since install
+        self.violations = 0             # compiles observed while armed
+        self.violation_signatures: List[str] = []
+        self.last_signature: Optional[str] = None
+        self._registry = None
+        self._log = logging.getLogger("repro.obs.watchdog")
+
+    # ---- installation ----------------------------------------------------
+
+    def install(self, registry=None) -> "RecompileWatchdog":
+        """Register the jax.monitoring listener + name-capture handler.
+
+        Idempotent: jax.monitoring cannot unregister a single listener, so
+        repeated calls must not stack.  An optional metrics registry gets
+        `compiles_total` / `recompiles_after_warmup_total` counters.
+        """
+        if registry is not None:
+            self._registry = registry
+        if self._installed:
+            return self
+        from jax import monitoring
+
+        dispatch_logger = logging.getLogger(_DISPATCH_LOGGER)
+        # The compile message is logged at DEBUG (WARNING only under
+        # --jax_log_compiles); the logger must pass DEBUG records to our
+        # handler.  Stdlib default handlers sit at WARNING, so this does
+        # not spam the console.
+        if dispatch_logger.level == logging.NOTSET or \
+                dispatch_logger.level > logging.DEBUG:
+            dispatch_logger.setLevel(logging.DEBUG)
+        # Forcing DEBUG records into existence must not spray compile
+        # chatter through the host app's root handler; _NameCapture
+        # forwards WARNING+ records (e.g. --jax_log_compiles) itself.
+        dispatch_logger.propagate = False
+        dispatch_logger.addHandler(_NameCapture(self))
+
+        monitoring.register_event_duration_secs_listener(self._on_event)
+        self._installed = True
+        return self
+
+    # ---- arming ----------------------------------------------------------
+
+    def arm(self) -> None:
+        """Enter the no-recompile regime (re-entrant)."""
+        with self._lock:
+            self._armed += 1
+
+    def disarm(self) -> None:
+        with self._lock:
+            self._armed = max(0, self._armed - 1)
+
+    @property
+    def is_armed(self) -> bool:
+        return self._armed > 0
+
+    @contextmanager
+    def armed(self):
+        """Context manager: compiles inside the block are violations."""
+        self.arm()
+        try:
+            yield self
+        finally:
+            self.disarm()
+
+    def reset(self) -> None:
+        """Clear counts (keeps installation and arm depth)."""
+        with self._lock:
+            self.compiles = 0
+            self.violations = 0
+            self.violation_signatures = []
+            self.last_signature = None
+
+    # ---- the listener ----------------------------------------------------
+
+    def _on_event(self, event: str, duration_secs: float, **kw) -> None:
+        if event != BACKEND_COMPILE_EVENT:
+            return
+        name = self._last_name or "<unknown>"
+        self._last_name = None
+        with self._lock:
+            self.compiles += 1
+            self.last_signature = name
+            armed = self._armed > 0
+            if armed:
+                self.violations += 1
+                self.violation_signatures.append(name)
+        if self._registry is not None:
+            self._registry.counter(
+                "compiles_total", "backend compiles since install").inc()
+        if armed:
+            if self._registry is not None:
+                self._registry.counter(
+                    "recompiles_after_warmup_total",
+                    "compiles observed while the watchdog was armed").inc()
+            self._log.warning(
+                "recompile after warmup: %r compiled in %.3fs "
+                "(violation #%d) — a shape or static argument drifted",
+                name, duration_secs, self.violations)
+
+
+# Process-wide singleton (jax.monitoring listeners cannot be removed
+# individually, so everything shares this instance).
+watchdog = RecompileWatchdog()

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import snn
 from repro.envs.base import Env
+from repro.obs import MetricsRegistry, phase
 from repro.scenarios import perturb as P
 from repro.scenarios.vector_env import VectorEnv, VecEnvState
 
@@ -60,10 +61,21 @@ class ClosedLoop:
     steps: int
     venv: VectorEnv
     _rollout: object  # jitted (net0, vstate0, theta, schedule, freeze, key)
+    metrics: MetricsRegistry = dataclasses.field(
+        default_factory=MetricsRegistry)
 
     def compile_count(self) -> int:
         """Executables compiled by the rollout program (recompile gate)."""
         return int(self._rollout._cache_size())
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-able rollup of this harness's recorded runs (see `run`
+        ``record=True``) plus the live compile count."""
+        self.metrics.gauge(
+            "closed_loop_compile_count",
+            "executables compiled by the rollout program"
+        ).set(self.compile_count())
+        return self.metrics.snapshot()
 
     # ---- state builders ----------------------------------------------------
 
@@ -110,13 +122,18 @@ class ClosedLoop:
             schedule: Optional[P.Schedule] = None,
             freeze_at: Optional[int] = None,
             w0: Optional[Sequence[jax.Array]] = None,
-            actuator_mask: Optional[jax.Array] = None) -> RolloutResult:
+            actuator_mask: Optional[jax.Array] = None,
+            record: bool = False) -> RolloutResult:
         """One closed-loop rollout of `steps` env steps for all B slots.
 
         theta: per-layer rule list, or the flat vector `snn.flatten_theta`
         produces.  ``freeze_at``: env step from which plasticity is gated
         off (None = never; 0 = fully frozen).  ``schedule``: compiled
         perturbations (None = clean episode of the same K=0 program).
+        ``record=True`` additionally rolls the run up into ``self.metrics``
+        (rollout latency histogram, mean-reward gauge, run counter — the
+        `metrics_snapshot` schema); recording blocks on the result, so
+        leave it off inside latency-sensitive loops.
         """
         if isinstance(theta, jax.Array) or getattr(theta, "ndim", None) == 1:
             theta = snn.unflatten_theta(self.scfg, theta)
@@ -129,7 +146,22 @@ class ClosedLoop:
             schedule = P.empty_schedule(self.env, self.batch)
         freeze = jnp.asarray(self.steps + 1 if freeze_at is None
                              else freeze_at, jnp.int32)
-        return self._rollout(net, vstate, theta, schedule, freeze, k_loop)
+        if not record:
+            return self._rollout(net, vstate, theta, schedule, freeze,
+                                 k_loop)
+        with self.metrics.histogram(
+                "closed_loop_rollout_seconds",
+                "wall-clock per recorded closed-loop rollout").time(), \
+                phase("scenario.rollout"):
+            res = self._rollout(net, vstate, theta, schedule, freeze, k_loop)
+            res.rewards.block_until_ready()
+        self.metrics.counter(
+            "closed_loop_rollouts_total", "recorded rollouts").inc()
+        self.metrics.gauge(
+            "closed_loop_mean_reward",
+            "mean per-step reward over slots, last recorded rollout"
+        ).set(float(res.rewards.mean()))
+        return res
 
 
 def make_closed_loop(env: Env, scfg: snn.SNNConfig, *, batch: int,

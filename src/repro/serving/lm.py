@@ -37,6 +37,9 @@ import numpy as np
 from repro.models import factory, plastic
 from repro.models.config import ModelConfig
 from repro.models.layers import init_from_plan
+from repro.obs import MetricsRegistry, phase
+from repro.obs.telemetry import (FleetTelemetry, adapter_telemetry,
+                                 record_fleet_telemetry)
 from repro.serving.scheduler import SessionPool, uniform_axes
 from repro.serving.sessions import SessionStore
 
@@ -57,7 +60,8 @@ class LMScheduler(SessionPool):
     """
 
     def __init__(self, model, params, slots: int, max_len: int,
-                 store: Optional[SessionStore] = None):
+                 store: Optional[SessionStore] = None,
+                 registry: Optional[MetricsRegistry] = None):
         if not isinstance(model, factory.Model):
             model = factory.build(model)
         if model.cfg.input_mode != "tokens":
@@ -71,7 +75,7 @@ class LMScheduler(SessionPool):
         pool = {"cache": model.pool_cache(slots, max_len),
                 "tok": jnp.zeros((slots,), jnp.int32)}
         axes = {"cache": model.cache_axes(max_len), "tok": 0}
-        super().__init__(pool, axes, slots, store)
+        super().__init__(pool, axes, slots, store, registry)
 
         def _prefill_session(params, prompt):
             # B=1 prompt -> one session row + its first greedy token
@@ -99,13 +103,50 @@ class LMScheduler(SessionPool):
             return ({"cache": cache,
                      "tok": jnp.where(active, nxt, pool["tok"])}, logits)
 
+        qcfg = plastic.QUANT if self.cfg.adapter_quant else None
+
+        def _pool_step_tel(params, pool, active):
+            # telemetry trace VARIANT: the adapter's decode step is buried
+            # inside the backbone's jitted program, so the per-slot health
+            # vector is recovered as a pure function of the adapter cache
+            # before/after — traced into the SAME launch, no extra pass
+            before = pool["cache"]["adapter"]
+            new_pool, nxt = _pool_step(params, pool, active)
+            tel = adapter_telemetry(before, new_pool["cache"]["adapter"],
+                                    active, qcfg=qcfg)
+            return new_pool, nxt, tel
+
+        def _pool_window_tel(params, pool, tokens, active):
+            before = pool["cache"]["adapter"]
+            new_pool, logits = _pool_window(params, pool, tokens, active)
+            # window-mean telemetry: the K-step cache delta normalized by
+            # the window length (net weight motion, recovered event mass)
+            tel = adapter_telemetry(before, new_pool["cache"]["adapter"],
+                                    active, qcfg=qcfg)
+            k = tokens.shape[1]
+            tel = FleetTelemetry(
+                spike_rate=tel.spike_rate / k,
+                mean_abs_dw=tel.mean_abs_dw / k,
+                sat_frac=tel.sat_frac, occupancy=tel.occupancy)
+            return new_pool, logits, tel
+
         # Fixed shapes => one executable per op (per window length for the
-        # windowed path); compile_count() exposes the totals the churn
-        # benchmark pins.
+        # windowed path); `compiled_programs()` names the per-entry-point
+        # totals the churn benchmark and compile audit pin.  Telemetry
+        # variants register up-front (untraced => 0 executables) so a
+        # telemetry-off run audits them without compiling anything.
         self._prefill = jax.jit(_prefill_session)
         self._step_fn = jax.jit(_pool_step)
         self._window_fn = jax.jit(_pool_window)
-        self._jitted += [self._prefill, self._step_fn, self._window_fn]
+        self._step_tel_fn = jax.jit(_pool_step_tel)
+        self._window_tel_fn = jax.jit(_pool_window_tel)
+        self._jitted.update({
+            "prefill": self._prefill,
+            "decode_step": self._step_fn,
+            "decode_window": self._window_fn,
+            "decode_step_telemetry": self._step_tel_fn,
+            "decode_window_telemetry": self._window_tel_fn,
+        })
 
     # ---- session construction --------------------------------------------
 
@@ -141,20 +182,44 @@ class LMScheduler(SessionPool):
 
     # ---- stepping ---------------------------------------------------------
 
-    def step(self) -> Dict[str, int]:
+    def _require_adapter(self) -> None:
+        if not self.cfg.plastic_adapter:
+            raise ValueError(
+                f"{self.cfg.name}: telemetry reads the plastic adapter "
+                "cache; this model has cfg.plastic_adapter=False")
+
+    def step(self, telemetry: bool = False):
         """One greedy decode token for every admitted stream (one launch).
 
         Each stream consumes its pending token and produces the next;
         returns uid -> newly generated token (which is also the new
-        pending token)."""
-        self.pool, nxt = self._step_fn(self.params, self.pool,
-                                       self._active_mask())
+        pending token).
+
+        ``telemetry=True`` (plastic-adapter models only) dispatches the
+        telemetry trace variant — the adapter's per-slot health vector is
+        recovered from its cache delta inside the same launch — and
+        returns ``(tokens, FleetTelemetry)``, recording summary gauges
+        into ``self.metrics`` under the ``adapter_`` prefix.
+        """
+        if telemetry:
+            self._require_adapter()
+            with phase("lm.decode_step"):
+                self.pool, nxt, tel = self._step_tel_fn(
+                    self.params, self.pool, self._active_mask())
+        else:
+            with phase("lm.decode_step"):
+                self.pool, nxt = self._step_fn(self.params, self.pool,
+                                               self._active_mask())
         self.advance_steps(1)
         nxt = np.asarray(nxt)
-        return {uid: int(nxt[slot]) for uid, slot in self.user_slot.items()}
+        toks = {uid: int(nxt[slot]) for uid, slot in self.user_slot.items()}
+        if not telemetry:
+            return toks
+        record_fleet_telemetry(self.metrics, tel, prefix="adapter")
+        return toks, tel
 
-    def decode_window(self, windows: Mapping[str, jax.Array]
-                      ) -> Dict[str, jax.Array]:
+    def decode_window(self, windows: Mapping[str, jax.Array],
+                      telemetry: bool = False):
         """K teacher-forced tokens per stream, ONE fused launch per window.
 
         `windows` maps uid -> ``(K,)`` int32 (same K for every stream —
@@ -166,6 +231,11 @@ class LMScheduler(SessionPool):
         stochastic-round stream in quant mode — and bit-identical to them
         (`tests/test_serving_lm.py` pins it).  Returns uid -> ``(K, V)``
         logits; the new pending token is the last position's argmax.
+
+        ``telemetry=True`` (plastic-adapter models only) returns
+        ``(logits, FleetTelemetry)`` with window-normalized adapter health
+        (net weight motion / recovered event mass over the K steps),
+        recording ``adapter_*`` gauges into ``self.metrics``.
         """
         missing = [u for u in self.user_slot if u not in windows]
         extra = [u for u in windows if u not in self.user_slot]
@@ -180,10 +250,23 @@ class LMScheduler(SessionPool):
         tokens = np.zeros((self.slots, k), np.int32)
         for uid, w in windows.items():
             tokens[self.user_slot[uid]] = np.asarray(w, np.int32)
-        self.pool, logits = self._window_fn(
-            self.params, self.pool, jnp.asarray(tokens), self._active_mask())
+        if telemetry:
+            self._require_adapter()
+            with phase("lm.decode_window"):
+                self.pool, logits, tel = self._window_tel_fn(
+                    self.params, self.pool, jnp.asarray(tokens),
+                    self._active_mask())
+        else:
+            with phase("lm.decode_window"):
+                self.pool, logits = self._window_fn(
+                    self.params, self.pool, jnp.asarray(tokens),
+                    self._active_mask())
         self.advance_steps(k)
-        return {uid: logits[slot] for uid, slot in self.user_slot.items()}
+        out = {uid: logits[slot] for uid, slot in self.user_slot.items()}
+        if not telemetry:
+            return out
+        record_fleet_telemetry(self.metrics, tel, prefix="adapter")
+        return out, tel
 
 
 class AdapterPool(SessionPool):
@@ -199,14 +282,15 @@ class AdapterPool(SessionPool):
     """
 
     def __init__(self, cfg: ModelConfig, slots: int,
-                 store: Optional[SessionStore] = None):
+                 store: Optional[SessionStore] = None,
+                 registry: Optional[MetricsRegistry] = None):
         if not cfg.plastic_adapter:
             raise ValueError(f"{cfg.name}: AdapterPool needs "
                              "cfg.plastic_adapter=True")
         self.cfg = cfg
         pool = init_from_plan(plastic.plan_cache(cfg, slots),
                               jax.random.PRNGKey(0))
-        super().__init__(pool, uniform_axes(pool), slots, store)
+        super().__init__(pool, uniform_axes(pool), slots, store, registry)
 
     def _session_factory(self):
         # fresh sessions keep plan inits (quant rows: non-zero w_scale)

@@ -52,6 +52,8 @@ import numpy as np
 
 from repro.core import snn
 from repro.core.engine import NetworkState
+from repro.obs import MetricsRegistry, phase
+from repro.obs.telemetry import FleetTelemetry, record_fleet_telemetry
 from repro.serving.sessions import SessionStore
 
 # Axis sentinel: a pool leaf marked SHARED has no slot rows — it is pool-
@@ -134,11 +136,14 @@ class SessionPool:
     """
 
     def __init__(self, pool, axes, slots: int,
-                 store: Optional[SessionStore] = None):
+                 store: Optional[SessionStore] = None,
+                 registry: Optional[MetricsRegistry] = None):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         self.slots = slots
-        self.store = store if store is not None else SessionStore()
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self.store = (store if store is not None
+                      else SessionStore(registry=self.metrics))
         self.pool = pool
         self._axes = axes
         self._put, self._take = make_slot_ops(axes)
@@ -156,7 +161,20 @@ class SessionPool:
         self._admit_seq = np.zeros(slots, np.int64)  # admission order (LRU)
         self._seq = 0
         self.evictions = 0
-        self._jitted = [self._put, self._take]       # compile_count sources
+        # compile_count sources, keyed by entry-point name so the compile
+        # audit (`compiled_programs`) can name the program that drifted
+        self._jitted: Dict[str, Any] = {
+            "slot_put": self._put, "slot_take": self._take}
+        self._m_admit = self.metrics.histogram(
+            "pool_admit_seconds", "admit latency (checkout + swap-in)")
+        self._m_evict = self.metrics.histogram(
+            "pool_evict_seconds", "evict latency (swap-out + persist)")
+        self._m_occupancy = self.metrics.gauge(
+            "pool_occupancy", "admitted sessions / pool slots")
+        self._m_admissions = self.metrics.counter(
+            "pool_admissions_total", "sessions admitted")
+        self._m_evictions = self.metrics.counter(
+            "pool_evictions_total", "sessions evicted")
 
     # ---- occupancy -------------------------------------------------------
 
@@ -174,9 +192,21 @@ class SessionPool:
             mask[s] = u is not None
         return jnp.asarray(mask)
 
+    def compiled_programs(self) -> Dict[str, int]:
+        """Per-entry-point executable counts: {name: compiled programs}.
+
+        EVERY jitted entry point the pool owns is audited here (the
+        telemetry step variants included) — `tests/test_serving_lm.py`
+        pins the exact expected dict per (layout x datapath), so adding a
+        jitted program without registering it in ``_jitted`` fails the
+        audit rather than silently escaping the no-recompile gates.
+        """
+        return {name: int(f._cache_size())
+                for name, f in self._jitted.items()}
+
     def compile_count(self) -> int:
         """Total executables compiled by the pool's jitted programs."""
-        return sum(int(f._cache_size()) for f in self._jitted)
+        return sum(self.compiled_programs().values())
 
     def pool_nbytes(self) -> int:
         """Resident bytes of the pool pytree (all leaves).
@@ -225,20 +255,24 @@ class SessionPool:
             self.evict(self.slot_user[lru])
             free = [lru]
         slot = free[0]
-        state, step = self.store.checkout(
-            uid, self._session_factory if factory is None else factory,
-            template=self._template)
-        # normalize to device arrays: a store restore hands back HOST
-        # (numpy) leaves, and numpy arguments key a SEPARATE jit cache
-        # entry — without this, the first restore-admission after warm-up
-        # would read as a recompile under the pinned-zero churn gate
-        state = jax.tree.map(jnp.asarray, state)
-        self.pool = self._put(self.pool, jnp.int32(slot), state)
+        with self._m_admit.time(), phase("pool.admit"):
+            state, step = self.store.checkout(
+                uid, self._session_factory if factory is None else factory,
+                template=self._template)
+            # normalize to device arrays: a store restore hands back HOST
+            # (numpy) leaves, and numpy arguments key a SEPARATE jit cache
+            # entry — without this, the first restore-admission after warm-up
+            # would read as a recompile under the pinned-zero churn gate
+            state = jax.tree.map(jnp.asarray, state)
+            with phase("pool.swap_in"):
+                self.pool = self._put(self.pool, jnp.int32(slot), state)
         self.slot_user[slot] = uid
         self.user_slot[uid] = slot
         self._steps[slot] = step
         self._admit_seq[slot] = self._seq
         self._seq += 1
+        self._m_admissions.inc()
+        self._m_occupancy.set(len(self.user_slot) / self.slots)
         return slot
 
     def evict(self, uid: str) -> None:
@@ -246,15 +280,20 @@ class SessionPool:
         slot = self.user_slot.pop(uid, None)
         if slot is None:
             raise KeyError(f"session {uid!r} is not in the pool")
-        user = self._take(self.pool, jnp.int32(slot))
-        user = self._finalize_session(user, int(self._steps[slot]))
-        self.store.checkin(uid, user, int(self._steps[slot]))
-        self.slot_user[slot] = None
-        # hygiene: scatter zeros over the vacated slot so no stale user data
-        # lingers in the pool tensor (the active mask already freezes it)
-        self.pool = self._put(self.pool, jnp.int32(slot), self._zero_session)
+        with self._m_evict.time(), phase("pool.evict"):
+            with phase("pool.swap_out"):
+                user = self._take(self.pool, jnp.int32(slot))
+            user = self._finalize_session(user, int(self._steps[slot]))
+            self.store.checkin(uid, user, int(self._steps[slot]))
+            self.slot_user[slot] = None
+            # hygiene: scatter zeros over the vacated slot so no stale user
+            # data lingers in the pool tensor (the mask already freezes it)
+            self.pool = self._put(self.pool, jnp.int32(slot),
+                                  self._zero_session)
         self._steps[slot] = 0
         self.evictions += 1
+        self._m_evictions.inc()
+        self._m_occupancy.set(len(self.user_slot) / self.slots)
 
     def advance_steps(self, k: int) -> None:
         """Advance every admitted session's host-side step counter by k."""
@@ -298,11 +337,12 @@ class FleetScheduler(SessionPool):
     """
 
     def __init__(self, cfg: snn.SNNConfig, theta, slots: int,
-                 store: Optional[SessionStore] = None):
+                 store: Optional[SessionStore] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.theta = theta
         fleet = snn.init_state(cfg, batch=slots, fleet=True)
-        super().__init__(fleet, _network_axes(fleet), slots, store)
+        super().__init__(fleet, _network_axes(fleet), slots, store, registry)
 
         def _pool_step(fleet, drive, active, teach, seeds):
             # `seeds` are the PER-SESSION step counters (host bookkeeping
@@ -322,12 +362,34 @@ class FleetScheduler(SessionPool):
             return snn.rollout_window(cfg, fleet, theta, window, teach=teach,
                                       active=active, seed=seeds)
 
+        def _pool_step_tel(fleet, drive, active, teach, seeds):
+            # the telemetry trace VARIANT of _pool_step: `telemetry` is a
+            # static flag, so this is a second stable program per entry
+            # point (compiled once, never per step), not a runtime branch
+            return snn.timestep(cfg, fleet, theta, drive, teach=teach,
+                                active=active, seed=seeds, telemetry=True)
+
+        def _pool_rollout_tel(fleet, window, active, teach, seeds):
+            return snn.rollout_window(cfg, fleet, theta, window, teach=teach,
+                                      active=active, seed=seeds,
+                                      telemetry=True)
+
         # Fixed shapes everywhere => each of these traces exactly once per
-        # signature; `compile_count()` exposes the executable counts the
-        # churn benchmark pins.
+        # signature; `compiled_programs()` exposes the per-entry-point
+        # executable counts the churn benchmark and compile audit pin.
+        # The telemetry variants are registered up-front: an untraced jit
+        # reports _cache_size() == 0, so a telemetry-off run still audits
+        # them (as zeros) without compiling anything extra.
         self._step = jax.jit(_pool_step)
         self._rollout = jax.jit(_pool_rollout)
-        self._jitted += [self._step, self._rollout]
+        self._step_tel = jax.jit(_pool_step_tel)
+        self._rollout_tel = jax.jit(_pool_rollout_tel)
+        self._jitted.update({
+            "pool_step": self._step,
+            "pool_rollout": self._rollout,
+            "pool_step_telemetry": self._step_tel,
+            "pool_rollout_telemetry": self._rollout_tel,
+        })
 
     # the historical attribute name: the pool pytree IS the fleet state
     @property
@@ -377,26 +439,38 @@ class FleetScheduler(SessionPool):
         return jnp.asarray(drive), tarr
 
     def step(self, drives: Mapping[str, jax.Array],
-             teach: Optional[Mapping[str, jax.Array]] = None
-             ) -> Dict[str, jax.Array]:
+             teach: Optional[Mapping[str, jax.Array]] = None,
+             telemetry: bool = False):
         """One fused SNN timestep for the WHOLE pool.
 
         `drives` maps uid -> input drive ``(obs_dim,)`` (already encoded;
         the pool is deterministic, matching ``encoding="current"``).  Every
         admitted session must receive a drive.  Vacant slots get zero drive
         and are frozen by the active mask.  Returns uid -> readout row.
+
+        ``telemetry=True`` dispatches the telemetry trace variant instead
+        (one extra stable program, compiled on first use) and returns
+        ``(outputs, FleetTelemetry)``; fleet-level summary gauges are
+        recorded into ``self.metrics``.
         """
         drive, tarr = self._gather_rows(drives, teach)
-        self.fleet, out = self._step(self.fleet, drive,
-                                     self._active_mask(), tarr,
-                                     jnp.asarray(self._steps.astype(np.int32)))
+        fn = self._step_tel if telemetry else self._step
+        with phase("pool.step"):
+            res = fn(self.fleet, drive, self._active_mask(), tarr,
+                     jnp.asarray(self._steps.astype(np.int32)))
+        self.fleet, out = res[0], res[1]
         self.advance_steps(1)
-        return {uid: out[slot] for uid, slot in self.user_slot.items()}
+        outputs = {uid: out[slot] for uid, slot in self.user_slot.items()}
+        if not telemetry:
+            return outputs
+        tel: FleetTelemetry = res[2]
+        record_fleet_telemetry(self.metrics, tel)
+        return outputs, tel
 
     def pool_step(self, drives: Mapping[str, jax.Array],
                   timesteps: Optional[int] = None,
-                  teach: Optional[Mapping[str, jax.Array]] = None
-                  ) -> Dict[str, jax.Array]:
+                  teach: Optional[Mapping[str, jax.Array]] = None,
+                  telemetry: bool = False):
         """K fused SNN timesteps for the WHOLE pool in ONE engine launch.
 
         The time-fused form of calling `step` K times on held drives: the
@@ -410,6 +484,11 @@ class FleetScheduler(SessionPool):
 
         Returns uid -> (K, act_dim) readout WINDOW (callers reduce:
         `control_step` takes the mean).
+
+        ``telemetry=True`` dispatches the telemetry trace variant (one
+        extra stable program) and returns ``(outputs, FleetTelemetry)``
+        with window-averaged per-slot rates, recording fleet summary
+        gauges into ``self.metrics``.
         """
         k = self.cfg.timesteps if timesteps is None else int(timesteps)
         if k < 1:
@@ -417,11 +496,18 @@ class FleetScheduler(SessionPool):
         drive, tarr = self._gather_rows(drives, teach)
         n_in = self.cfg.layer_sizes[0]
         window = jnp.broadcast_to(drive[None], (k, self.slots, n_in))
-        self.fleet, outs = self._rollout(
-            self.fleet, window, self._active_mask(), tarr,
-            jnp.asarray(self._steps.astype(np.int32)))
+        fn = self._rollout_tel if telemetry else self._rollout
+        with phase("pool.rollout"):
+            res = fn(self.fleet, window, self._active_mask(), tarr,
+                     jnp.asarray(self._steps.astype(np.int32)))
+        self.fleet, outs = res[0], res[1]
         self.advance_steps(k)
-        return {uid: outs[:, slot] for uid, slot in self.user_slot.items()}
+        outputs = {uid: outs[:, slot] for uid, slot in self.user_slot.items()}
+        if not telemetry:
+            return outputs
+        tel: FleetTelemetry = res[2]
+        record_fleet_telemetry(self.metrics, tel)
+        return outputs, tel
 
     def control_step(self, obs: Mapping[str, jax.Array]
                      ) -> Dict[str, jax.Array]:

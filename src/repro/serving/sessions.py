@@ -40,6 +40,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager, latest_step
+from repro.obs import MetricsRegistry
 
 
 class SessionStore:
@@ -53,20 +54,61 @@ class SessionStore:
                 recently-used entry is dropped (no I/O — `checkin` already
                 persisted it).  ``None`` = unbounded cache.
       keep:     checkpoints retained per session (CheckpointManager keep-K).
+      registry: `obs.MetricsRegistry` receiving the store's metrics (a
+                private registry is created if omitted).  Stable schema:
+                counters ``session_store_{warm_hits,restores,creates,
+                persists}_total`` and histograms ``session_store_{checkout,
+                persist}_seconds`` — `benchmarks/serving_churn.py`
+                reconciles these against its own event log.
     """
 
     def __init__(self, root: Optional[str] = None,
-                 capacity: Optional[int] = None, keep: int = 2):
+                 capacity: Optional[int] = None, keep: int = 2,
+                 registry: Optional[MetricsRegistry] = None):
         self.root = root
         self.capacity = capacity
         self.keep = keep
         self._warm: "OrderedDict[str, Tuple[Any, int]]" = OrderedDict()
         self._archive: Dict[str, Tuple[Any, int]] = {}   # root=None fallback
         self._managers: Dict[str, CheckpointManager] = {}
-        # counters the serving benchmark reports
-        self.warm_hits = 0
-        self.restores = 0
-        self.creates = 0
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._m_warm_hits = self.metrics.counter(
+            "session_store_warm_hits_total",
+            "checkouts served from the LRU warm cache")
+        self._m_restores = self.metrics.counter(
+            "session_store_restores_total",
+            "checkouts restored from the durable store")
+        self._m_creates = self.metrics.counter(
+            "session_store_creates_total",
+            "checkouts that built a fresh session (factory)")
+        self._m_persists = self.metrics.counter(
+            "session_store_persists_total", "durable session writes")
+        self._m_checkout = self.metrics.histogram(
+            "session_store_checkout_seconds", "checkout latency")
+        self._m_persist_s = self.metrics.histogram(
+            "session_store_persist_seconds", "persist latency")
+
+    # ---- legacy counter views (read-only; the registry is the source) ----
+
+    @property
+    def warm_hits(self) -> int:
+        """Checkouts served from the warm cache (registry-backed view)."""
+        return int(self._m_warm_hits.value)
+
+    @property
+    def restores(self) -> int:
+        """Checkouts restored from the durable store (registry-backed)."""
+        return int(self._m_restores.value)
+
+    @property
+    def creates(self) -> int:
+        """Checkouts that built a fresh session (registry-backed view)."""
+        return int(self._m_creates.value)
+
+    @property
+    def persists(self) -> int:
+        """Durable session writes (registry-backed view)."""
+        return int(self._m_persists.value)
 
     # ---- ownership -------------------------------------------------------
 
@@ -115,35 +157,37 @@ class SessionStore:
         "recompile" per admission under the churn benchmarks' pinned-zero
         compile counts.
         """
-        if template is None:
-            template = jax.eval_shape(factory)
-        if uid in self._warm:
-            self.warm_hits += 1
-            state, step = self._warm.pop(uid)
-            self._validate(uid, state, template)
-            return state, step
-        if self.root is not None:
-            mgr = self._manager(uid)
-            if mgr.latest_step() is not None:
-                try:
-                    state, step, _ = mgr.restore(template)
-                except (KeyError, ValueError) as e:
-                    raise ValueError(
-                        f"session {uid!r}: persisted payload does not fit "
-                        f"the requested pool mode ({e}); if it is a float "
-                        "session being admitted to a quantized pool, "
-                        "migrate it explicitly with snn.quantize_state"
-                    ) from e
-                self.restores += 1
+        with self._m_checkout.time():
+            if template is None:
+                template = jax.eval_shape(factory)
+            if uid in self._warm:
+                self._m_warm_hits.inc()
+                state, step = self._warm.pop(uid)
                 self._validate(uid, state, template)
-                return state, int(step)
-        elif uid in self._archive:
-            self.restores += 1
-            state, step = self._archive[uid]
-            self._validate(uid, state, template)
-            return state, step
-        self.creates += 1
-        return factory(), 0
+                return state, step
+            if self.root is not None:
+                mgr = self._manager(uid)
+                if mgr.latest_step() is not None:
+                    try:
+                        state, step, _ = mgr.restore(template)
+                    except (KeyError, ValueError) as e:
+                        raise ValueError(
+                            f"session {uid!r}: persisted payload does not "
+                            f"fit the requested pool mode ({e}); if it is a "
+                            "float session being admitted to a quantized "
+                            "pool, migrate it explicitly with "
+                            "snn.quantize_state"
+                        ) from e
+                    self._m_restores.inc()
+                    self._validate(uid, state, template)
+                    return state, int(step)
+            elif uid in self._archive:
+                self._m_restores.inc()
+                state, step = self._archive[uid]
+                self._validate(uid, state, template)
+                return state, step
+            self._m_creates.inc()
+            return factory(), 0
 
     @staticmethod
     def _validate(uid: str, state: Any, template: Any) -> None:
@@ -184,14 +228,17 @@ class SessionStore:
 
     def persist(self, uid: str, state: Any, step: int) -> None:
         """Durably write one session snapshot."""
-        if self.root is None:
-            # host-RAM archive: snapshot to numpy so later donation of the
-            # device buffers cannot corrupt the archived copy
-            self._archive[uid] = (
-                jax.tree.map(lambda a: np.asarray(jax.device_get(a)), state),
-                int(step))
-            return
-        self._manager(uid).save(int(step), state)
+        with self._m_persist_s.time():
+            self._m_persists.inc()
+            if self.root is None:
+                # host-RAM archive: snapshot to numpy so later donation of
+                # the device buffers cannot corrupt the archived copy
+                self._archive[uid] = (
+                    jax.tree.map(
+                        lambda a: np.asarray(jax.device_get(a)), state),
+                    int(step))
+                return
+            self._manager(uid).save(int(step), state)
 
     def _manager(self, uid: str) -> CheckpointManager:
         if uid not in self._managers:

@@ -17,6 +17,11 @@ Pins, mirroring tests/test_serving.py for the LM path:
   4. `launch/serve.py`'s scheduler-admit path: the AdapterPool round-trips
      through a durable on-disk SessionStore bit-exactly, and resumed
      sessions keep learning with cumulative step counters.
+  5. COMPILE AUDIT: `compiled_programs()` pins the exact per-entry-point
+     executable counts after a canonical serve sequence — one program per
+     op (per window length for the windowed path, per prompt length for
+     prefill), telemetry variants one each, and ONLY the entry point whose
+     shape legitimately changed may grow.
 """
 import dataclasses
 
@@ -163,6 +168,48 @@ class TestWindowedDecode:
             "rival": np.full((k,), s.pending("rival"), np.int32)})
         np.testing.assert_array_equal(np.asarray(out["u"]), ref_logits)
         _assert_trees_equal(ref_sess, _np(s.session_view("u")))
+
+
+class TestCompileAudit:
+    @pytest.mark.parametrize("impl,datapath", DIAG)
+    def test_pinned_program_counts(self, impl, datapath):
+        """The full per-entry-point executable dict after a canonical serve
+        sequence, pinned exactly: any helper that silently becomes its own
+        jitted program (or any shape leak that splits an existing one)
+        changes a number here."""
+        model, params = _model("dense", impl, datapath)
+        vocab = model.cfg.vocab
+        s = LMScheduler(model, params, slots=3, max_len=24)
+        # untraced audit: every program registered before first use; only
+        # slot_take has compiled (the session factory gathers slot 0 of
+        # the initial pool to build the fresh-session template)
+        assert s.compiled_programs() == {
+            "slot_put": 0, "slot_take": 1, "prefill": 0, "decode_step": 0,
+            "decode_window": 0, "decode_step_telemetry": 0,
+            "decode_window_telemetry": 0}
+
+        s.admit_prompt("a", _prompt("a", 6, vocab))
+        s.admit_prompt("b", _prompt("b", 4, vocab))   # 2nd prompt LENGTH
+        for _ in range(2):
+            s.step()                                  # cached after 1st
+        s.step(telemetry=True)
+        k2 = {u: np.full((2,), s.pending(u), np.int32) for u in ("a", "b")}
+        s.decode_window(k2)
+        s.decode_window(k2, telemetry=True)
+        s.evict("b")
+        expected = {
+            "slot_put": 1, "slot_take": 1,
+            "prefill": 2,                 # one per distinct prompt length
+            "decode_step": 1, "decode_step_telemetry": 1,
+            "decode_window": 1, "decode_window_telemetry": 1,
+        }
+        assert s.compiled_programs() == expected
+        assert s.compile_count() == sum(expected.values())
+
+        # a NEW window length is the one legitimate growth: exactly the
+        # windowed entry point gains one executable, nothing else moves
+        s.decode_window({"a": np.full((3,), s.pending("a"), np.int32)})
+        assert s.compiled_programs() == dict(expected, decode_window=2)
 
 
 class TestServeAdapterPool:

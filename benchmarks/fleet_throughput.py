@@ -34,6 +34,18 @@ exactly what makes the per-step rows collapse super-linearly with B on the
 interpret backend; fusing K steps and blocking ``block_b`` streams per
 grid program divides that overhead by K * block_b.
 
+The DEVICE sweep (``--device-counts``, on by default) measures the sharded
+session pool: for each D in the sweep a fresh subprocess forces D host
+devices (``XLA_FLAGS=--xla_force_host_platform_device_count=D`` must be set
+before jax initializes, hence the subprocess), runs a meshed
+`serving.scheduler.FleetScheduler` (`distributed.sharding.fleet_mesh`), and
+reports the fused pool-step rate, scaling efficiency vs D=1, and the
+device-loss drain latency (`fail_device` -> `drain_failed`; D=1 has no
+surviving shard, so its drain cells are null).  Zero recompiles across the
+timed section AND the drain are asserted in every cell.  On forced host
+devices all D shards share one physical CPU, so efficiency ~1/D is
+expected — the sweep pins the mechanism and the drain path, not a speedup.
+
     PYTHONPATH=src python benchmarks/fleet_throughput.py [--smoke] [--impl ...]
 
 Writes benchmarks/results/fleet_throughput.json:
@@ -41,7 +53,12 @@ Writes benchmarks/results/fleet_throughput.json:
     ..., "native_speedup": ..., "native_controller_steps_per_s": ...,
     "vmap_controller_steps_per_s": ..., "collapse_ratio": ...,
     "fused_steps_per_s": ..., "fused_controller_steps_per_s": ...,
-    "fused_speedup_vs_per_step": ...}, ...], "fused_k": K, ...}
+    "fused_speedup_vs_per_step": ...}, ...], "fused_k": K, ...,
+    "device_counts": [1, 2, 4, 8],
+    "device_sweep": [{"devices": D, "slots": B, "resident": ...,
+    "pool_steps_per_s": ..., "controller_steps_per_s": ...,
+    "speedup_vs_1dev": ..., "scaling_efficiency": ..., "drain_ms": ...,
+    "drained": ..., "steps_lost": ..., "recompiles": 0}, ...]}
 
 ``collapse_ratio`` is (B * steps/s at B) / (steps/s at B=1) — the
 aggregate-throughput scaling a flat per-launch cost would hold at B; a
@@ -55,6 +72,8 @@ import dataclasses
 import functools
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -63,6 +82,10 @@ import jax.numpy as jnp
 from repro.core import engine
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+# child -> parent protocol for the device sweep: the cell subprocess prints
+# exactly one line with this prefix followed by the cell JSON
+_CELL_MARK = "DEVICE_CELL_JSON:"
 
 
 def make_fleet(b: int, n: int, m: int, key: jax.Array):
@@ -135,6 +158,116 @@ def bench_fused_steps_per_s(layer, x, params, impl: str, k: int,
     return iters * k / (time.perf_counter() - t0)
 
 
+# ---- the sharded-pool device sweep -----------------------------------------
+
+
+def _device_cell(args) -> int:
+    """One device-sweep cell, run in a subprocess with D forced devices:
+    meshed pool-step throughput + device-loss drain latency, with zero
+    recompiles asserted across both."""
+    import numpy as np
+
+    from repro.core import snn
+    from repro.distributed import sharding as dsh
+    from repro.serving.scheduler import FleetScheduler
+
+    d = int(args.devices)
+    if len(jax.devices()) < d:
+        raise RuntimeError(
+            f"device cell needs {d} devices but jax sees "
+            f"{len(jax.devices())} — the parent must set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={d} before spawn")
+    slots = args.slots if args.slots else (8 if args.smoke else 16)
+    cfg = snn.SNNConfig(layer_sizes=(args.n, args.m), impl=args.impl,
+                        block_m=args.block_m)
+    theta = snn.init_theta(cfg, jax.random.PRNGKey(0))
+    sched = FleetScheduler(cfg, theta, slots=slots, mesh=dsh.fleet_mesh(d))
+    # half-occupied: drain needs free healthy slots on the survivors
+    users = [f"u{i}" for i in range(slots // 2)]
+    for u in users:
+        sched.admit(u)
+    rng = np.random.RandomState(0)
+    drives = {u: rng.rand(args.n).astype(np.float32) for u in users}
+    k = args.k
+    # warm-up: the step program, then one churn cycle so every slot
+    # program the drain reuses is compiled before the recompile gate arms
+    jax.block_until_ready(sched.pool_step(dict(drives), timesteps=k))
+    sched.evict(users[0])
+    sched.admit(users[0])
+    jax.block_until_ready(sched.pool_step(dict(drives), timesteps=k))
+    warm = sched.compile_count()
+
+    iters = 3 if args.smoke else 10
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = sched.pool_step(dict(drives), timesteps=k)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    cell = {"devices": d, "impl": args.impl, "slots": slots,
+            "resident": len(users),
+            "pool_steps_per_s": iters * k / dt,
+            "controller_steps_per_s": iters * k * len(users) / dt}
+
+    if d > 1:
+        # drain latency: snapshot, kill device 0's shard (poisoned, so the
+        # drain provably never reads it), re-home onto survivors
+        sched.persist_resident()
+        t0 = time.perf_counter()
+        stranded = sched.fail_device(0, poison=True)
+        report = sched.drain_failed()
+        drain_s = time.perf_counter() - t0
+        assert {r["uid"] for r in report} == set(stranded)
+        assert all(r["to_device"] != 0 for r in report), report
+        # the drained pool must still serve
+        jax.block_until_ready(sched.pool_step(dict(drives), timesteps=k))
+        cell.update(drain_ms=drain_s * 1e3, drained=len(report),
+                    steps_lost=int(sum(r["steps_lost"] for r in report)))
+    else:
+        # a 1-device pool has no surviving shard to drain onto
+        cell.update(drain_ms=None, drained=0, steps_lost=0)
+
+    cell["recompiles"] = sched.compile_count() - warm
+    assert cell["recompiles"] == 0, sched.compiled_programs()
+    print(_CELL_MARK + json.dumps(cell))
+    return 0
+
+
+def _run_device_sweep(args):
+    """Spawn one `--device-cell` subprocess per device count (the forced-
+    host-device flag is per-process and pre-import) and aggregate scaling
+    efficiency vs the first count (1 by default)."""
+    counts = [int(c) for c in str(args.device_counts).split(",") if c]
+    cells = []
+    print("devices,pool_steps_per_s,scaling_efficiency,drain_ms,recompiles")
+    for d in counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+        cmd = [sys.executable, os.path.abspath(__file__), "--device-cell",
+               "--devices", str(d), "--impl", args.impl,
+               "--n", str(args.n), "--m", str(args.m),
+               "--block-m", str(args.block_m), "--k", str(args.k)]
+        if args.slots:
+            cmd += ["--slots", str(args.slots)]
+        if args.smoke:
+            cmd.append("--smoke")
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=1800, env=env)
+        if proc.returncode != 0:
+            raise RuntimeError(f"device cell D={d} failed:\n"
+                               f"{proc.stdout}\n{proc.stderr}")
+        lines = [ln for ln in proc.stdout.splitlines()
+                 if ln.startswith(_CELL_MARK)]
+        cells.append(json.loads(lines[-1][len(_CELL_MARK):]))
+    base = cells[0]["pool_steps_per_s"]
+    for c in cells:
+        c["speedup_vs_1dev"] = c["pool_steps_per_s"] / base
+        c["scaling_efficiency"] = c["speedup_vs_1dev"] / c["devices"]
+        drain = ("" if c["drain_ms"] is None else f'{c["drain_ms"]:.1f}')
+        print(f'{c["devices"]},{c["pool_steps_per_s"]:.2f},'
+              f'{c["scaling_efficiency"]:.3f},{drain},{c["recompiles"]}')
+    return counts, cells
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -157,7 +290,25 @@ def main(argv=None):
                          "fleet_throughput.json, or a separate _smoke file "
                          "under --smoke so CI/quick runs never clobber the "
                          "checked-in full-sweep artifact")
+    ap.add_argument("--device-counts", default="1,2,4,8",
+                    help="comma-separated device counts for the sharded-"
+                         "pool sweep (each runs in a subprocess with that "
+                         "many forced host devices); the first count is "
+                         "the scaling-efficiency baseline")
+    ap.add_argument("--devices-only", action="store_true",
+                    help="run ONLY the device sweep and merge it into the "
+                         "--out artifact, preserving an existing B sweep "
+                         "(CI regenerates device cells without re-running "
+                         "the minutes-long B=1024 rows)")
+    ap.add_argument("--device-cell", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: subprocess mode
+    ap.add_argument("--devices", type=int, default=None,
+                    help=argparse.SUPPRESS)  # internal: cell device count
+    ap.add_argument("--slots", type=int, default=None,
+                    help="device-sweep pool size (default 8 smoke / 16)")
     args = ap.parse_args(argv)
+    if args.device_cell:
+        return _device_cell(args)
     if args.out is None:
         capped = args.max_batch is not None and args.max_batch < 1024
         name = ("fleet_throughput_smoke.json" if args.smoke else
@@ -170,8 +321,11 @@ def main(argv=None):
         batches = [b for b in batches if b <= args.max_batch]
     params = engine.EngineParams(block_m=args.block_m)
     sweep = []
-    print("batch,native_steps_per_s,vmap_steps_per_s,native_speedup,"
-          "fused_steps_per_s,fused_speedup_vs_per_step")
+    if args.devices_only:
+        batches = []
+    else:
+        print("batch,native_steps_per_s,vmap_steps_per_s,native_speedup,"
+              "fused_steps_per_s,fused_speedup_vs_per_step")
     native_b1 = None
     for b in batches:
         state, x = make_fleet(b, args.n, args.m, jax.random.PRNGKey(b))
@@ -206,17 +360,29 @@ def main(argv=None):
         sweep.append(row)
         print(f"{b},{native:.2f},{vmapped:.2f},{native / vmapped:.2f},"
               f"{fused:.2f},{fused / native:.2f}")
-    fused_b1 = sweep[0]["fused_steps_per_s"]
-    for row in sweep:
-        row["fused_collapse_ratio"] = (row["fused_controller_steps_per_s"]
-                                       / fused_b1)
+    if sweep:
+        fused_b1 = sweep[0]["fused_steps_per_s"]
+        for row in sweep:
+            row["fused_collapse_ratio"] = (
+                row["fused_controller_steps_per_s"] / fused_b1)
+
+    counts, dev_cells = _run_device_sweep(args)
+
+    payload = {"impl": args.impl, "n": args.n, "m": args.m,
+               "block_m": args.block_m, "fused_k": args.k,
+               "block_b": args.block_b, "smoke": bool(args.smoke),
+               "sweep": sweep,
+               "device_counts": counts, "device_sweep": dev_cells}
+    if args.devices_only and os.path.exists(args.out):
+        # refresh ONLY the device cells; keep the existing B sweep rows
+        with open(args.out) as f:
+            payload = json.load(f)
+        payload["device_counts"] = counts
+        payload["device_sweep"] = dev_cells
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump({"impl": args.impl, "n": args.n, "m": args.m,
-                   "block_m": args.block_m, "fused_k": args.k,
-                   "block_b": args.block_b, "smoke": bool(args.smoke),
-                   "sweep": sweep}, f, indent=1)
+        json.dump(payload, f, indent=1)
     return 0
 
 

@@ -98,6 +98,10 @@ _DIMENSIONS = {
     "datapath": ("datapath", "datapaths", "mode"),
     # LM backbone family: dense GQA, Mamba2 SSM, MoE, hybrids
     "layout": ("layout", "layouts"),
+    # sharded-pool device counts (fleet_throughput's device sweep): a
+    # sweep that silently drops a D cell fails like a lost backend — the
+    # smoke sweep must force the same counts the checked-in artifact has
+    "devices": ("devices", "device_counts"),
 }
 
 

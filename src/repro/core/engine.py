@@ -636,3 +636,55 @@ def _rollout_pallas(state, theta, drives, params, teach, active, base_seed,
                          sat_frac=raw[:, 2],
                          occupancy=_occupancy(active, raw.shape[0]))
     return new_state, outs, tel
+
+
+# ---- sharding-transparent fleet dispatch (multi-device slot pools) ---------
+
+
+def fleet_spmd(fn, mesh, in_axes, out_axes, axis_name: str = "data"):
+    """Wrap a fleet-mode function in `shard_map` over the slot axis.
+
+    The fleet tensors are slot-major and slot rows are mutually independent
+    (the whole point of fleet mode), so a pool of B slots on a D-device mesh
+    is pure data parallelism: every device runs the SAME program — the same
+    `layer_step`/`rollout` lowering, the same Pallas kernel body — on its
+    B/D local slots, with zero cross-device collectives in the hot path.
+    Because the per-slot math is untouched, a sharded pool is bit-identical
+    to the unmeshed pool (tests/test_distributed.py pins it, float and int8,
+    xla and pallas-interpret).
+
+    `shard_map` rather than sharded jit because GSPMD has no partitioning
+    rule for `pallas_call` — manual SPMD is what lets the megakernel run
+    per-shard unchanged.  ``check_rep=False`` for the same reason (Pallas
+    calls carry no replication rule).
+
+    Args:
+      fn:       positional-argument function over fleet pytrees.
+      mesh:     a Mesh with `axis_name` (e.g. `distributed.sharding.
+                fleet_mesh()`).
+      in_axes:  one entry per positional argument: an int — the slot axis
+                every leaf of that argument carries (0 for ``(B, ...)``
+                state, 1 for time-major ``(K, B, ...)`` windows) — or None
+                for replicated inputs (scalars, shared rule state).
+      out_axes: same, per output; every output must be slot-mapped (an
+                int): with ``check_rep=False`` a replicated output cannot
+                be verified, so compute pool-global outputs OUTSIDE the
+                wrapped call.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    def spec(ax, kind):
+        if ax is None:
+            if kind == "out":
+                raise ValueError(
+                    "fleet_spmd outputs must be slot-mapped (int axis); "
+                    "compute replicated outputs outside the wrapped fn")
+            return PartitionSpec()
+        return PartitionSpec(*((None,) * ax), axis_name)
+
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=tuple(spec(a, "in") for a in in_axes),
+        out_specs=tuple(spec(a, "out") for a in out_axes),
+        check_rep=False)

@@ -1,9 +1,11 @@
 from repro.distributed import ft, sharding
-from repro.distributed.sharding import (logical_to_physical, named_sharding,
-                                        shard_constraint)
+from repro.distributed.sharding import (fleet_mesh, logical_to_physical,
+                                        named_sharding, pool_shardings,
+                                        shard_constraint, slot_pspec)
 from repro.distributed.ft import (FaultTolerantRunner, StragglerMonitor,
-                                  elastic_restore)
+                                  elastic_restore, loss_is_bad)
 
-__all__ = ["ft", "sharding", "logical_to_physical", "named_sharding",
-           "shard_constraint", "FaultTolerantRunner", "StragglerMonitor",
-           "elastic_restore"]
+__all__ = ["ft", "sharding", "fleet_mesh", "logical_to_physical",
+           "named_sharding", "pool_shardings", "shard_constraint",
+           "slot_pspec", "FaultTolerantRunner", "StragglerMonitor",
+           "elastic_restore", "loss_is_bad"]

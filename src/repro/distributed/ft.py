@@ -27,9 +27,14 @@ from repro.checkpoint import CheckpointManager
 
 
 def loss_is_bad(loss) -> bool:
-    """Host-side NaN/inf sentinel (call on a fetched scalar)."""
-    v = float(loss)
-    return not np.isfinite(v)
+    """Host-side NaN/inf sentinel: True if ANY element is non-finite.
+
+    Accepts scalars OR arrays (per-shard / per-session loss vectors from a
+    sharded pool report one value per device or slot) — the reduction is
+    any-NaN, because one poisoned shard poisons the step exactly like one
+    poisoned scalar did."""
+    v = np.asarray(jax.device_get(loss))
+    return not bool(np.isfinite(v).all())
 
 
 @dataclasses.dataclass
@@ -44,20 +49,31 @@ class StragglerMonitor:
     warmup: int = 5
 
     mean: float = 0.0
-    var: float = 0.0
+    var: float = 0.0          # VARIANCE estimate (not a Welford M2 sum)
     n: int = 0
     flagged: int = 0
+    _m2: float = 0.0          # Welford sum of squared deviations (warmup)
 
     def observe(self, dt: float) -> bool:
         """Record one step time; returns True if it is a straggler event."""
         self.n += 1
-        if self.n <= self.warmup:
-            # prime the statistics; never flag during warmup
+        # var must be a sample variance by the time the flag branch reads
+        # it, which takes at least two observations — clamp the warmup so a
+        # warmup=0/1 monitor can't flag off a zero (1e-9) std.
+        warmup = max(self.warmup, 2)
+        if self.n <= warmup:
+            # Welford priming: _m2 accumulates the sum of squared
+            # deviations; var is its unbiased sample-variance view.  (The
+            # historical code kept the M2 SUM in `var` and divided by the
+            # ever-growing n-1 after warmup, while the EWMA below mixed
+            # squared deviations into the same field — biasing std low and
+            # shrinking it further every step.)
             d = dt - self.mean
             self.mean += d / self.n
-            self.var += d * (dt - self.mean)
+            self._m2 += d * (dt - self.mean)
+            self.var = self._m2 / max(self.n - 1, 1)
             return False
-        std = max((self.var / max(self.n - 1, 1)) ** 0.5, 1e-9)
+        std = max(self.var ** 0.5, 1e-9)
         is_straggler = (dt > self.mean + self.k * std
                         and dt > (1.0 + self.rel_min) * self.mean)
         if is_straggler:

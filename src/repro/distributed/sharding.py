@@ -122,6 +122,53 @@ def named_sharding(mesh: Mesh, spec, shape=None) -> NamedSharding:
     return NamedSharding(mesh, logical_to_physical(mesh, spec, shape))
 
 
+# ---- session-pool placement (the serving fleet) ----------------------------
+
+def fleet_mesh(num_devices: Optional[int] = None) -> Mesh:
+    """A 1-D device mesh over the logical ``"data"`` axis for session pools.
+
+    The serving schedulers shard their slot pools over this axis: B slots on
+    D devices = B/D resident sessions per device, every slot row whole on
+    exactly one device (slot rows are mutually independent, so the placement
+    is pure data parallelism — no cross-device collectives in the hot path).
+    ``num_devices`` defaults to every local device; CI forces D with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    import numpy as np
+    devs = jax.devices()
+    d = len(devs) if num_devices is None else int(num_devices)
+    if d < 1 or d > len(devs):
+        raise ValueError(
+            f"fleet_mesh needs 1 <= num_devices <= {len(devs)} (visible "
+            f"devices), got {num_devices}")
+    return Mesh(np.array(devs[:d]), ("data",))
+
+
+def slot_pspec(axis, name: str = "data") -> P:
+    """PartitionSpec placing a pool leaf's slot `axis` on mesh axis `name`.
+
+    `axis` is an int (the dimension carrying slot rows) or any non-int
+    sentinel (`serving.scheduler.SHARED` / None) meaning the leaf is pool-
+    global and replicated."""
+    if isinstance(axis, bool) or not isinstance(axis, int):
+        return P()
+    return P(*((None,) * axis), name)
+
+
+def pool_shardings(mesh: Mesh, axes, name: str = "data"):
+    """NamedSharding pytree for a slot pool, from its slot-axes pytree.
+
+    `axes` mirrors the pool structure (the same pytree `serving.scheduler.
+    make_slot_ops` consumes): int leaves name the slot axis, anything else
+    (the SHARED sentinel) marks pool-global replicated state.  This is the
+    single source of truth for slot -> device placement: NamedSharding over
+    a length-D ``"data"`` axis places slot s on device ``s * D // B``
+    (contiguous blocks of B/D slots per device).
+    """
+    return jax.tree.map(
+        lambda ax: NamedSharding(mesh, slot_pspec(ax, name)), axes)
+
+
 def shard_constraint(x, spec):
     """with_sharding_constraint in logical axes; no-op without a mesh.
 

@@ -57,11 +57,20 @@ class LMScheduler(SessionPool):
       slots:   pool size B; fixes every pool tensor shape forever.
       max_len: cache length ceiling shared by all slots.
       store:   `SessionStore` backing eviction/restore.
+      mesh:    optional device mesh (see `SessionPool`): the decode pool —
+               KV/SSM planes, adapter rows, sequence indices — shards over
+               its slot axes and the decode launches run as sharding-
+               constrained jit (GSPMD), NOT shard_map: the MoE capacity/
+               cumsum stages reduce ACROSS slots, and GSPMD partitions them
+               without changing their semantics, where a manual per-shard
+               lowering would.  Token streams are device-count invariant
+               (tests/test_distributed.py pins the parity).
     """
 
     def __init__(self, model, params, slots: int, max_len: int,
                  store: Optional[SessionStore] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 mesh=None):
         if not isinstance(model, factory.Model):
             model = factory.build(model)
         if model.cfg.input_mode != "tokens":
@@ -75,7 +84,17 @@ class LMScheduler(SessionPool):
         pool = {"cache": model.pool_cache(slots, max_len),
                 "tok": jnp.zeros((slots,), jnp.int32)}
         axes = {"cache": model.cache_axes(max_len), "tok": 0}
-        super().__init__(pool, axes, slots, store, registry)
+        super().__init__(pool, axes, slots, store, registry, mesh=mesh)
+
+        # pin the decode outputs' pool layout (GSPMD would otherwise be
+        # free to re-layout the updated cache away from the slot sharding)
+        shardings = self._shardings
+
+        def _constrain(new_pool):
+            if shardings is None:
+                return new_pool
+            return jax.tree.map(jax.lax.with_sharding_constraint,
+                                new_pool, shardings)
 
         def _prefill_session(params, prompt):
             # B=1 prompt -> one session row + its first greedy token
@@ -90,8 +109,9 @@ class LMScheduler(SessionPool):
             logits, cache = model.decode_step(
                 params, pool["cache"], pool["tok"][:, None], active=active)
             nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-            return ({"cache": cache,
-                     "tok": jnp.where(active, nxt, pool["tok"])}, nxt)
+            return (_constrain({"cache": cache,
+                                "tok": jnp.where(active, nxt, pool["tok"])}),
+                    nxt)
 
         def _pool_window(params, pool, tokens, active):
             # K teacher-forced tokens for the whole pool in ONE launch: the
@@ -100,8 +120,9 @@ class LMScheduler(SessionPool):
             logits, cache = model.decode_rollout(
                 params, pool["cache"], tokens, active=active)
             nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-            return ({"cache": cache,
-                     "tok": jnp.where(active, nxt, pool["tok"])}, logits)
+            return (_constrain({"cache": cache,
+                                "tok": jnp.where(active, nxt, pool["tok"])}),
+                    logits)
 
         qcfg = plastic.QUANT if self.cfg.adapter_quant else None
 
@@ -283,14 +304,16 @@ class AdapterPool(SessionPool):
 
     def __init__(self, cfg: ModelConfig, slots: int,
                  store: Optional[SessionStore] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 mesh=None):
         if not cfg.plastic_adapter:
             raise ValueError(f"{cfg.name}: AdapterPool needs "
                              "cfg.plastic_adapter=True")
         self.cfg = cfg
         pool = init_from_plan(plastic.plan_cache(cfg, slots),
                               jax.random.PRNGKey(0))
-        super().__init__(pool, uniform_axes(pool), slots, store, registry)
+        super().__init__(pool, uniform_axes(pool), slots, store, registry,
+                         mesh=mesh)
 
     def _session_factory(self):
         # fresh sessions keep plan inits (quant rows: non-zero w_scale)

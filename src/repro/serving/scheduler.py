@@ -50,7 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import snn
+from repro.core import engine, snn
 from repro.core.engine import NetworkState
 from repro.obs import MetricsRegistry, phase
 from repro.obs.telemetry import FleetTelemetry, record_fleet_telemetry
@@ -91,16 +91,26 @@ def _take_leaf(p, ax, slot):
     return jnp.take(p, slot, axis=ax)
 
 
-def make_slot_ops(axes):
+def make_slot_ops(axes, shardings=None):
     """Jitted (put, take) for a pool whose per-leaf slot axes are `axes`.
 
     `axes` is a pytree matching the pool structure whose leaves are either
     an int (the axis carrying slot rows in that leaf) or `SHARED`.  The
     slot index is traced, so every slot reuses one executable per op.
+
+    `shardings` (a NamedSharding pytree matching the pool, from
+    `distributed.sharding.pool_shardings`) pins the scatter's OUTPUT layout
+    on a meshed pool: without the constraint GSPMD is free to gather the
+    donated pool onto one device and the slot -> device placement would
+    silently dissolve on the first admission.
     """
     def put(pool, slot, user):
-        return jax.tree.map(
+        out = jax.tree.map(
             lambda p, u, ax: _put_leaf(p, u, ax, slot), pool, user, axes)
+        if shardings is not None:
+            out = jax.tree.map(
+                jax.lax.with_sharding_constraint, out, shardings)
+        return out
 
     def take(pool, slot):
         return jax.tree.map(
@@ -133,21 +143,56 @@ class SessionPool:
       slots: pool size B; fixes every pool tensor shape forever.
       store: `SessionStore` backing eviction/restore; a private in-RAM
              store is created if omitted.
+      mesh:  optional `jax.sharding.Mesh` with a ``"data"`` axis (see
+             `distributed.sharding.fleet_mesh`).  The pool pytree is placed
+             with `NamedSharding` over its slot axes — device d owns the
+             contiguous slot block ``[d*B/D, (d+1)*B/D)`` — and every slot
+             op pins that layout, so admissions/evictions/steps run on a
+             D-device fleet with the SAME executables-per-entry-point
+             counts as the single-device pool (zero recompiles under
+             churn).  ``slots`` must divide evenly by the device count.
     """
 
     def __init__(self, pool, axes, slots: int,
                  store: Optional[SessionStore] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 mesh=None):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         self.slots = slots
+        self.mesh = mesh
+        self._shardings = None
+        self.num_devices = 1
+        if mesh is not None:
+            if "data" not in mesh.axis_names:
+                raise ValueError(
+                    f"pool mesh needs a 'data' axis (the slot axis); got "
+                    f"axes {mesh.axis_names} — build it with "
+                    "distributed.sharding.fleet_mesh()")
+            self.num_devices = int(mesh.shape["data"])
+            if slots % self.num_devices != 0:
+                raise ValueError(
+                    f"slots={slots} must divide evenly over the "
+                    f"{self.num_devices}-device 'data' axis (every device "
+                    "owns the same number of slot rows; pad the pool or "
+                    "shrink the mesh)")
+            from repro.distributed import sharding as _sharding
+            self._shardings = _sharding.pool_shardings(mesh, axes)
+            pool = jax.device_put(pool, self._shardings)
         self.metrics = registry if registry is not None else MetricsRegistry()
         self.store = (store if store is not None
                       else SessionStore(registry=self.metrics))
         self.pool = pool
         self._axes = axes
-        self._put, self._take = make_slot_ops(axes)
-        self._zero_session = self._take(pool, jnp.int32(0))
+        self._put, self._take = make_slot_ops(axes, self._shardings)
+        # round-trip the zero template through host memory so it is an
+        # UNCOMMITTED device array, exactly like an admitted payload
+        # (store restores are numpy -> jnp.asarray): on a meshed pool a
+        # committed gather output would key separate slot_put cache
+        # entries for admission vs the vacated-slot hygiene scatter
+        self._zero_session = jax.tree.map(
+            lambda a: jnp.asarray(np.asarray(jax.device_get(a))),
+            self._take(pool, jnp.int32(0)))
         # the pool-mode session template (abstract): what every admitted
         # payload must look like, passed to `SessionStore.checkout` so
         # admission never has to eval_shape the factory (a jitted prefill
@@ -161,6 +206,11 @@ class SessionPool:
         self._admit_seq = np.zeros(slots, np.int64)  # admission order (LRU)
         self._seq = 0
         self.evictions = 0
+        # fault tolerance: slots whose device shard is marked lost.  Lost
+        # slots never admit, never count active, and refuse evict (their
+        # rows are garbage) — `drain_failed` re-homes their sessions.
+        self._lost_slots: set = set()
+        self._poison_session = None                  # built on first failure
         # compile_count sources, keyed by entry-point name so the compile
         # audit (`compiled_programs`) can name the program that drifted
         self._jitted: Dict[str, Any] = {
@@ -175,6 +225,14 @@ class SessionPool:
             "pool_admissions_total", "sessions admitted")
         self._m_evictions = self.metrics.counter(
             "pool_evictions_total", "sessions evicted")
+        self._m_failures = self.metrics.counter(
+            "pool_device_failures_total", "device shards marked lost")
+        self._m_drained = self.metrics.counter(
+            "pool_drained_sessions_total",
+            "sessions re-homed off a lost shard")
+        self._m_drain = self.metrics.histogram(
+            "pool_drain_seconds", "drain latency (restore + re-admit, per "
+            "drain_failed call)")
 
     # ---- occupancy -------------------------------------------------------
 
@@ -184,12 +242,36 @@ class SessionPool:
 
     @property
     def free_slots(self) -> int:
-        return self.slots - len(self.user_slot)
+        return sum(1 for s, u in enumerate(self.slot_user)
+                   if u is None and s not in self._lost_slots)
+
+    @property
+    def lost_slots(self) -> frozenset:
+        """Slots whose device shard has been marked lost."""
+        return frozenset(self._lost_slots)
+
+    def slot_device(self, slot: int) -> int:
+        """Device index owning `slot` under the mesh placement (0 unmeshed).
+
+        NamedSharding over the length-D ``"data"`` axis places contiguous
+        blocks: device d owns slots ``[d*B/D, (d+1)*B/D)``."""
+        return slot * self.num_devices // self.slots
+
+    def device_slots(self, device: int) -> range:
+        """The contiguous slot block owned by `device`."""
+        per = self.slots // self.num_devices
+        if not 0 <= device < self.num_devices:
+            raise ValueError(f"device must be in [0, {self.num_devices}), "
+                             f"got {device}")
+        return range(device * per, (device + 1) * per)
 
     def _active_mask(self) -> jax.Array:
+        # lost slots are masked out like vacant ones: a stranded session is
+        # frozen (and its garbage shard ignored) until drain_failed re-homes
+        # it — the mask is a runtime operand, so failure never recompiles
         mask = np.zeros(self.slots, np.bool_)
         for s, u in enumerate(self.slot_user):
-            mask[s] = u is not None
+            mask[s] = u is not None and s not in self._lost_slots
         return jnp.asarray(mask)
 
     def compiled_programs(self) -> Dict[str, int]:
@@ -244,14 +326,17 @@ class SessionPool:
         if uid in self.user_slot:
             raise ValueError(f"session {uid!r} is already in slot "
                              f"{self.user_slot[uid]}")
-        free = [s for s, u in enumerate(self.slot_user) if u is None]
+        healthy = [s for s in range(self.slots) if s not in self._lost_slots]
+        free = [s for s in healthy if self.slot_user[s] is None]
         if not free:
-            if not evict_lru:
+            candidates = [s for s in healthy if self.slot_user[s] is not None]
+            if not evict_lru or not candidates:
+                lost = (f" ({len(self._lost_slots)} slots lost to device "
+                        "failure)" if self._lost_slots else "")
                 raise RuntimeError(
-                    f"pool is full ({self.slots} slots); pass evict_lru=True "
-                    "or evict a session first")
-            lru = min((s for s in range(self.slots)),
-                      key=lambda s: self._admit_seq[s])
+                    f"pool is full ({self.slots} slots{lost}); pass "
+                    "evict_lru=True or evict a session first")
+            lru = min(candidates, key=lambda s: self._admit_seq[s])
             self.evict(self.slot_user[lru])
             free = [lru]
         slot = free[0]
@@ -277,9 +362,16 @@ class SessionPool:
 
     def evict(self, uid: str) -> None:
         """Swap `uid` out, persist it durably, and clear its slot."""
-        slot = self.user_slot.pop(uid, None)
+        slot = self.user_slot.get(uid)
         if slot is None:
             raise KeyError(f"session {uid!r} is not in the pool")
+        if slot in self._lost_slots:
+            raise RuntimeError(
+                f"session {uid!r} sits in lost slot {slot} (device "
+                f"{self.slot_device(slot)}); its rows are gone — recover it "
+                "with drain_failed(), which restores the last durable "
+                "checkpoint, instead of evicting garbage")
+        self.user_slot.pop(uid)
         with self._m_evict.time(), phase("pool.evict"):
             with phase("pool.swap_out"):
                 user = self._take(self.pool, jnp.int32(slot))
@@ -299,6 +391,185 @@ class SessionPool:
         """Advance every admitted session's host-side step counter by k."""
         for slot in self.user_slot.values():
             self._steps[slot] += k
+
+    # ---- device-loss recovery (distributed/ft.py posture) ----------------
+
+    def persist_resident(self) -> int:
+        """Durably snapshot every resident session WITHOUT evicting it.
+
+        The periodic drain-safety checkpoint: `drain_failed` recovers a
+        lost shard's sessions from their last durable snapshot, so steps
+        taken since it are the blast radius of a device loss.  Gathers each
+        healthy resident session (lost slots are skipped — their rows are
+        gone) and writes it through `SessionStore.persist`; the warm cache
+        is untouched (resident uids are checked out, never warm).  Returns
+        the number of sessions persisted.
+        """
+        n = 0
+        for uid, slot in list(self.user_slot.items()):
+            if slot in self._lost_slots:
+                continue
+            user = self._take(self.pool, jnp.int32(slot))
+            user = self._finalize_session(user, int(self._steps[slot]))
+            self.store.persist(uid, user, int(self._steps[slot]))
+            n += 1
+        return n
+
+    def stranded_sessions(self) -> list:
+        """Uids resident in lost slots, awaiting `drain_failed`."""
+        return [u for u, s in self.user_slot.items()
+                if s in self._lost_slots]
+
+    def _poison(self):
+        if self._poison_session is None:
+            def leaf(z):
+                if jnp.issubdtype(z.dtype, jnp.floating):
+                    return jnp.full_like(z, jnp.nan)
+                if jnp.issubdtype(z.dtype, jnp.integer):
+                    return jnp.full_like(z, jnp.iinfo(z.dtype).max)
+                return jnp.ones_like(z)
+            self._poison_session = jax.tree.map(leaf, self._zero_session)
+        return self._poison_session
+
+    def fail_slots(self, slots, poison: bool = True) -> list:
+        """Failure injection: mark `slots` lost; returns the stranded uids.
+
+        With ``poison=True`` (the default) the rows are overwritten with
+        sentinel garbage (NaN float planes, saturated integer planes) —
+        recovery tests that pass with poison on PROVE the drain path reads
+        only `SessionStore` checkpoints, never the dead shard, and that the
+        active mask isolates the garbage from surviving slots' math.
+        """
+        slots = sorted(set(int(s) for s in slots))
+        for s in slots:
+            if not 0 <= s < self.slots:
+                raise ValueError(f"slot {s} out of range [0, {self.slots})")
+        self._lost_slots.update(slots)
+        if poison:
+            for s in slots:
+                self.pool = self._put(self.pool, jnp.int32(s),
+                                      self._poison())
+        return self.stranded_sessions()
+
+    def fail_device(self, device: int, poison: bool = True) -> list:
+        """Mark one device's whole slot shard lost (see `fail_slots`).
+
+        The injection hook the multi-device recovery tests and the drain-
+        latency benchmark drive: everything device `device` owned — resident
+        sessions included — is gone; follow with `drain_failed()` to re-home
+        its sessions onto the surviving shards.
+        """
+        stranded = self.fail_slots(self.device_slots(device), poison=poison)
+        self._m_failures.inc()
+        return stranded
+
+    def drain_failed(self, evict_lru: bool = False) -> list:
+        """Re-home every stranded session onto surviving shards.
+
+        For each uid resident in a lost slot: drop the dead occupancy (the
+        shard is gone — nothing is gathered or persisted from it), then
+        `admit` the uid normally, which restores its last durable snapshot
+        from the `SessionStore`.  Admission only considers healthy slots,
+        so the session lands on a SURVIVING device — and because a session's
+        trajectory is slot- and neighbour-invariant (the pool contract),
+        its continuation is bit-identical to an uninterrupted run from that
+        snapshot.  Steps taken after the last `persist_resident`/evict are
+        lost; each report row says how many.
+
+        Returns a list of dicts: ``{uid, from_slot, to_slot, from_device,
+        to_device, steps_lost}``.  With ``evict_lru=True`` a full pool
+        evicts least-recently-admitted survivors to make room.
+        """
+        report = []
+        with self._m_drain.time(), phase("pool.drain"):
+            for uid in self.stranded_sessions():
+                old_slot = self.user_slot.pop(uid)
+                self.slot_user[old_slot] = None
+                steps_at_fail = int(self._steps[old_slot])
+                self._steps[old_slot] = 0
+                # hygiene (simulation-only: a real dead device is not
+                # writable, but the injected one is): clear the poison so
+                # the checkpointed pool keeps the slots-are-zero-when-
+                # vacant invariant
+                self.pool = self._put(self.pool, jnp.int32(old_slot),
+                                      self._zero_session)
+                new_slot = self.admit(uid, evict_lru=evict_lru)
+                self._m_drained.inc()
+                report.append({
+                    "uid": uid,
+                    "from_slot": old_slot, "to_slot": new_slot,
+                    "from_device": self.slot_device(old_slot),
+                    "to_device": self.slot_device(new_slot),
+                    "steps_lost": steps_at_fail - int(self._steps[new_slot]),
+                })
+        self._m_occupancy.set(len(self.user_slot) / self.slots)
+        return report
+
+    # ---- whole-pool checkpointing (elastic re-mesh) ----------------------
+
+    def save_pool(self, directory: str) -> str:
+        """Checkpoint the WHOLE pool — resident sessions in place — plus the
+        occupancy bookkeeping, in the standard `checkpoint.manager` layout.
+
+        Leaves are stored unsharded, so the checkpoint is topology-free: a
+        pool saved at D devices restores at any D' via `load_pool` (the
+        `distributed.ft.elastic_restore` path).  Stranded sessions must be
+        drained first — their rows are garbage and checkpointing garbage as
+        state would be silent corruption.
+        """
+        stranded = self.stranded_sessions()
+        if stranded:
+            raise RuntimeError(
+                f"cannot checkpoint a pool with stranded sessions "
+                f"{stranded}; run drain_failed() first")
+        from repro.checkpoint.manager import save_checkpoint
+        extra = {
+            "slots": self.slots,
+            "slot_user": list(self.slot_user),
+            "steps": [int(s) for s in self._steps],
+            "admit_seq": [int(s) for s in self._admit_seq],
+            "seq": int(self._seq),
+        }
+        return save_checkpoint(directory, int(self._seq), self.pool,
+                               extra=extra)
+
+    def load_pool(self, directory: str, step: Optional[int] = None) -> None:
+        """Resume a `save_pool` checkpoint INTO this pool, re-laid-out on
+        this pool's mesh.
+
+        The elastic re-mesh path: construct the scheduler at the NEW
+        topology (any device count whose shard evenly divides ``slots``,
+        including unmeshed) and load a checkpoint taken at the old one —
+        leaves are stored unsharded, so restore is a pure device_put onto
+        the new `NamedSharding`s (`distributed.ft.elastic_restore`).
+        Occupancy, per-session step counters, and LRU order resume exactly;
+        all slots come back healthy.
+        """
+        if self.mesh is not None:
+            from repro.distributed import ft as _ft
+            from repro.distributed import sharding as _sharding
+            tree, _, extra = _ft.elastic_restore(
+                directory, self.pool, self.mesh,
+                lambda mesh: _sharding.pool_shardings(mesh, self._axes),
+                step=step)
+        else:
+            from repro.checkpoint.manager import load_checkpoint
+            tree, _, extra = load_checkpoint(directory, self.pool, step=step)
+        if int(extra["slots"]) != self.slots:
+            raise ValueError(
+                f"checkpointed pool has {extra['slots']} slots; this pool "
+                f"has {self.slots} (elastic restore re-meshes devices, not "
+                "the slot count)")
+        self.pool = tree
+        self.slot_user = list(extra["slot_user"])
+        self.user_slot = {u: s for s, u in enumerate(self.slot_user)
+                          if u is not None}
+        self._steps = np.asarray(extra["steps"], np.int64).copy()
+        self._admit_seq = np.asarray(extra["admit_seq"], np.int64).copy()
+        self._seq = int(extra["seq"])
+        self._lost_slots = set()
+        self._poison_session = None
+        self._m_occupancy.set(len(self.user_slot) / self.slots)
 
 
 # ---- the SNN controller fleet ---------------------------------------------
@@ -334,15 +605,23 @@ class FleetScheduler(SessionPool):
       slots:  pool size B; fixes the fleet tensor shape forever.
       store:  `SessionStore` backing eviction/restore; a private in-RAM
               store is created if omitted.
+      mesh:   optional device mesh (see `SessionPool`): the fleet tensors
+              shard over their slot axis and every step/rollout launch
+              lowers under `engine.fleet_spmd` (shard_map) — each device
+              runs the identical engine program on its B/D local slots, so
+              the meshed pool is bit-identical to the unmeshed one on every
+              backend and datapath (tests/test_distributed.py pins it).
     """
 
     def __init__(self, cfg: snn.SNNConfig, theta, slots: int,
                  store: Optional[SessionStore] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 mesh=None):
         self.cfg = cfg
         self.theta = theta
         fleet = snn.init_state(cfg, batch=slots, fleet=True)
-        super().__init__(fleet, _network_axes(fleet), slots, store, registry)
+        super().__init__(fleet, _network_axes(fleet), slots, store, registry,
+                         mesh=mesh)
 
         def _pool_step(fleet, drive, active, teach, seeds):
             # `seeds` are the PER-SESSION step counters (host bookkeeping
@@ -373,6 +652,44 @@ class FleetScheduler(SessionPool):
             return snn.rollout_window(cfg, fleet, theta, window, teach=teach,
                                       active=active, seed=seeds,
                                       telemetry=True)
+
+        def _meshed(core, *, window: bool, tel: bool):
+            # Lower `core` under shard_map over the slot axis
+            # (`engine.fleet_spmd`): the NetworkState is flattened into its
+            # slot-mapped fields; the pool clock `t` rides in REPLICATED
+            # (shard_map with check_rep=False cannot return an unmapped
+            # output, and Pallas carries no replication rule) and advances
+            # OUTSIDE the mapped region — bit-exactly what the unmeshed
+            # step computes, since `t` only feeds the t+k bump here (the
+            # quant rounding streams draw from the per-session seeds).
+            def body(w, v, tr, scl, t, x, active, teach, seeds):
+                st = NetworkState(w=w, v=v, trace=tr, t=t, w_scale=scl)
+                res = core(st, x, active, teach, seeds)
+                ns = res[0]
+                return (ns.w, ns.v, ns.trace, ns.w_scale) + tuple(res[1:])
+
+            x_ax = 1 if window else 0          # (K, B, n) windows vs (B, n)
+            mapped = engine.fleet_spmd(
+                body, mesh,
+                in_axes=(0, 0, 0, 0, None, x_ax, 0, 0, 0),
+                out_axes=(0, 0, 0, 0, x_ax) + ((0,) if tel else ()))
+
+            def run(fleet, x, active, teach, seeds):
+                out = mapped(fleet.w, fleet.v, fleet.trace, fleet.w_scale,
+                             fleet.t, x, active, teach, seeds)
+                k = x.shape[0] if window else 1
+                ns = NetworkState(w=out[0], v=out[1], trace=out[2],
+                                  t=fleet.t + k, w_scale=out[3])
+                return (ns,) + tuple(out[4:])
+
+            return run
+
+        if mesh is not None:
+            _pool_step = _meshed(_pool_step, window=False, tel=False)
+            _pool_rollout = _meshed(_pool_rollout, window=True, tel=False)
+            _pool_step_tel = _meshed(_pool_step_tel, window=False, tel=True)
+            _pool_rollout_tel = _meshed(_pool_rollout_tel, window=True,
+                                        tel=True)
 
         # Fixed shapes everywhere => each of these traces exactly once per
         # signature; `compiled_programs()` exposes the per-entry-point

@@ -131,6 +131,38 @@ class TestStraggler:
         mon = StragglerMonitor(warmup=5)
         assert not any(mon.observe(t) for t in (0.1, 99.0, 0.1, 50.0, 0.1))
 
+    def test_warmup_primes_sample_variance(self):
+        """After warmup, `var` is the unbiased sample variance of the
+        warmup observations (Welford), not an unnormalized M2 sum — the
+        historical bug kept the M2 sum in `var`, so the first post-warmup
+        std was sqrt(sum) and every EWMA step shrank it further."""
+        vals = [0.10, 0.13, 0.09, 0.15, 0.11]
+        mon = StragglerMonitor(warmup=len(vals))
+        for v in vals:
+            mon.observe(v)
+        assert mon.mean == pytest.approx(np.mean(vals))
+        assert mon.var == pytest.approx(np.var(vals, ddof=1))
+
+    def test_warmup_clamped_to_two_observations(self):
+        """warmup=0/1 must not let the second observation flag off a
+        degenerate (single-sample) std of 1e-9."""
+        for w in (0, 1):
+            mon = StragglerMonitor(warmup=w, k=3.0)
+            assert not mon.observe(0.1)
+            assert not mon.observe(0.1001)   # would flag pre-clamp
+            assert mon.observe(10.0)         # genuine outlier still flags
+
+    def test_flags_with_realistic_variance(self):
+        """A 2x step-time spike over a noisy-but-stable baseline flags;
+        baseline noise within the spread does not (the sample-variance
+        priming keeps std honest instead of biased low)."""
+        rng = np.random.RandomState(0)
+        mon = StragglerMonitor(warmup=10, k=4.0)
+        flagged = [mon.observe(0.1 + 0.005 * rng.rand())
+                   for _ in range(50)]
+        assert not any(flagged)
+        assert mon.observe(0.2)
+
 
 class TestFaultTolerantRunner:
     def _runner(self, tmp_path, poison_at=None):
@@ -186,3 +218,14 @@ class TestFaultTolerantRunner:
 def test_loss_is_bad():
     assert loss_is_bad(float("nan")) and loss_is_bad(float("inf"))
     assert not loss_is_bad(3.5)
+
+
+def test_loss_is_bad_arrays():
+    """Per-shard / per-session loss vectors: the reduction is any-NaN —
+    one poisoned shard poisons the step like one poisoned scalar."""
+    assert loss_is_bad(np.array([1.0, np.nan, 3.0]))
+    assert loss_is_bad(jnp.array([1.0, -np.inf]))
+    assert loss_is_bad(np.full((2, 3), np.nan))
+    assert not loss_is_bad(np.zeros(4))
+    assert not loss_is_bad(jnp.arange(6.0).reshape(2, 3))
+    assert not loss_is_bad(jnp.float32(2.0))

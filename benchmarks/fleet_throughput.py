@@ -220,8 +220,18 @@ def _device_cell(args) -> int:
         assert all(r["to_device"] != 0 for r in report), report
         # the drained pool must still serve
         jax.block_until_ready(sched.pool_step(dict(drives), timesteps=k))
+        # reconcile the metrics registry against the drain's own event log:
+        # the counters are the externally scraped record of this incident,
+        # so they must agree with what the benchmark just observed
+        snap = sched.metrics.snapshot()
+        failures = snap["pool_device_failures_total"]["value"]
+        drained = snap["pool_drained_sessions_total"]["value"]
+        assert failures == 1.0, snap
+        assert drained == float(len(report)), (drained, len(report))
         cell.update(drain_ms=drain_s * 1e3, drained=len(report),
-                    steps_lost=int(sum(r["steps_lost"] for r in report)))
+                    steps_lost=int(sum(r["steps_lost"] for r in report)),
+                    device_failures_total=failures,
+                    drained_sessions_total=drained)
     else:
         # a 1-device pool has no surviving shard to drain onto
         cell.update(drain_ms=None, drained=0, steps_lost=0)

@@ -26,6 +26,10 @@
   obs_overhead      obs      fleet telemetry cost gate: <= 5% throughput
                              overhead at B=256, exactly one extra program
                              per entry point, watchdog-silent churn
+  obs_health        obs      session-health gate: every detector catches
+                             its injected fault, zero false positives on
+                             clean churn (fleet + LM), recorder overhead
+                             <= 5% at B=256, one program per record variant
   roofline          Roofline table from the dry-run artifacts (if present)
 
 ``--check`` is the bench DRIFT GATE (CI): after the run, every checked-in
@@ -102,6 +106,9 @@ _DIMENSIONS = {
     # sweep that silently drops a D cell fails like a lost backend — the
     # smoke sweep must force the same counts the checked-in artifact has
     "devices": ("devices", "device_counts"),
+    # session-health detectors (obs_health's detection table): a detector
+    # whose injected-fault row silently disappears fails the gate
+    "detector": ("detector", "detectors"),
 }
 
 
@@ -180,9 +187,10 @@ def main(argv=None):
     failures = []
 
     from benchmarks import (adaptation, engine_breakdown, fleet_throughput,
-                            latency, mnist_throughput, obs_overhead,
-                            quant_parity, robustness, rollout_fused,
-                            roofline, serving_churn, serving_lm)
+                            latency, mnist_throughput, obs_health,
+                            obs_overhead, quant_parity, robustness,
+                            rollout_fused, roofline, serving_churn,
+                            serving_lm)
 
     for name, fn in (
         ("engine_breakdown", lambda: engine_breakdown.main(quick=quick)),
@@ -210,6 +218,8 @@ def main(argv=None):
          lambda: robustness.main(["--smoke"] if quick else [])),
         ("obs_overhead",
          lambda: obs_overhead.main(["--smoke"] if quick else [])),
+        ("obs_health",
+         lambda: obs_health.main(["--smoke"] if quick else [])),
         ("roofline_single", lambda: roofline.main(["--mesh", "single"])),
         ("roofline_multi", lambda: roofline.main(["--mesh", "multi"])),
     ):

@@ -12,6 +12,11 @@ Designed for the 1000+-node posture:
   * elastic_restore() reshards any checkpoint onto any new mesh: storage is
     unsharded (checkpoint/manager.py), so restore = device_put onto the new
     NamedShardings.  Works across device-count changes (elastic scaling).
+
+Both the runner and the monitor accept an `obs.MetricsRegistry`: resume /
+rollback / straggler events and step times land in the same `snapshot()` /
+Prometheus surface the serving pools export (previously they lived only in
+the in-process `events` list, invisible to scraping).
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.obs import MetricsRegistry
 
 
 def loss_is_bad(loss) -> bool:
@@ -96,7 +102,8 @@ class FaultTolerantRunner:
 
     def __init__(self, step_fn: Callable, ckpt: CheckpointManager,
                  save_every: int = 100, max_rollbacks: int = 3,
-                 shardings: Any = None):
+                 shardings: Any = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.step_fn = step_fn
         self.ckpt = ckpt
         self.save_every = save_every
@@ -106,12 +113,23 @@ class FaultTolerantRunner:
         self.rollbacks = 0
         self.skipped_steps: list[int] = []
         self.events: list[dict] = []
+        self.metrics = registry
+        if registry is not None:
+            self._m_rollbacks = registry.counter("ft_rollbacks_total")
+            self._m_stragglers = registry.counter("ft_stragglers_total")
+            self._m_resumes = registry.counter("ft_resumes_total")
+            self._m_step_s = registry.histogram("ft_step_seconds")
+        else:
+            self._m_rollbacks = self._m_stragglers = None
+            self._m_resumes = self._m_step_s = None
 
     def restore_or_init(self, state):
         """Resume from the latest checkpoint if one exists."""
         if self.ckpt.latest_step() is not None:
             state, step, _ = self.ckpt.restore(state, shardings=self.shardings)
             self.events.append({"kind": "resume", "step": step})
+            if self._m_resumes is not None:
+                self._m_resumes.inc()
             return state, step
         return state, 0
 
@@ -143,6 +161,8 @@ class FaultTolerantRunner:
                 self.rollbacks += 1
                 self.events.append({"kind": "rollback", "step": step,
                                     "loss": float(loss)})
+                if self._m_rollbacks is not None:
+                    self._m_rollbacks.inc()
                 if self.rollbacks > self.max_rollbacks:
                     raise RuntimeError(
                         f"{self.rollbacks} rollbacks exceed budget; aborting")
@@ -152,9 +172,13 @@ class FaultTolerantRunner:
                 step = min(good_step, step)
                 continue
 
+            if self._m_step_s is not None:
+                self._m_step_s.observe(dt)
             if self.monitor.observe(dt):
                 self.events.append({"kind": "straggler", "step": step,
                                     "dt": dt, "mean": self.monitor.mean})
+                if self._m_stragglers is not None:
+                    self._m_stragglers.inc()
 
             state = new_state
             step += 1

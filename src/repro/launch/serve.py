@@ -35,7 +35,8 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_local_mesh
 from repro.launch.steps import make_decode_step, make_prefill
 from repro.models import factory
-from repro.obs import MetricsRegistry, phase
+from repro.obs import (AdapterFlightRecorder, HealthConfig, MetricsRegistry,
+                       phase, serve_metrics)
 from repro.obs import watchdog as _watchdog
 from repro.serving import AdapterPool, SessionStore
 
@@ -43,7 +44,7 @@ from repro.serving import AdapterPool, SessionStore
 def generate(cfg, params, prompts, max_len: int, gen: int,
              temperature: float = 0.0, seed: int = 0, adapters=None,
              registry=None, watch=None, metrics_json=None,
-             metrics_interval: int = 0):
+             metrics_interval: int = 0, flight=None):
     """Greedy/temperature sampling loop.  prompts (B, S) int32.
 
     Returns (tokens (B, gen), per-step latencies, final cache).  The decode
@@ -67,6 +68,12 @@ def generate(cfg, params, prompts, max_len: int, gen: int,
     `metrics_json` + ``metrics_interval > 0``: dump a registry snapshot to
     that path every `metrics_interval` decode steps (and the caller dumps
     once more at exit).
+
+    `flight`: optional `obs.AdapterFlightRecorder` (requires a plastic
+    adapter in the cache).  Each decode step feeds the adapter state into
+    the device-side ring + detectors.  The decode jit DONATES the cache,
+    so the "before" view is a jitted materialized copy (`a + 0`) taken
+    each step — aliasing the donated buffers would read freed memory.
     """
     prefill = jax.jit(make_prefill(cfg, max_len))
     decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
@@ -82,12 +89,26 @@ def generate(cfg, params, prompts, max_len: int, gen: int,
         # per-row scatter loop
         cache["adapter"] = adapters.pool
     key = jax.random.PRNGKey(seed)
+    if flight is not None and "adapter" not in cache:
+        raise ValueError("flight recording needs a plastic adapter in the "
+                         "cache (cfg.plastic_adapter=True)")
+    # decode donates `cache`, so the recorder's before-view must be a real
+    # copy; `a + 0` materializes fresh buffers (compiles once, pre-arm)
+    snap = jax.jit(lambda t: jax.tree.map(lambda a: a + jnp.zeros_like(a), t))
     outs, lats = [], []
     tok = _sample(logits, key, temperature)
     # Warm-up: compile against the real avals without consuming the (donated)
     # cache buffers or advancing the generation state; the loop calls the
     # compiled executable, so no iteration pays trace+compile.
     decode_c = decode.lower(params, cache, tok[:, None]).compile()
+    if flight is not None and adapters is not None:
+        # align the restored pool's layout with the decode step's OUTPUT
+        # adapter: from iteration 1 on the loop feeds decode outputs back
+        # in, so without this the flight snapshot's input shardings change
+        # once after the first step and snap/_update re-lower post-arm
+        _, out_cache_sh = decode_c.output_shardings
+        cache["adapter"] = jax.device_put(cache["adapter"],
+                                          out_cache_sh["adapter"])
     armed = False
     try:
         for i in range(gen):
@@ -95,12 +116,15 @@ def generate(cfg, params, prompts, max_len: int, gen: int,
                 watch.arm()
                 armed = True
             outs.append(tok)
+            before = snap(cache["adapter"]) if flight is not None else None
             t0 = time.perf_counter()
             with phase("serve.decode_step"):
                 logits, cache = decode_c(params, cache, tok[:, None])
                 logits.block_until_ready()
             dt = time.perf_counter() - t0
             lats.append(dt)
+            if flight is not None:
+                flight.observe(before, cache["adapter"])
             if m_decode is not None:
                 m_decode.observe(dt)
             key = jax.random.fold_in(key, i)
@@ -162,6 +186,15 @@ def main(argv=None):
     ap.add_argument("--metrics-interval", type=int, default=0,
                     help="with --metrics-json: also dump every N decode "
                          "steps (0 = final snapshot only)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the metrics registry over HTTP on this "
+                         "port for the run's duration (/metrics Prometheus "
+                         "text, /metrics.json snapshot; 0 = ephemeral)")
+    ap.add_argument("--flight-dir", default=None,
+                    help="with --plastic: run the adapter flight recorder "
+                         "over the decode loop and write one incident "
+                         "bundle (JSON + NPZ ring dump) per flagged "
+                         "stream into this directory")
     args = ap.parse_args(argv)
     if (args.session_dir or args.users) and not args.plastic:
         ap.error("--session-dir/--users require --plastic (sessions are "
@@ -172,6 +205,9 @@ def main(argv=None):
     if args.adapter_quant and not args.plastic:
         ap.error("--adapter-quant quantizes the plastic adapter pool; "
                  "pass --plastic too")
+    if args.flight_dir and not args.plastic:
+        ap.error("--flight-dir records the plastic adapter's health "
+                 "channels; pass --plastic too")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if args.plastic:
@@ -199,6 +235,16 @@ def main(argv=None):
         registry = MetricsRegistry()
         watch = _watchdog.install(registry)
         watch.reset()
+        metrics_server = None
+        if args.metrics_port is not None:
+            metrics_server = serve_metrics(registry, port=args.metrics_port)
+        flight = None
+        if args.flight_dir is not None:
+            from repro.models import plastic as _plastic
+            flight = AdapterFlightRecorder(
+                HealthConfig(), slots=args.batch,
+                qcfg=_plastic.QUANT if args.adapter_quant else None,
+                mesh=mesh)
         store = users = pool = None
         if args.session_dir is not None:
             store = SessionStore(root=args.session_dir, capacity=args.batch,
@@ -225,7 +271,8 @@ def main(argv=None):
                                      adapters=pool, registry=registry,
                                      watch=watch,
                                      metrics_json=args.metrics_json,
-                                     metrics_interval=args.metrics_interval)
+                                     metrics_interval=args.metrics_interval,
+                                     flight=flight)
         tokens_learned = None
         if pool is not None:
             tokens_learned = [int(pool._steps[pool.user_slot[u]])
@@ -248,9 +295,20 @@ def main(argv=None):
             "users": users, "resumed": store.restores,
             "created": store.creates,
             "tokens_learned": tokens_learned}
+    if flight is not None:
+        uid_by_slot = dict(enumerate(users)) if users else None
+        incidents = flight.dump(args.flight_dir, uid_by_slot=uid_by_slot,
+                                registry=registry, watchdog=watch)
+        out["flight"] = {
+            "dir": args.flight_dir, "steps_recorded": flight.pos,
+            "flagged_slots": flight.flagged_slots(),
+            "incidents": incidents}
     if args.metrics_json:
         registry.to_json(args.metrics_json)
         out["metrics_json"] = args.metrics_json
+    if metrics_server is not None:
+        out["metrics_port"] = metrics_server.server_address[1]
+        metrics_server.shutdown()
     print(json.dumps(out, indent=1))
     return 0
 

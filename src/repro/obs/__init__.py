@@ -21,18 +21,46 @@ not from offline benchmarks):
     assertion into a runtime monitor (warn + counter + offending program
     name on any unexpected cache miss while armed).
 
+On top of the point-in-time layers, the SESSION-HEALTH subsystem adds
+history and action (the detect-and-recover loop):
+
+  * `obs.recorder`   — the device-side FLIGHT RECORDER: a fixed-shape
+    ``(B, W, C)`` ring of per-slot telemetry channels updated inside the
+    jitted pool-step/decode programs (a `record=` trace variant exactly
+    like `telemetry=`; off-path bitwise identity pinned), plus the
+    incident dump exporter (`serve.py --flight-dir`).
+  * `obs.health`     — streaming anomaly detectors over the channels
+    (EWMA z-score, absolute bound, stuck-at, dead-session) folded into
+    the same launch, with per-detector hysteresis and latched flags; the
+    schedulers' `remediate()` turns the verdict into quarantine →
+    `SessionStore` rollback → re-admit.
+
 `benchmarks/obs_overhead.py` gates the cost: telemetry-on fleet stepping
 within 5% of telemetry-off at B=256, exactly one extra program per used
-entry point, watchdog silent under churn.
+entry point, watchdog silent under churn.  `benchmarks/obs_health.py`
+gates the health loop: recorder-on within 5% at B=256, injected anomalies
+detected per detector, zero false positives on clean churn.
 """
+from repro.obs.health import (CHANNELS, DETECTORS, HealthConfig, HealthState,
+                              health_update, init_health)
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
-                               REGISTRY, phase)
+                               REGISTRY, phase, serve_metrics)
+from repro.obs.recorder import (AdapterFlightRecorder, RecorderState,
+                                adapter_weight_norm, dump_incident,
+                                init_recorder, network_weight_norm,
+                                recorder_update, reset_slot, unroll_ring)
 from repro.obs.telemetry import (SAT_FRACTION, FleetTelemetry,
                                  adapter_telemetry, record_fleet_telemetry)
 from repro.obs.watchdog import RecompileWatchdog, watchdog
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY", "phase",
+    "serve_metrics",
     "SAT_FRACTION", "FleetTelemetry", "adapter_telemetry",
     "record_fleet_telemetry", "RecompileWatchdog", "watchdog",
+    "CHANNELS", "DETECTORS", "HealthConfig", "HealthState", "health_update",
+    "init_health",
+    "AdapterFlightRecorder", "RecorderState", "adapter_weight_norm",
+    "dump_incident", "init_recorder", "network_weight_norm",
+    "recorder_update", "reset_slot", "unroll_ring",
 ]

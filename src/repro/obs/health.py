@@ -1,0 +1,218 @@
+"""Streaming anomaly detectors over the flight-recorder channels.
+
+Session health is evaluated ON DEVICE, inside the same jitted pool-step /
+decode program that produced the telemetry (`obs.recorder` threads these
+functions through the schedulers' ``record=`` trace variants): the verdict
+is a pure function of fixed-shape ``(B, ...)`` detector state, so stepping
+a recorded pool costs zero host syncs and zero extra launches.  The HOST
+only reads the latched verdict when it decides to act (quarantine /
+rollback — `serving.scheduler.SessionPool.remediate`); detectors are
+traced array ops, remediation is host policy (DESIGN.md §Health).
+
+Four detectors, one hysteresis streak each (single-step transients never
+flag — a detector must fire ``hysteresis[d]`` CONSECUTIVE recorded steps):
+
+  ewma_z   |x - EWMA mean| / sqrt(EWMA var + z_floor^2) > z_threshold on
+           any channel, after ``warmup`` recorded steps (the EWMA needs
+           history before a z-score means anything).  Catches runaway
+           Hebbian growth / spike-rate blowups relative to the session's
+           OWN baseline.  The baseline update is WINSORIZED (see
+           `health_update`): firing samples still teach, clipped to
+           ±z_threshold·sigma, so a recurring clean burst re-teaches the
+           variance within a couple of fires while a real fault out-runs
+           the clipped learning for the whole hysteresis streak.
+  bound    any channel outside its absolute ``bounds`` corridor — the
+           deployment-wide sanity envelope (e.g. saturation fraction
+           pinned at 1.0, weight-norm drift past the corridor).
+  stuck    the whole channel vector within ``stuck_eps`` of the previous
+           recorded step's, ``hysteresis`` steps running (after warmup):
+           telemetry that stops moving is a dead datapath, not a healthy
+           session.  The default eps of 0.0 means bitwise-frozen only.
+  dead     spike rate (channel 0) below ``dead_floor`` after warmup — the
+           dead-session / spike-collapse detector.
+
+Flags LATCH (``HealthState.flagged`` is sticky per detector) so the host
+policy can run at any cadence without racing a verdict that un-fires; the
+scheduler clears a slot's rows on admit/evict/rollback.
+
+Inactive slots are fully gated: their channels arrive as exact zeros (the
+recorder multiplies by the same active mask that bit-freezes their state),
+no detector fires, streaks reset, EWMA state holds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Channel schema of the flight-recorder ring (obs/recorder.py): the three
+# FleetTelemetry signals plus the weight-norm drift vs admission snapshot.
+CHANNELS = ("spike_rate", "mean_abs_dw", "sat_frac", "wnorm_drift")
+
+# Detector order — indexes `HealthConfig.hysteresis`, `HealthState.streaks`
+# and `HealthState.flagged` columns.
+DETECTORS = ("ewma_z", "bound", "stuck", "dead")
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Static detector configuration (hashable: part of the jit closure).
+
+    window     ring length W of the flight recorder (steps of history kept
+               per slot for post-mortem dumps; detectors are streaming and
+               do not re-scan the ring).
+    ewma_alpha EWMA smoothing for the per-channel mean/variance baseline.
+    z_threshold / z_floor
+               ewma_z fires when |x - mean| exceeds z_threshold *
+               sqrt(var + z_floor^2); the floor stops a near-constant
+               channel's vanishing variance from turning numeric jitter
+               into infinite z-scores.  The default (0.03, in channel
+               units — rates live in [0, 1]) is sized to the quantized
+               channel granularity of SMALL pools: an 8-neuron adapter's
+               spike rate moves in 1/8 steps, and a floor well under that
+               granularity would z-flag every legitimate burst against a
+               quiet baseline.
+    warmup     recorded steps before ewma_z / stuck / dead may fire (the
+               baseline is meaningless on a fresh admission).
+    bounds     per-channel (lo, hi) absolute corridor, `CHANNELS` order.
+               Defaults are generous deployment-envelope values tuned to
+               never fire on the serving benchmarks' clean churn
+               (benchmarks/obs_health.py gates the false-positive rate).
+    stuck_eps  max per-channel move still counting as "unchanged".
+    dead_floor spike-rate floor for the dead-session detector.
+    hysteresis per-detector consecutive-fire count before flagging,
+               `DETECTORS` order.
+    """
+
+    window: int = 64
+    ewma_alpha: float = 0.2
+    z_threshold: float = 6.0
+    z_floor: float = 0.03
+    warmup: int = 8
+    bounds: tuple = ((0.0, 8.0), (0.0, 4.0), (0.0, 1.01), (0.0, 64.0))
+    stuck_eps: float = 0.0
+    dead_floor: float = 1e-5
+    hysteresis: tuple = (3, 3, 8, 8)
+
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        if len(self.bounds) != len(CHANNELS):
+            raise ValueError(
+                f"bounds needs one (lo, hi) per channel {CHANNELS}, got "
+                f"{len(self.bounds)}")
+        if len(self.hysteresis) != len(DETECTORS):
+            raise ValueError(
+                f"hysteresis needs one entry per detector {DETECTORS}, "
+                f"got {len(self.hysteresis)}")
+        if any(h < 1 for h in self.hysteresis):
+            raise ValueError(f"hysteresis entries must be >= 1, got "
+                             f"{self.hysteresis}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HealthState:
+    """Per-slot streaming detector state — every leaf slot-major ``(B, ...)``
+    (no shared leaves, so the state shards cleanly over the pool's
+    ``"data"`` axis and rides through `engine.fleet_spmd` at axis 0).
+
+    ewma_mean / ewma_var   per-channel EWMA baseline ``(B, C) float32``
+    last                   previous recorded channel vector ``(B, C)``
+    streaks                consecutive-fire counts ``(B, D) int32``
+    flagged                LATCHED per-detector flags ``(B, D) bool``
+    steps                  recorded (active) steps since reset ``(B,) int32``
+    """
+
+    ewma_mean: jax.Array
+    ewma_var: jax.Array
+    last: jax.Array
+    streaks: jax.Array
+    flagged: jax.Array
+    steps: jax.Array
+
+
+def init_health(cfg: HealthConfig, slots: int) -> HealthState:
+    c, d = len(CHANNELS), len(DETECTORS)
+    return HealthState(
+        ewma_mean=jnp.zeros((slots, c), jnp.float32),
+        ewma_var=jnp.zeros((slots, c), jnp.float32),
+        last=jnp.zeros((slots, c), jnp.float32),
+        streaks=jnp.zeros((slots, d), jnp.int32),
+        flagged=jnp.zeros((slots, d), jnp.bool_),
+        steps=jnp.zeros((slots,), jnp.int32))
+
+
+def health_update(cfg: HealthConfig, h: HealthState, x: jax.Array,
+                  active: jax.Array) -> tuple:
+    """One streaming detector step: ``(new_state, verdict (B,) bool)``.
+
+    `x` is the recorded channel vector ``(B, C) float32`` (already gated to
+    exact zeros on inactive slots); `active` the pool's ``(B,)`` mask.
+    Pure array ops — traced into the recording pool-step program, never a
+    separate launch.  Detection runs against the PRE-update baseline (this
+    step's sample must not defend itself by dragging the mean toward the
+    anomaly first), and the baseline is WINSORIZED-robust: once warm, the
+    EWMA update uses d clipped per channel to ±z_threshold·sigma.  A naive
+    (unclipped) mean chases a sustained anomaly within ~1/alpha steps and
+    the z-score collapses before any hysteresis streak completes; a HARD
+    robust gate (firing samples never teach) has the opposite failure — a
+    legitimately bursty channel whose quiet warmup taught a near-zero
+    variance fires forever, because the baseline can never learn the
+    burst is normal.  Winsorizing splits the difference exactly: each
+    firing step still grows the variance by a bounded factor
+    ((1-a)(1+a·z_threshold²)), so a real fault with a large z out-runs the
+    clipped learning for the full hysteresis streak, while a recurring
+    clean burst stops firing after a couple of occurrences.  Samples that
+    fire the absolute `bound` corridor are excluded outright — values
+    outside the deployment envelope should never define "normal", and
+    bound does not depend on the baseline, so it cannot lock itself out.
+    """
+    act = jnp.asarray(active).astype(jnp.bool_)
+    x = x.astype(jnp.float32)
+    warm = h.steps >= cfg.warmup
+
+    # ewma_z: z-score vs the slot's own running baseline
+    z = jnp.abs(x - h.ewma_mean) / jnp.sqrt(h.ewma_var + cfg.z_floor ** 2)
+    fire_z = warm & jnp.any(z > cfg.z_threshold, axis=-1)
+
+    # bound: the absolute deployment corridor
+    lo = jnp.asarray([b[0] for b in cfg.bounds], jnp.float32)
+    hi = jnp.asarray([b[1] for b in cfg.bounds], jnp.float32)
+    fire_bound = jnp.any((x < lo) | (x > hi), axis=-1)
+
+    # stuck: the whole channel vector stopped moving
+    fire_stuck = warm & jnp.all(jnp.abs(x - h.last) <= cfg.stuck_eps,
+                                axis=-1)
+
+    # dead: spike collapse
+    fire_dead = warm & (x[:, CHANNELS.index("spike_rate")] < cfg.dead_floor)
+
+    fires = jnp.stack([fire_z, fire_bound, fire_stuck, fire_dead],
+                      axis=-1) & act[:, None]
+    streaks = jnp.where(fires, h.streaks + 1, 0)
+    hyst = jnp.asarray(cfg.hysteresis, jnp.int32)
+    flagged = h.flagged | (streaks >= hyst)
+
+    # baseline update: inactive slots hold their state bit-exactly;
+    # out-of-corridor samples never teach; once warm the deviation is
+    # winsorized per channel to ±z_threshold·sigma (clip is a no-op for
+    # any channel that did not fire), so a sustained fault cannot drag
+    # the mean under itself within a hysteresis streak but a recurring
+    # clean burst re-teaches the variance after a couple of fires
+    gate = act[:, None]
+    learn = (act & ~fire_bound)[:, None]
+    d = x - h.ewma_mean
+    cap = cfg.z_threshold * jnp.sqrt(h.ewma_var + cfg.z_floor ** 2)
+    d = jnp.where(warm[:, None], jnp.clip(d, -cap, cap), d)
+    a = cfg.ewma_alpha
+    new = HealthState(
+        ewma_mean=jnp.where(learn, h.ewma_mean + a * d, h.ewma_mean),
+        ewma_var=jnp.where(learn, (1.0 - a) * (h.ewma_var + a * d * d),
+                           h.ewma_var),
+        last=jnp.where(gate, x, h.last),
+        streaks=streaks,
+        flagged=flagged,
+        steps=h.steps + act.astype(jnp.int32))
+    return new, jnp.any(flagged, axis=-1)

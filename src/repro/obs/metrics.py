@@ -24,6 +24,11 @@ event log and the CI obs-smoke job uploads as an artifact).
 step, decode window) with `jax.profiler.TraceAnnotation`, so device
 profiles attribute time to scheduling events; it degrades to a no-op
 timer-only context when the profiler is unavailable.
+
+`serve_metrics(registry, port)` exposes a registry over stdlib
+`http.server` for scraping (`serve.py --metrics-port`): every metric holds
+its own lock across its full export, so a scrape racing the serving thread
+always sees a consistent (count, sum, buckets) triple.
 """
 from __future__ import annotations
 
@@ -32,6 +37,7 @@ import math
 import threading
 import time
 from contextlib import contextmanager
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Iterable, Optional
 
 # Default le-buckets: 100 us .. ~100 s in half-decade steps — spans warm
@@ -60,10 +66,11 @@ class Counter:
 
     @property
     def value(self) -> float:
-        return self._value
+        with self._lock:
+            return self._value
 
     def snapshot(self) -> dict:
-        return {"type": self.kind, "value": self._value}
+        return {"type": self.kind, "value": self.value}
 
 
 class Gauge:
@@ -86,10 +93,11 @@ class Gauge:
 
     @property
     def value(self) -> float:
-        return self._value
+        with self._lock:
+            return self._value
 
     def snapshot(self) -> dict:
-        return {"type": self.kind, "value": self._value}
+        return {"type": self.kind, "value": self.value}
 
 
 class Histogram:
@@ -128,35 +136,48 @@ class Histogram:
         finally:
             self.observe(time.perf_counter() - t0)
 
+    def _export(self) -> tuple:
+        """One consistent (counts, sum, count, raw) copy under the lock —
+        the only way readers see this histogram, so a scrape racing
+        `observe` never mixes a new count with an old sum."""
+        with self._lock:
+            return list(self._counts), self._sum, self._count, \
+                list(self._raw)
+
+    @staticmethod
+    def _pct(raw: list, p: float) -> float:
+        if not raw:
+            return 0.0
+        s = sorted(raw)
+        k = min(len(s) - 1, max(0, int(math.ceil(p / 100.0 * len(s))) - 1))
+        return s[k]
+
     @property
     def count(self) -> int:
-        return self._count
+        return self._export()[2]
 
     @property
     def sum(self) -> float:
-        return self._sum
+        return self._export()[1]
 
     @property
     def mean(self) -> float:
-        return self._sum / self._count if self._count else 0.0
+        _, tot, n, _ = self._export()
+        return tot / n if n else 0.0
 
     def percentile(self, p: float) -> float:
         """p in [0, 100] from the raw reservoir (exact while it fits)."""
-        with self._lock:
-            if not self._raw:
-                return 0.0
-            s = sorted(self._raw)
-            k = min(len(s) - 1, max(0, int(math.ceil(p / 100.0 * len(s))) - 1))
-            return s[k]
+        return self._pct(self._export()[3], p)
 
     def snapshot(self) -> dict:
+        counts, tot, n, raw = self._export()
         cum, out = 0, {}
-        for le, c in zip(self.buckets, self._counts):
+        for le, c in zip(self.buckets, counts):
             cum += c
             out[f"{le:g}"] = cum
-        return {"type": self.kind, "count": self._count, "sum": self._sum,
-                "mean": self.mean, "p50": self.percentile(50),
-                "p99": self.percentile(99), "buckets": out}
+        return {"type": self.kind, "count": n, "sum": tot,
+                "mean": tot / n if n else 0.0, "p50": self._pct(raw, 50),
+                "p99": self._pct(raw, 99), "buckets": out}
 
 
 class MetricsRegistry:
@@ -215,13 +236,14 @@ class MetricsRegistry:
                 lines.append(f"# HELP {m.name} {m.help}")
             lines.append(f"# TYPE {m.name} {m.kind}")
             if isinstance(m, Histogram):
+                counts, tot, n, _ = m._export()
                 cum = 0
-                for le, c in zip(m.buckets, m._counts):
+                for le, c in zip(m.buckets, counts):
                     cum += c
                     lines.append(f'{m.name}_bucket{{le="{le:g}"}} {cum}')
-                lines.append(f'{m.name}_bucket{{le="+Inf"}} {m.count}')
-                lines.append(f"{m.name}_sum {m.sum:g}")
-                lines.append(f"{m.name}_count {m.count}")
+                lines.append(f'{m.name}_bucket{{le="+Inf"}} {n}')
+                lines.append(f"{m.name}_sum {tot:g}")
+                lines.append(f"{m.name}_count {n}")
             else:
                 lines.append(f"{m.name} {m.value:g}")
         return "\n".join(lines) + "\n"
@@ -255,3 +277,47 @@ def phase(name: str, histogram: Optional[Histogram] = None):
     finally:
         if histogram is not None:
             histogram.observe(time.perf_counter() - t0)
+
+
+# ---- scrape endpoint --------------------------------------------------------
+
+
+def serve_metrics(registry: MetricsRegistry, port: int = 0,
+                  host: str = "127.0.0.1") -> ThreadingHTTPServer:
+    """Expose `registry` over HTTP on a daemon thread; returns the server.
+
+    ``GET /metrics`` (or ``/``) serves `prometheus_text()`; ``GET
+    /metrics.json`` serves the JSON `snapshot()`.  ``port=0`` binds an
+    ephemeral port — read it back from ``server.server_address[1]``.  The
+    thread is a daemon and never blocks shutdown; call ``server.shutdown()``
+    for a deterministic stop (tests do).
+    """
+
+    class _Handler(BaseHTTPRequestHandler):
+        def do_GET(self):                          # noqa: N802 (stdlib API)
+            path = self.path.split("?", 1)[0]
+            if path in ("/", "/metrics"):
+                body = registry.prometheus_text().encode()
+                ctype = "text/plain; version=0.0.4; charset=utf-8"
+            elif path == "/metrics.json":
+                body = json.dumps(registry.snapshot(), sort_keys=True,
+                                  indent=1).encode()
+                ctype = "application/json"
+            else:
+                self.send_error(404)
+                return
+            self.send_response(200)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *args):              # silence per-request spam
+            pass
+
+    server = ThreadingHTTPServer((host, int(port)), _Handler)
+    server.daemon_threads = True
+    thread = threading.Thread(target=server.serve_forever,
+                              name="metrics-http", daemon=True)
+    thread.start()
+    return server

@@ -1,0 +1,293 @@
+"""Device-side flight recorder: per-slot telemetry history + incident dumps.
+
+The black box for the serving pools: a fixed-shape ``(B, W, C)`` ring
+buffer of per-slot telemetry channels (`health.CHANNELS` — spike rate,
+mean |dw|, saturation fraction, weight-norm drift vs admission snapshot)
+written INSIDE the existing jitted pool-step / decode programs as pure
+array ops.  Recording is a static trace variant exactly like PR 8's
+``telemetry=`` flag: the schedulers' ``record=`` flag dispatches one extra
+stable executable per entry point, the off-path program stays byte-
+identical to the unrecorded build, and a recorded step performs NO host
+sync — the streaming detectors (`obs.health`) fold into the same launch
+and the host reads the latched verdict only when it decides to act.
+
+Ring mechanics: every slot records in lockstep (occupancy is a runtime
+mask, not a shape), so ONE host-side cursor serves the whole pool — the
+scheduler passes it in as a traced scalar operand (like the fleet clock,
+it is replicated state under `engine.fleet_spmd`; every `RecorderState`
+leaf is slot-major, so the state shards over the ``"data"`` axis at
+axis 0 with no shared leaves).
+
+`dump_incident` is the post-mortem exit: one JSON (verdicts, streaks,
+config, registry snapshot, watchdog state) + one NPZ (the unrolled ring
+and detector baselines) per flagged session — the `serve.py --flight-dir`
+artifact format documented in README §Session health.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.health import (CHANNELS, DETECTORS, HealthConfig, HealthState,
+                              health_update, init_health)
+from repro.obs.telemetry import adapter_telemetry
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RecorderState:
+    """Flight-recorder device state — every leaf slot-major ``(B, ...)``.
+
+    ring     ``(B, W, C) float32`` channel history (W = cfg.window); row
+             ``pos % W`` is overwritten each recorded step.
+    wnorm0   ``(B,) float32`` admission-time weight-norm snapshot, captured
+             ON DEVICE at the slot's first recorded step (host and device
+             reduction orders never have to agree).
+    health   streaming detector state (`obs.health.HealthState`).
+    """
+
+    ring: jax.Array
+    wnorm0: jax.Array
+    health: HealthState
+
+
+def init_recorder(cfg: HealthConfig, slots: int) -> RecorderState:
+    return RecorderState(
+        ring=jnp.zeros((slots, cfg.window, len(CHANNELS)), jnp.float32),
+        wnorm0=jnp.zeros((slots,), jnp.float32),
+        health=init_health(cfg, slots))
+
+
+def recorder_update(cfg: HealthConfig, rec: RecorderState,
+                    channels: jax.Array, pos: jax.Array,
+                    active: jax.Array) -> tuple:
+    """One recorded step: ``(new_state, verdict (B,) bool)``.
+
+    `channels` is the raw ``(B, C)`` vector in `health.CHANNELS` order
+    with the LAST column carrying the CURRENT weight norm (not yet a
+    drift): the recorder owns the admission snapshot, so the drift is
+    computed here — ``wnorm0`` latches the first recorded active value and
+    channel 3 becomes ``|wnorm - wnorm0|``.  `pos` is the traced global
+    ring cursor.  Pure array ops; gates everything by `active` so vacant
+    and frozen slots write exact zeros and never perturb their detector
+    state.
+    """
+    act = jnp.asarray(active).astype(jnp.bool_)
+    channels = channels.astype(jnp.float32)
+    wnorm = channels[:, -1]
+    first = act & (rec.health.steps == 0)
+    wnorm0 = jnp.where(first, wnorm, rec.wnorm0)
+    x = jnp.concatenate(
+        [channels[:, :-1], jnp.abs(wnorm - wnorm0)[:, None]], axis=-1)
+    x = jnp.where(act[:, None], x, 0.0)
+    ring = rec.ring.at[:, pos % cfg.window].set(x)
+    health, verdict = health_update(cfg, rec.health, x, act)
+    return RecorderState(ring=ring, wnorm0=wnorm0, health=health), verdict
+
+
+def reset_slot(rec: RecorderState, slot: jax.Array) -> RecorderState:
+    """Zero one slot's rows across every recorder leaf (traced slot index —
+    one executable serves all slots).  The scheduler calls this on
+    admit/evict/rollback so a slot's history always belongs to exactly one
+    session tenancy."""
+    return jax.tree.map(
+        lambda a: a.at[slot].set(jnp.zeros(a.shape[1:], a.dtype)), rec)
+
+
+# ---- weight-norm channels ---------------------------------------------------
+
+
+def network_weight_norm(state, quant: bool) -> jax.Array:
+    """Per-slot mean |w| summed over layers for a fleet `NetworkState`
+    (``(B,) float32``; int8 planes are dequantized by their per-slot
+    scale so both datapaths report in float weight units)."""
+    tot = None
+    for i, w in enumerate(state.w):
+        if quant:
+            a = jnp.abs(w.astype(jnp.int32)).astype(jnp.float32) \
+                .mean(axis=(-2, -1)) * state.w_scale[i]
+        else:
+            a = jnp.abs(w.astype(jnp.float32)).mean(axis=(-2, -1))
+        tot = a if tot is None else tot + a
+    return tot.astype(jnp.float32)
+
+
+def adapter_weight_norm(adapter: dict, quant: bool) -> jax.Array:
+    """Per-slot mean |w_fast| for an LM adapter cache (``(B,) float32``)."""
+    w = adapter["w_fast"]
+    if quant:
+        return jnp.abs(w.astype(jnp.int32)).astype(jnp.float32) \
+            .mean(axis=(-2, -1)) * adapter["w_scale"]
+    return jnp.abs(w.astype(jnp.float32)).mean(axis=(-2, -1))
+
+
+# ---- post-mortem export -----------------------------------------------------
+
+
+def unroll_ring(ring_row: np.ndarray, pos: int, window: int) -> np.ndarray:
+    """The valid portion of one slot's ring, oldest -> newest ``(n, C)``.
+
+    `pos` is the recorder's global cursor (total recorded steps); only
+    ``min(pos, window)`` rows have ever been written."""
+    n = min(int(pos), window)
+    if n == 0:
+        return ring_row[:0]
+    return np.roll(ring_row, -(int(pos) % window), axis=0)[-n:]
+
+
+def _safe_uid(uid: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", str(uid)) or "session"
+
+
+def dump_incident(directory: str, *, uid: str, slot: int,
+                  rec: RecorderState, cfg: HealthConfig, pos: int,
+                  registry=None, watchdog=None,
+                  extra: Optional[dict] = None) -> str:
+    """Write one incident's post-mortem bundle; returns the JSON path.
+
+    Two files per incident, ``incident_<uid>_p<pos>.{json,npz}``: the JSON
+    carries everything human/jq-readable — per-detector latched flags and
+    streaks, the detector config, a metrics-registry snapshot, and the
+    recompile-watchdog state at dump time — while the NPZ carries the
+    arrays (unrolled ring history plus the EWMA baselines the verdict was
+    computed against).
+    """
+    os.makedirs(directory, exist_ok=True)
+    slot = int(slot)
+    host = jax.device_get(rec)
+    h: HealthState = host.health
+    stem = f"incident_{_safe_uid(uid)}_p{int(pos)}"
+    npz_path = os.path.join(directory, stem + ".npz")
+    np.savez(
+        npz_path,
+        ring=unroll_ring(np.asarray(host.ring[slot]), pos, cfg.window),
+        ewma_mean=np.asarray(h.ewma_mean[slot]),
+        ewma_var=np.asarray(h.ewma_var[slot]),
+        last=np.asarray(h.last[slot]),
+        streaks=np.asarray(h.streaks[slot]),
+        flagged=np.asarray(h.flagged[slot]),
+        wnorm0=np.asarray(host.wnorm0[slot]))
+    flags = np.asarray(h.flagged[slot])
+    doc = {
+        "uid": str(uid),
+        "slot": slot,
+        "pos": int(pos),
+        "channels": list(CHANNELS),
+        "detectors": list(DETECTORS),
+        "verdict": bool(flags.any()),
+        "flagged": {d: bool(flags[i]) for i, d in enumerate(DETECTORS)},
+        "streaks": {d: int(h.streaks[slot][i])
+                    for i, d in enumerate(DETECTORS)},
+        "recorded_steps": int(h.steps[slot]),
+        "wnorm0": float(host.wnorm0[slot]),
+        "config": dataclasses.asdict(cfg),
+        "npz": os.path.basename(npz_path),
+        "registry": registry.snapshot() if registry is not None else None,
+        "watchdog": ({
+            "compiles": watchdog.compiles,
+            "violations": watchdog.violations,
+            "signatures": list(watchdog.violation_signatures),
+        } if watchdog is not None else None),
+    }
+    if extra:
+        doc.update(extra)
+    path = os.path.join(directory, stem + ".json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    return path
+
+
+# ---- the lockstep-batch recorder (launch/serve.py) --------------------------
+
+
+class AdapterFlightRecorder:
+    """Flight recorder for the classic lockstep batch driver.
+
+    `launch/serve.py` decodes a fixed batch through one AOT-compiled step
+    (no scheduler in the loop), so this helper owns the recorder state and
+    a single jitted update that recovers the adapter channels from cache
+    deltas (`obs.telemetry.adapter_telemetry`) and folds the detectors in —
+    one extra launch per decode step, no host sync.  ``observe(before,
+    after)`` per step, then ``dump(directory, ...)`` writes one incident
+    bundle per flagged slot.
+
+    `qcfg`: the adapter's quant config (``models.plastic.QUANT``) for int8
+    pools, None for float32.
+
+    `mesh`: when the decode step runs under a mesh, the recorder state is
+    committed to a replicated NamedSharding up front — otherwise the first
+    ``observe`` takes uncommitted arrays and returns mesh-sharded ones,
+    and the second call re-lowers the update for the new input shardings
+    (one extra executable the recompile watchdog would flag).
+    """
+
+    def __init__(self, cfg: HealthConfig, slots: int, qcfg=None,
+                 trace_decay: float = 0.8, mesh=None):
+        self.cfg = cfg
+        self.slots = int(slots)
+        self.rec = init_recorder(cfg, self.slots)
+        if mesh is not None:
+            self.rec = jax.device_put(
+                self.rec, jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()))
+        self.pos = 0
+
+        def _update(rec, before, after, active, pos):
+            tel = adapter_telemetry(before, after, active, qcfg=qcfg,
+                                    trace_decay=trace_decay)
+            wnorm = adapter_weight_norm(after, quant=qcfg is not None)
+            ch = jnp.stack([tel.spike_rate, tel.mean_abs_dw, tel.sat_frac,
+                            wnorm], axis=-1)
+            return recorder_update(cfg, rec, ch, pos, active)
+
+        self._update = jax.jit(_update)
+
+    def observe(self, before: dict, after: dict, active=None) -> None:
+        """Record one decode step from the adapter cache before/after."""
+        if active is None:
+            active = jnp.ones((self.slots,), jnp.float32)
+        self.rec, _ = self._update(self.rec, before, after,
+                                   jnp.asarray(active),
+                                   jnp.int32(self.pos))
+        self.pos += 1
+
+    def flagged_slots(self) -> list:
+        """Slots whose latched verdict is unhealthy (host read on demand)."""
+        flags = np.asarray(jax.device_get(self.rec.health.flagged))
+        return [int(s) for s in np.nonzero(flags.any(axis=-1))[0]]
+
+    def dump(self, directory: str, uid_by_slot=None, registry=None,
+             watchdog=None) -> list:
+        """One incident bundle per flagged slot; returns the JSON paths.
+
+        Always writes ``flight_summary.json`` (steps recorded, flagged
+        slots, detector config) so a clean flight still leaves proof the
+        recorder ran — a missing directory is "recording never started",
+        an empty incident list is "recorded and healthy".
+        """
+        uid_by_slot = uid_by_slot or {}
+        flagged = self.flagged_slots()
+        os.makedirs(directory, exist_ok=True)
+        summary = {
+            "steps_recorded": self.pos,
+            "slots": self.slots,
+            "flagged_slots": flagged,
+            "channels": list(CHANNELS),
+            "detectors": list(DETECTORS),
+            "config": dataclasses.asdict(self.cfg),
+        }
+        with open(os.path.join(directory, "flight_summary.json"), "w") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+        return [dump_incident(
+                    directory,
+                    uid=uid_by_slot.get(s, f"slot{s}"), slot=s,
+                    rec=self.rec, cfg=self.cfg, pos=self.pos,
+                    registry=registry, watchdog=watchdog)
+                for s in flagged]

@@ -24,7 +24,8 @@ from repro.scenarios.vector_env import VectorEnv, VecEnvState
 from repro.scenarios.perturb import (ActuatorDropout, GoalSwitch, ParamShift,
                                      Perturbation, Schedule, SensorNoise,
                                      compile_schedule, empty_schedule)
-from repro.scenarios.harness import (ClosedLoop, RolloutResult,
+from repro.scenarios.harness import (ANOMALIES, AnomalyPreset, ClosedLoop,
+                                     RolloutResult, inject_anomaly,
                                      make_closed_loop, run_closed_loop)
 from repro.scenarios.metrics import adaptation_metrics, ablation_summary
 from repro.scenarios.presets import (GATE_SCENARIOS, SCENARIOS, ScenarioSpec,

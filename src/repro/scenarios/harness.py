@@ -207,3 +207,61 @@ def run_closed_loop(env: Env, scfg: snn.SNNConfig, theta, key: jax.Array, *,
     """
     return make_closed_loop(env, scfg, batch=batch, steps=steps).run(
         theta, key, **kwargs)
+
+
+# ---- session-health anomaly presets -----------------------------------------
+#
+# Deterministic host-side input corruptions for exercising the session-health
+# detectors (obs.health): each preset maps to the detector that should catch
+# it.  These run OUTSIDE the jitted rollout — they corrupt the drive a
+# scheduler feeds a session, the way a faulty sensor or client would, so the
+# device-side program (and its compile count) is untouched.
+
+
+@dataclasses.dataclass(frozen=True)
+class AnomalyPreset:
+    """One injectable input fault.
+
+    kind: "drive_blowout" (drive scaled by `gain` — trips ewma_z / bound),
+    "dead_input" (drive zeroed — activity collapses, trips dead), or
+    "stuck_input" (drive frozen at a constant pattern — recorded channels
+    stop moving, trips stuck).  `noise_std` adds deterministic per-step
+    Gaussian noise on top (seeded, so runs are reproducible)."""
+
+    kind: str
+    gain: float = 1.0
+    noise_std: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ANOMALIES:
+            raise ValueError(f"unknown anomaly kind {self.kind!r}; "
+                             f"expected one of {sorted(ANOMALIES)}")
+
+
+ANOMALIES = frozenset({"drive_blowout", "dead_input", "stuck_input"})
+
+
+def inject_anomaly(preset: AnomalyPreset, drive, t: int, seed: int = 0):
+    """Corrupt one session's drive vector at control step `t` (host-side).
+
+    Returns a numpy float32 array of drive's shape.  Deterministic in
+    (preset, drive, t, seed) — the same fault stream replays exactly,
+    which the health tests rely on to pin detection latency."""
+    import numpy as np
+
+    x = np.asarray(drive, np.float32)
+    if preset.kind == "drive_blowout":
+        out = x * np.float32(preset.gain)
+    elif preset.kind == "dead_input":
+        out = np.zeros_like(x)
+    elif preset.kind == "stuck_input":
+        # frozen pattern: derived from the seed only, NOT from (drive, t),
+        # so every step presents the identical stuck value
+        out = np.random.RandomState(seed).rand(*x.shape).astype(np.float32)
+    else:  # pragma: no cover - __post_init__ rejects unknown kinds
+        raise ValueError(preset.kind)
+    if preset.noise_std > 0.0 and preset.kind != "stuck_input":
+        rng = np.random.RandomState((seed * 1000003 + t) & 0x7FFFFFFF)
+        out = out + rng.normal(0.0, preset.noise_std,
+                               x.shape).astype(np.float32)
+    return out

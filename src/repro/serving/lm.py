@@ -38,6 +38,8 @@ from repro.models import factory, plastic
 from repro.models.config import ModelConfig
 from repro.models.layers import init_from_plan
 from repro.obs import MetricsRegistry, phase
+from repro.obs import recorder as _recorder
+from repro.obs.health import HealthConfig
 from repro.obs.telemetry import (FleetTelemetry, adapter_telemetry,
                                  record_fleet_telemetry)
 from repro.serving.scheduler import SessionPool, uniform_axes
@@ -70,7 +72,7 @@ class LMScheduler(SessionPool):
     def __init__(self, model, params, slots: int, max_len: int,
                  store: Optional[SessionStore] = None,
                  registry: Optional[MetricsRegistry] = None,
-                 mesh=None):
+                 mesh=None, health: Optional[HealthConfig] = None):
         if not isinstance(model, factory.Model):
             model = factory.build(model)
         if model.cfg.input_mode != "tokens":
@@ -84,7 +86,8 @@ class LMScheduler(SessionPool):
         pool = {"cache": model.pool_cache(slots, max_len),
                 "tok": jnp.zeros((slots,), jnp.int32)}
         axes = {"cache": model.cache_axes(max_len), "tok": 0}
-        super().__init__(pool, axes, slots, store, registry, mesh=mesh)
+        super().__init__(pool, axes, slots, store, registry, mesh=mesh,
+                         health=health)
 
         # pin the decode outputs' pool layout (GSPMD would otherwise be
         # free to re-layout the updated cache away from the slot sharding)
@@ -151,6 +154,32 @@ class LMScheduler(SessionPool):
                 sat_frac=tel.sat_frac, occupancy=tel.occupancy)
             return new_pool, logits, tel
 
+        hcfg = health
+        adapter_quant = bool(self.cfg.adapter_quant)
+
+        def _record(tel, adapter, rec, pos, active):
+            # record trace VARIANTS: telemetry channels + adapter weight
+            # norm -> flight-recorder ring + streaming detectors, fused
+            # into the decode launch (no host sync; the verdict latches
+            # on device until flagged_sessions/remediate reads it)
+            wnorm = _recorder.adapter_weight_norm(adapter, adapter_quant)
+            ch = jnp.stack([tel.spike_rate, tel.mean_abs_dw, tel.sat_frac,
+                            wnorm], axis=-1)
+            return _recorder.recorder_update(hcfg, rec, ch, pos, active)
+
+        def _pool_step_rec(params, pool, active, rec, pos):
+            new_pool, nxt, tel = _pool_step_tel(params, pool, active)
+            rec2, verdict = _record(tel, new_pool["cache"]["adapter"],
+                                    rec, pos, active)
+            return new_pool, nxt, tel, rec2, verdict
+
+        def _pool_window_rec(params, pool, tokens, active, rec, pos):
+            new_pool, logits, tel = _pool_window_tel(params, pool, tokens,
+                                                     active)
+            rec2, verdict = _record(tel, new_pool["cache"]["adapter"],
+                                    rec, pos, active)
+            return new_pool, logits, tel, rec2, verdict
+
         # Fixed shapes => one executable per op (per window length for the
         # windowed path); `compiled_programs()` names the per-entry-point
         # totals the churn benchmark and compile audit pin.  Telemetry
@@ -161,12 +190,16 @@ class LMScheduler(SessionPool):
         self._window_fn = jax.jit(_pool_window)
         self._step_tel_fn = jax.jit(_pool_step_tel)
         self._window_tel_fn = jax.jit(_pool_window_tel)
+        self._step_rec_fn = jax.jit(_pool_step_rec)
+        self._window_rec_fn = jax.jit(_pool_window_rec)
         self._jitted.update({
             "prefill": self._prefill,
             "decode_step": self._step_fn,
             "decode_window": self._window_fn,
             "decode_step_telemetry": self._step_tel_fn,
             "decode_window_telemetry": self._window_tel_fn,
+            "decode_step_record": self._step_rec_fn,
+            "decode_window_record": self._window_rec_fn,
         })
 
     # ---- session construction --------------------------------------------
@@ -209,7 +242,7 @@ class LMScheduler(SessionPool):
                 f"{self.cfg.name}: telemetry reads the plastic adapter "
                 "cache; this model has cfg.plastic_adapter=False")
 
-    def step(self, telemetry: bool = False):
+    def step(self, telemetry: bool = False, record: bool = False):
         """One greedy decode token for every admitted stream (one launch).
 
         Each stream consumes its pending token and produces the next;
@@ -221,8 +254,23 @@ class LMScheduler(SessionPool):
         recovered from its cache delta inside the same launch — and
         returns ``(tokens, FleetTelemetry)``, recording summary gauges
         into ``self.metrics`` under the ``adapter_`` prefix.
+
+        ``record=True`` (plastic-adapter models with
+        ``health=HealthConfig(...)``) dispatches the record trace variant:
+        the same channels plus the adapter weight norm feed the flight
+        recorder and the streaming detectors inside the decode launch — no
+        host sync; combine with ``telemetry=True`` for the tuple return.
         """
-        if telemetry:
+        if record:
+            self._require_adapter()
+            rec = self._ensure_recorder()
+            with phase("lm.decode_step"):
+                self.pool, nxt, tel, self._rec, self.last_verdict = \
+                    self._step_rec_fn(self.params, self.pool,
+                                      self._active_mask(), rec,
+                                      jnp.int32(self._rec_pos))
+            self._rec_pos += 1
+        elif telemetry:
             self._require_adapter()
             with phase("lm.decode_step"):
                 self.pool, nxt, tel = self._step_tel_fn(
@@ -240,7 +288,7 @@ class LMScheduler(SessionPool):
         return toks, tel
 
     def decode_window(self, windows: Mapping[str, jax.Array],
-                      telemetry: bool = False):
+                      telemetry: bool = False, record: bool = False):
         """K teacher-forced tokens per stream, ONE fused launch per window.
 
         `windows` maps uid -> ``(K,)`` int32 (same K for every stream —
@@ -257,6 +305,10 @@ class LMScheduler(SessionPool):
         ``(logits, FleetTelemetry)`` with window-normalized adapter health
         (net weight motion / recovered event mass over the K steps),
         recording ``adapter_*`` gauges into ``self.metrics``.
+
+        ``record=True`` (with ``health=HealthConfig(...)``) records the
+        window's normalized channels as ONE flight-recorder observation
+        and one detector update inside the same launch.
         """
         missing = [u for u in self.user_slot if u not in windows]
         extra = [u for u in windows if u not in self.user_slot]
@@ -271,7 +323,17 @@ class LMScheduler(SessionPool):
         tokens = np.zeros((self.slots, k), np.int32)
         for uid, w in windows.items():
             tokens[self.user_slot[uid]] = np.asarray(w, np.int32)
-        if telemetry:
+        if record:
+            self._require_adapter()
+            rec = self._ensure_recorder()
+            with phase("lm.decode_window"):
+                self.pool, logits, tel, self._rec, self.last_verdict = \
+                    self._window_rec_fn(self.params, self.pool,
+                                        jnp.asarray(tokens),
+                                        self._active_mask(), rec,
+                                        jnp.int32(self._rec_pos))
+            self._rec_pos += 1
+        elif telemetry:
             self._require_adapter()
             with phase("lm.decode_window"):
                 self.pool, logits, tel = self._window_tel_fn(
@@ -305,7 +367,7 @@ class AdapterPool(SessionPool):
     def __init__(self, cfg: ModelConfig, slots: int,
                  store: Optional[SessionStore] = None,
                  registry: Optional[MetricsRegistry] = None,
-                 mesh=None):
+                 mesh=None, health: Optional[HealthConfig] = None):
         if not cfg.plastic_adapter:
             raise ValueError(f"{cfg.name}: AdapterPool needs "
                              "cfg.plastic_adapter=True")
@@ -313,7 +375,7 @@ class AdapterPool(SessionPool):
         pool = init_from_plan(plastic.plan_cache(cfg, slots),
                               jax.random.PRNGKey(0))
         super().__init__(pool, uniform_axes(pool), slots, store, registry,
-                         mesh=mesh)
+                         mesh=mesh, health=health)
 
     def _session_factory(self):
         # fresh sessions keep plan inits (quant rows: non-zero w_scale)

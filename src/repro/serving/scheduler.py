@@ -39,6 +39,17 @@ state bit-exactly, a session's trajectory is invariant to WHICH slot it
 occupies, to its neighbours, and to evict -> persist -> re-admit
 round-trips — the bit-identity contract `tests/test_serving.py` and
 `tests/test_serving_lm.py` pin on the xla and pallas-interpret backends.
+
+SESSION HEALTH (opt-in via ``health=HealthConfig(...)``): pools carry a
+device-side flight recorder + streaming detectors (`obs.recorder` /
+`obs.health`) as a third static trace variant (``record=``, exactly like
+``telemetry=``), and the base class turns the latched verdict into action:
+`flagged_sessions` → `quarantine` (the slot joins the same runtime-mask
+freeze vacant and lost slots use) → `rollback` (re-admit from the last
+healthy `SessionStore` checkpoint — `health_checkpoint` rides the
+`persist_resident` path) → bit-identical continuation.  `remediate()` runs
+the whole loop, optionally dumping a flight-recorder incident bundle per
+casualty first.
 """
 from __future__ import annotations
 
@@ -53,6 +64,9 @@ import numpy as np
 from repro.core import engine, snn
 from repro.core.engine import NetworkState
 from repro.obs import MetricsRegistry, phase
+from repro.obs import recorder as _recorder
+from repro.obs.health import HealthConfig
+from repro.obs.watchdog import watchdog as _compile_watchdog
 from repro.obs.telemetry import FleetTelemetry, record_fleet_telemetry
 from repro.serving.sessions import SessionStore
 
@@ -151,12 +165,18 @@ class SessionPool:
              D-device fleet with the SAME executables-per-entry-point
              counts as the single-device pool (zero recompiles under
              churn).  ``slots`` must divide evenly by the device count.
+      health: optional `obs.health.HealthConfig` enabling the session-
+             health subsystem: subclasses gain ``record=True`` stepping
+             (flight recorder + on-device detectors fused into the pool
+             step), and this base gains `flagged_sessions` / `quarantine` /
+             `rollback` / `remediate`.  Without it, recording raises and
+             the pool is byte-for-byte the pre-health pool.
     """
 
     def __init__(self, pool, axes, slots: int,
                  store: Optional[SessionStore] = None,
                  registry: Optional[MetricsRegistry] = None,
-                 mesh=None):
+                 mesh=None, health: Optional[HealthConfig] = None):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         self.slots = slots
@@ -211,10 +231,32 @@ class SessionPool:
         # rows are garbage) — `drain_failed` re-homes their sessions.
         self._lost_slots: set = set()
         self._poison_session = None                  # built on first failure
+        # session health: quarantined slots are occupied-but-frozen (same
+        # runtime-mask freeze as vacant/lost); the flight recorder state is
+        # built lazily on the first record= step so a health-enabled pool
+        # that never records allocates nothing
+        self.health_cfg = health
+        self._quarantined: set = set()
+        self._rec = None                             # obs.recorder state
+        self._rec_pos = 0                            # global ring cursor
+        self._rec_shardings = None
+        self.last_verdict = None                     # (B,) bool, last record
+
+        def _rec_reset(rec, slot):
+            out = _recorder.reset_slot(rec, slot)
+            if self._rec_shardings is not None:
+                out = jax.tree.map(
+                    jax.lax.with_sharding_constraint, out,
+                    self._rec_shardings)
+            return out
+
+        # traced slot index -> one executable clears any slot's history
+        self._reset_rec = jax.jit(_rec_reset, donate_argnums=(0,))
         # compile_count sources, keyed by entry-point name so the compile
         # audit (`compiled_programs`) can name the program that drifted
         self._jitted: Dict[str, Any] = {
-            "slot_put": self._put, "slot_take": self._take}
+            "slot_put": self._put, "slot_take": self._take,
+            "recorder_reset": self._reset_rec}
         self._m_admit = self.metrics.histogram(
             "pool_admit_seconds", "admit latency (checkout + swap-in)")
         self._m_evict = self.metrics.histogram(
@@ -233,6 +275,15 @@ class SessionPool:
         self._m_drain = self.metrics.histogram(
             "pool_drain_seconds", "drain latency (restore + re-admit, per "
             "drain_failed call)")
+        self._m_quarantined = self.metrics.counter(
+            "pool_quarantined_total", "sessions quarantined as unhealthy")
+        self._m_rollbacks = self.metrics.counter(
+            "pool_rollbacks_total",
+            "quarantined sessions rolled back to their last healthy "
+            "checkpoint")
+        self._m_health_ckpts = self.metrics.counter(
+            "pool_health_checkpoints_total",
+            "health_checkpoint() sweeps (rollback restore points)")
 
     # ---- occupancy -------------------------------------------------------
 
@@ -266,12 +317,14 @@ class SessionPool:
         return range(device * per, (device + 1) * per)
 
     def _active_mask(self) -> jax.Array:
-        # lost slots are masked out like vacant ones: a stranded session is
-        # frozen (and its garbage shard ignored) until drain_failed re-homes
-        # it — the mask is a runtime operand, so failure never recompiles
+        # lost AND quarantined slots are masked out like vacant ones: a
+        # stranded session is frozen until drain_failed re-homes it, an
+        # unhealthy one until rollback restores it — the mask is a runtime
+        # operand, so neither failure nor quarantine ever recompiles
         mask = np.zeros(self.slots, np.bool_)
         for s, u in enumerate(self.slot_user):
-            mask[s] = u is not None and s not in self._lost_slots
+            mask[s] = (u is not None and s not in self._lost_slots
+                       and s not in self._quarantined)
         return jnp.asarray(mask)
 
     def compiled_programs(self) -> Dict[str, int]:
@@ -329,7 +382,10 @@ class SessionPool:
         healthy = [s for s in range(self.slots) if s not in self._lost_slots]
         free = [s for s in healthy if self.slot_user[s] is None]
         if not free:
-            candidates = [s for s in healthy if self.slot_user[s] is not None]
+            # quarantined residents are not LRU-evictable: evicting one
+            # would persist its diverged state over the healthy checkpoint
+            candidates = [s for s in healthy if self.slot_user[s] is not None
+                          and s not in self._quarantined]
             if not evict_lru or not candidates:
                 lost = (f" ({len(self._lost_slots)} slots lost to device "
                         "failure)" if self._lost_slots else "")
@@ -356,6 +412,10 @@ class SessionPool:
         self._steps[slot] = step
         self._admit_seq[slot] = self._seq
         self._seq += 1
+        # the slot's flight-recorder history belongs to the PREVIOUS tenant;
+        # clear it so detectors baseline on this session from step 0
+        if self._rec is not None:
+            self._rec = self._reset_rec(self._rec, jnp.int32(slot))
         self._m_admissions.inc()
         self._m_occupancy.set(len(self.user_slot) / self.slots)
         return slot
@@ -371,6 +431,12 @@ class SessionPool:
                 f"{self.slot_device(slot)}); its rows are gone — recover it "
                 "with drain_failed(), which restores the last durable "
                 "checkpoint, instead of evicting garbage")
+        if slot in self._quarantined:
+            raise RuntimeError(
+                f"session {uid!r} in slot {slot} is quarantined as "
+                "unhealthy; evicting would persist its diverged state over "
+                "the last healthy checkpoint — recover it with rollback() "
+                "or remediate() instead")
         self.user_slot.pop(uid)
         with self._m_evict.time(), phase("pool.evict"):
             with phase("pool.swap_out"):
@@ -383,6 +449,8 @@ class SessionPool:
             self.pool = self._put(self.pool, jnp.int32(slot),
                                   self._zero_session)
         self._steps[slot] = 0
+        if self._rec is not None:
+            self._rec = self._reset_rec(self._rec, jnp.int32(slot))
         self.evictions += 1
         self._m_evictions.inc()
         self._m_occupancy.set(len(self.user_slot) / self.slots)
@@ -407,7 +475,9 @@ class SessionPool:
         """
         n = 0
         for uid, slot in list(self.user_slot.items()):
-            if slot in self._lost_slots:
+            # quarantined rows are diverged state — persisting one would
+            # clobber the very checkpoint rollback needs
+            if slot in self._lost_slots or slot in self._quarantined:
                 continue
             user = self._take(self.pool, jnp.int32(slot))
             user = self._finalize_session(user, int(self._steps[slot]))
@@ -505,6 +575,133 @@ class SessionPool:
         self._m_occupancy.set(len(self.user_slot) / self.slots)
         return report
 
+    # ---- session health: detect -> quarantine -> rollback ----------------
+
+    @property
+    def quarantined_slots(self) -> frozenset:
+        """Slots frozen by `quarantine` (occupied, masked out, awaiting
+        rollback)."""
+        return frozenset(self._quarantined)
+
+    def _ensure_recorder(self):
+        """Build the flight-recorder state on first use (meshed pools place
+        it with the same contiguous slot-block `NamedSharding` as the pool
+        itself, so the record-variant step needs no resharding)."""
+        if self.health_cfg is None:
+            raise ValueError(
+                "this pool was built without health=HealthConfig(...); "
+                "recording and remediation are unavailable")
+        if self._rec is None:
+            rec = _recorder.init_recorder(self.health_cfg, self.slots)
+            if self.mesh is not None:
+                from repro.distributed import sharding as _sharding
+                self._rec_shardings = _sharding.pool_shardings(
+                    self.mesh, jax.tree.map(lambda _: 0, rec))
+                rec = jax.device_put(rec, self._rec_shardings)
+            self._rec = rec
+        return self._rec
+
+    def health_checkpoint(self) -> int:
+        """Durably snapshot every HEALTHY resident session — the restore
+        point `rollback` recovers to.  Rides `persist_resident` (lost and
+        quarantined slots are skipped), so the cadence/cost profile is the
+        drain-safety checkpoint's; steps since the last call are the blast
+        radius of an incident.  Returns the number persisted."""
+        n = self.persist_resident()
+        self._m_health_ckpts.inc()
+        return n
+
+    def flagged_sessions(self) -> list:
+        """Uids whose latched device-side verdict is unhealthy (slot order).
+
+        The one host read of the health loop: a single ``(B, D)`` bool
+        gather, on demand — never per step.  Lost and already-quarantined
+        slots are excluded (they are some OTHER remediation's business).
+        """
+        if self._rec is None:
+            return []
+        flags = np.asarray(
+            jax.device_get(self._rec.health.flagged)).any(axis=-1)
+        return [u for s, u in enumerate(self.slot_user)
+                if u is not None and flags[s]
+                and s not in self._lost_slots
+                and s not in self._quarantined]
+
+    def quarantine(self, uid: str) -> int:
+        """Freeze `uid`'s slot via the runtime active mask (no recompiles,
+        no data movement): its state stops evolving bit-exactly, exactly
+        like a vacant slot's, until `rollback` re-homes it.  Returns the
+        quarantined slot index."""
+        slot = self.user_slot.get(uid)
+        if slot is None:
+            raise KeyError(f"session {uid!r} is not in the pool")
+        if slot in self._lost_slots:
+            raise RuntimeError(
+                f"session {uid!r} sits in LOST slot {slot}; use "
+                "drain_failed(), not quarantine")
+        self._quarantined.add(slot)
+        self._m_quarantined.inc()
+        return slot
+
+    def rollback(self, uid: str, evict_lru: bool = False) -> dict:
+        """Re-admit a quarantined session from its last healthy checkpoint.
+
+        Mirrors the device-loss drain, and deliberately shares its
+        machinery: drop the diverged occupancy (nothing is gathered or
+        persisted from it), zero the slot, clear its flight-recorder rows,
+        then `admit(uid)` — which restores the last durable snapshot from
+        the `SessionStore`, so the continuation is bit-identical to a
+        manual evict-before-incident -> re-admit of the same checkpoint
+        (the incident drill `tests/test_health.py` pins).  Steps since the
+        last `health_checkpoint`/evict are lost; the report says how many.
+
+        Returns ``{uid, from_slot, to_slot, steps_lost}``.
+        """
+        slot = self.user_slot.get(uid)
+        if slot is None:
+            raise KeyError(f"session {uid!r} is not in the pool")
+        if slot not in self._quarantined:
+            raise RuntimeError(
+                f"session {uid!r} (slot {slot}) is not quarantined; "
+                "rollback only recovers quarantined sessions — call "
+                "quarantine(uid) first (or remediate(), which does both)")
+        steps_at_flag = int(self._steps[slot])
+        self.user_slot.pop(uid)
+        self.slot_user[slot] = None
+        self._steps[slot] = 0
+        self.pool = self._put(self.pool, jnp.int32(slot),
+                              self._zero_session)
+        self._quarantined.discard(slot)
+        if self._rec is not None:
+            self._rec = self._reset_rec(self._rec, jnp.int32(slot))
+        new_slot = self.admit(uid, evict_lru=evict_lru)
+        self._m_rollbacks.inc()
+        return {"uid": uid, "from_slot": slot, "to_slot": new_slot,
+                "steps_lost": steps_at_flag - int(self._steps[new_slot])}
+
+    def remediate(self, evict_lru: bool = False,
+                  flight_dir: Optional[str] = None) -> list:
+        """The automated health loop: quarantine every flagged session,
+        optionally dump its flight-recorder incident bundle, and roll it
+        back to the last healthy checkpoint.  Returns one `rollback`
+        report per casualty (with an ``"incident"`` path when dumping).
+        Safe to call at any cadence — flags latch on device, and a clean
+        pool is a no-op."""
+        reports = []
+        for uid in self.flagged_sessions():
+            slot = self.quarantine(uid)
+            incident = None
+            if flight_dir is not None:
+                incident = _recorder.dump_incident(
+                    flight_dir, uid=uid, slot=slot, rec=self._rec,
+                    cfg=self.health_cfg, pos=self._rec_pos,
+                    registry=self.metrics, watchdog=_compile_watchdog)
+            report = self.rollback(uid, evict_lru=evict_lru)
+            if incident is not None:
+                report["incident"] = incident
+            reports.append(report)
+        return reports
+
     # ---- whole-pool checkpointing (elastic re-mesh) ----------------------
 
     def save_pool(self, directory: str) -> str:
@@ -522,6 +719,14 @@ class SessionPool:
             raise RuntimeError(
                 f"cannot checkpoint a pool with stranded sessions "
                 f"{stranded}; run drain_failed() first")
+        sick = [u for u, s in self.user_slot.items()
+                if s in self._quarantined]
+        if sick:
+            # load_pool restarts with an empty quarantine set, which would
+            # silently unfreeze diverged state as healthy
+            raise RuntimeError(
+                f"cannot checkpoint a pool with quarantined sessions "
+                f"{sick}; run remediate() first")
         from repro.checkpoint.manager import save_checkpoint
         extra = {
             "slots": self.slots,
@@ -569,6 +774,12 @@ class SessionPool:
         self._seq = int(extra["seq"])
         self._lost_slots = set()
         self._poison_session = None
+        # recorder state is not checkpointed (detector baselines are cheap
+        # to rebuild and meaningless across a re-mesh): restart clean
+        self._quarantined = set()
+        self._rec = None
+        self._rec_pos = 0
+        self.last_verdict = None
         self._m_occupancy.set(len(self.user_slot) / self.slots)
 
 
@@ -616,12 +827,12 @@ class FleetScheduler(SessionPool):
     def __init__(self, cfg: snn.SNNConfig, theta, slots: int,
                  store: Optional[SessionStore] = None,
                  registry: Optional[MetricsRegistry] = None,
-                 mesh=None):
+                 mesh=None, health: Optional[HealthConfig] = None):
         self.cfg = cfg
         self.theta = theta
         fleet = snn.init_state(cfg, batch=slots, fleet=True)
         super().__init__(fleet, _network_axes(fleet), slots, store, registry,
-                         mesh=mesh)
+                         mesh=mesh, health=health)
 
         def _pool_step(fleet, drive, active, teach, seeds):
             # `seeds` are the PER-SESSION step counters (host bookkeeping
@@ -652,6 +863,35 @@ class FleetScheduler(SessionPool):
             return snn.rollout_window(cfg, fleet, theta, window, teach=teach,
                                       active=active, seed=seeds,
                                       telemetry=True)
+
+        quant = cfg.quant is not None
+        hcfg = health
+
+        def _record(ns, res_tail, rec, pos, active):
+            # shared tail of the record trace VARIANTS: telemetry channels
+            # + weight norm -> flight-recorder ring + streaming detectors,
+            # all fused into the same program (no extra launch, no host
+            # sync — the verdict stays on device until the host asks)
+            tel = res_tail[-1]
+            wnorm = _recorder.network_weight_norm(ns, quant)
+            ch = jnp.stack([tel.spike_rate, tel.mean_abs_dw, tel.sat_frac,
+                            wnorm], axis=-1)
+            rec2, verdict = _recorder.recorder_update(hcfg, rec, ch, pos,
+                                                      active)
+            return rec2, verdict
+
+        def _pool_step_rec(fleet, drive, active, teach, seeds, rec, pos):
+            res = snn.timestep(cfg, fleet, theta, drive, teach=teach,
+                               active=active, seed=seeds, telemetry=True)
+            rec2, verdict = _record(res[0], res, rec, pos, active)
+            return res + (rec2, verdict)
+
+        def _pool_rollout_rec(fleet, window, active, teach, seeds, rec, pos):
+            res = snn.rollout_window(cfg, fleet, theta, window, teach=teach,
+                                     active=active, seed=seeds,
+                                     telemetry=True)
+            rec2, verdict = _record(res[0], res, rec, pos, active)
+            return res + (rec2, verdict)
 
         def _meshed(core, *, window: bool, tel: bool):
             # Lower `core` under shard_map over the slot axis
@@ -684,12 +924,41 @@ class FleetScheduler(SessionPool):
 
             return run
 
+        def _meshed_rec(core, *, window: bool):
+            # the record variants mesh like the telemetry ones: every
+            # RecorderState leaf is slot-major (axis 0), so the whole rec
+            # pytree rides one mapped arg; the ring cursor `pos` is
+            # replicated like the clock (all slots record in lockstep)
+            def body(w, v, tr, scl, t, x, active, teach, seeds, rec, pos):
+                st = NetworkState(w=w, v=v, trace=tr, t=t, w_scale=scl)
+                res = core(st, x, active, teach, seeds, rec, pos)
+                ns = res[0]
+                return (ns.w, ns.v, ns.trace, ns.w_scale) + tuple(res[1:])
+
+            x_ax = 1 if window else 0
+            mapped = engine.fleet_spmd(
+                body, mesh,
+                in_axes=(0, 0, 0, 0, None, x_ax, 0, 0, 0, 0, None),
+                out_axes=(0, 0, 0, 0, x_ax, 0, 0, 0))
+
+            def run(fleet, x, active, teach, seeds, rec, pos):
+                out = mapped(fleet.w, fleet.v, fleet.trace, fleet.w_scale,
+                             fleet.t, x, active, teach, seeds, rec, pos)
+                k = x.shape[0] if window else 1
+                ns = NetworkState(w=out[0], v=out[1], trace=out[2],
+                                  t=fleet.t + k, w_scale=out[3])
+                return (ns,) + tuple(out[4:])
+
+            return run
+
         if mesh is not None:
             _pool_step = _meshed(_pool_step, window=False, tel=False)
             _pool_rollout = _meshed(_pool_rollout, window=True, tel=False)
             _pool_step_tel = _meshed(_pool_step_tel, window=False, tel=True)
             _pool_rollout_tel = _meshed(_pool_rollout_tel, window=True,
                                         tel=True)
+            _pool_step_rec = _meshed_rec(_pool_step_rec, window=False)
+            _pool_rollout_rec = _meshed_rec(_pool_rollout_rec, window=True)
 
         # Fixed shapes everywhere => each of these traces exactly once per
         # signature; `compiled_programs()` exposes the per-entry-point
@@ -701,11 +970,20 @@ class FleetScheduler(SessionPool):
         self._rollout = jax.jit(_pool_rollout)
         self._step_tel = jax.jit(_pool_step_tel)
         self._rollout_tel = jax.jit(_pool_rollout_tel)
+        # NOTE: the recorder buffer is NOT donated even though the caller's
+        # copy is dead after every record step — on backends without
+        # donation support (CPU) an unusable donation forces defensive
+        # copies that cost more than the recorder itself (~+10% per call
+        # at B=256, measured by benchmarks/obs_health.py)
+        self._step_rec = jax.jit(_pool_step_rec)
+        self._rollout_rec = jax.jit(_pool_rollout_rec)
         self._jitted.update({
             "pool_step": self._step,
             "pool_rollout": self._rollout,
             "pool_step_telemetry": self._step_tel,
             "pool_rollout_telemetry": self._rollout_tel,
+            "pool_step_record": self._step_rec,
+            "pool_rollout_record": self._rollout_rec,
         })
 
     # the historical attribute name: the pool pytree IS the fleet state
@@ -757,7 +1035,7 @@ class FleetScheduler(SessionPool):
 
     def step(self, drives: Mapping[str, jax.Array],
              teach: Optional[Mapping[str, jax.Array]] = None,
-             telemetry: bool = False):
+             telemetry: bool = False, record: bool = False):
         """One fused SNN timestep for the WHOLE pool.
 
         `drives` maps uid -> input drive ``(obs_dim,)`` (already encoded;
@@ -769,13 +1047,32 @@ class FleetScheduler(SessionPool):
         (one extra stable program, compiled on first use) and returns
         ``(outputs, FleetTelemetry)``; fleet-level summary gauges are
         recorded into ``self.metrics``.
+
+        ``record=True`` (needs ``health=HealthConfig(...)``) dispatches the
+        RECORD trace variant: the same telemetry channels plus the weight
+        norm feed the flight-recorder ring and the streaming detectors
+        inside the one program — still no host sync per step; the latched
+        verdict waits on device for `flagged_sessions`/`remediate`.  Pass
+        ``telemetry=True`` too to ALSO get the host-side tuple return and
+        summary gauges (same single program either way).
         """
         drive, tarr = self._gather_rows(drives, teach)
-        fn = self._step_tel if telemetry else self._step
-        with phase("pool.step"):
-            res = fn(self.fleet, drive, self._active_mask(), tarr,
-                     jnp.asarray(self._steps.astype(np.int32)))
-        self.fleet, out = res[0], res[1]
+        if record:
+            rec = self._ensure_recorder()
+            with phase("pool.step"):
+                res = self._step_rec(
+                    self.fleet, drive, self._active_mask(), tarr,
+                    jnp.asarray(self._steps.astype(np.int32)),
+                    rec, jnp.int32(self._rec_pos))
+            self.fleet, out = res[0], res[1]
+            self._rec, self.last_verdict = res[3], res[4]
+            self._rec_pos += 1
+        else:
+            fn = self._step_tel if telemetry else self._step
+            with phase("pool.step"):
+                res = fn(self.fleet, drive, self._active_mask(), tarr,
+                         jnp.asarray(self._steps.astype(np.int32)))
+            self.fleet, out = res[0], res[1]
         self.advance_steps(1)
         outputs = {uid: out[slot] for uid, slot in self.user_slot.items()}
         if not telemetry:
@@ -787,7 +1084,7 @@ class FleetScheduler(SessionPool):
     def pool_step(self, drives: Mapping[str, jax.Array],
                   timesteps: Optional[int] = None,
                   teach: Optional[Mapping[str, jax.Array]] = None,
-                  telemetry: bool = False):
+                  telemetry: bool = False, record: bool = False):
         """K fused SNN timesteps for the WHOLE pool in ONE engine launch.
 
         The time-fused form of calling `step` K times on held drives: the
@@ -806,6 +1103,12 @@ class FleetScheduler(SessionPool):
         extra stable program) and returns ``(outputs, FleetTelemetry)``
         with window-averaged per-slot rates, recording fleet summary
         gauges into ``self.metrics``.
+
+        ``record=True`` (needs ``health=HealthConfig(...)``) dispatches the
+        record trace variant: the window's (averaged) telemetry channels
+        write ONE flight-recorder row and one detector update per call —
+        a recorded window is one observation, matching the per-step path's
+        cadence in recorded samples per launch.
         """
         k = self.cfg.timesteps if timesteps is None else int(timesteps)
         if k < 1:
@@ -813,11 +1116,22 @@ class FleetScheduler(SessionPool):
         drive, tarr = self._gather_rows(drives, teach)
         n_in = self.cfg.layer_sizes[0]
         window = jnp.broadcast_to(drive[None], (k, self.slots, n_in))
-        fn = self._rollout_tel if telemetry else self._rollout
-        with phase("pool.rollout"):
-            res = fn(self.fleet, window, self._active_mask(), tarr,
-                     jnp.asarray(self._steps.astype(np.int32)))
-        self.fleet, outs = res[0], res[1]
+        if record:
+            rec = self._ensure_recorder()
+            with phase("pool.rollout"):
+                res = self._rollout_rec(
+                    self.fleet, window, self._active_mask(), tarr,
+                    jnp.asarray(self._steps.astype(np.int32)),
+                    rec, jnp.int32(self._rec_pos))
+            self.fleet, outs = res[0], res[1]
+            self._rec, self.last_verdict = res[3], res[4]
+            self._rec_pos += 1
+        else:
+            fn = self._rollout_tel if telemetry else self._rollout
+            with phase("pool.rollout"):
+                res = fn(self.fleet, window, self._active_mask(), tarr,
+                         jnp.asarray(self._steps.astype(np.int32)))
+            self.fleet, outs = res[0], res[1]
         self.advance_steps(k)
         outputs = {uid: outs[:, slot] for uid, slot in self.user_slot.items()}
         if not telemetry:

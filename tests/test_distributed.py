@@ -18,6 +18,11 @@ Pins, converting the `distributed/` seed modules' contracts into gates:
      never leak into survivors' math.
   4. ELASTIC RE-MESH — `save_pool` at D devices + `load_pool` at D'
      (including unmeshed) resumes occupancy, step counters, and bits.
+  5. SESSION HEALTH UNDER MESH — the ``record=`` trace variants, the
+     flight-recorder state, and quarantine -> rollback remediation are
+     bit-identical between meshed and unmeshed pools, and churn through
+     the record variants (elastic re-mesh restores included) stays silent
+     under the armed recompile watchdog.
 
 The D>1 cells need forced host devices and run under the `multidevice-
 smoke` CI lane (``XLA_FLAGS=--xla_force_host_platform_device_count=4``);
@@ -37,6 +42,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import snn
 from repro.distributed import sharding as dsh
+from repro.obs.health import HealthConfig
 from repro.serving import SessionStore
 from repro.serving.scheduler import SHARED, FleetScheduler
 
@@ -62,10 +68,17 @@ def _drive(uid, t, n=8):
     return np.sin(0.3 * t + phase + np.arange(n)).astype(np.float32)
 
 
-def _sched(impl, datapath, slots=4, mesh=None, store=None):
+def _sched(impl, datapath, slots=4, mesh=None, store=None, health=None):
     cfg = _cfg(impl, datapath)
     theta = snn.init_theta(cfg, jax.random.PRNGKey(0))
-    return FleetScheduler(cfg, theta, slots=slots, mesh=mesh, store=store)
+    return FleetScheduler(cfg, theta, slots=slots, mesh=mesh, store=store,
+                          health=health)
+
+
+# recording enabled, every detector disabled: the mesh-parity tests want
+# the flight recorder running without any verdict-driven divergence
+HEALTH_OFF = HealthConfig(z_threshold=1e9, bounds=((-1e9, 1e9),) * 4,
+                          dead_floor=-1.0, hysteresis=(9999,) * 4)
 
 
 def _assert_outputs_equal(a, b):
@@ -178,6 +191,31 @@ class TestSingleDeviceMesh:
         _assert_outputs_equal(o1, o2)
         for x, y in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_record_variant_parity(self):
+        """The record= trace variant on a single-device mesh: outputs,
+        pool state, the whole flight-recorder pytree, and the latched
+        verdict are bitwise identical to the unmeshed recording pool."""
+        ref = _sched("xla", "float32", health=HEALTH_OFF)
+        m = _sched("xla", "float32", mesh=dsh.fleet_mesh(1),
+                   health=HEALTH_OFF)
+        users = ("a", "b", "c")
+        for s in (ref, m):
+            for u in users:
+                s.admit(u)
+        for t in range(3):
+            d = {u: _drive(u, t) for u in users}
+            _assert_outputs_equal(ref.step(dict(d), record=True),
+                                  m.step(dict(d), record=True))
+        d = {u: _drive(u, 9) for u in users}
+        _assert_outputs_equal(
+            ref.pool_step(dict(d), timesteps=3, record=True),
+            m.pool_step(dict(d), timesteps=3, record=True))
+        _assert_pools_equal(ref, m)
+        for x, y in zip(jax.tree.leaves(ref._rec), jax.tree.leaves(m._rec)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        np.testing.assert_array_equal(np.asarray(ref.last_verdict),
+                                      np.asarray(m.last_verdict))
 
 
 class TestFailureDrain:
@@ -454,6 +492,85 @@ class TestMultiDevice:
                 s.admit_prompt(u, p)
         for _ in range(5):
             assert ref.step() == m.step()
+
+    @pytest.mark.parametrize("impl,datapath",
+                             [("xla", "float32"), ("xla", "int8")])
+    def test_meshed_record_parity_and_rollback(self, impl, datapath):
+        """Recording, quarantine, and rollback on a D=4 pool are bitwise
+        identical to the unmeshed pool: the recorder state shards over the
+        slot axis, the quarantine freeze is the same runtime mask, and the
+        rolled-back session resumes the same checkpoint bits."""
+        users = [f"u{i}" for i in range(6)]
+        ref = _sched(impl, datapath, slots=8, health=HEALTH_OFF)
+        m = _sched(impl, datapath, slots=8, mesh=dsh.fleet_mesh(4),
+                   health=HEALTH_OFF)
+        for s in (ref, m):
+            for u in users:
+                s.admit(u)
+        for t in range(3):
+            d = {u: _drive(u, t) for u in users}
+            _assert_outputs_equal(ref.step(dict(d), record=True),
+                                  m.step(dict(d), record=True))
+        for x, y in zip(jax.tree.leaves(ref._rec), jax.tree.leaves(m._rec)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        for s in (ref, m):
+            assert s.health_checkpoint() == len(users)
+            s.quarantine("u2")
+        for t in range(3, 5):       # u2 frozen on both pools
+            d = {u: _drive(u, t) for u in users}
+            _assert_outputs_equal(ref.step(dict(d), record=True),
+                                  m.step(dict(d), record=True))
+        ra, rb = ref.rollback("u2"), m.rollback("u2")
+        assert ra["steps_lost"] == rb["steps_lost"] == 2
+        for t in range(5, 8):
+            d = {u: _drive(u, t) for u in users}
+            _assert_outputs_equal(ref.step(dict(d), record=True),
+                                  m.step(dict(d), record=True))
+        _assert_pools_equal(ref, m)
+
+    def test_record_churn_and_remesh_watchdog_silent(self, tmp_path):
+        """Armed-watchdog gate over the meshed health path: session churn
+        through the record variants AND an elastic re-mesh restore into an
+        already-warmed pool compile nothing."""
+        from repro.obs.watchdog import watchdog as watch
+        users = [f"u{i}" for i in range(6)]
+        m = _sched("xla", "float32", slots=8, mesh=dsh.fleet_mesh(4),
+                   health=HEALTH_OFF)
+        for u in users:
+            m.admit(u)
+        m.step({u: _drive(u, 0) for u in users}, record=True)
+        m.pool_step({u: _drive(u, 1) for u in users}, timesteps=3,
+                    record=True)
+        m.evict("u0")               # warms recorder_reset under the mesh
+        m.admit("u0")
+        m.save_pool(str(tmp_path))
+        tgt = _sched("xla", "float32", slots=8, mesh=dsh.fleet_mesh(2),
+                     health=HEALTH_OFF)
+        tgt.load_pool(str(tmp_path))
+        tgt.step({u: _drive(u, 2) for u in tgt.active_users}, record=True)
+        tgt.evict("u0")
+        tgt.admit("u0")
+        warm_m, warm_t = m.compile_count(), tgt.compile_count()
+        watch.install()
+        watch.reset()
+        with watch.armed():
+            for t in range(3):
+                m.evict("u1")
+                m.admit(f"g{t}")
+                m.step({u: _drive(u, t) for u in m.active_users},
+                       record=True)
+                m.pool_step({u: _drive(u, 50 + t) for u in m.active_users},
+                            timesteps=3, record=True)
+                m.evict(f"g{t}")
+                m.admit("u1")
+            # elastic re-mesh restore into the warmed D=2 pool (load_pool
+            # rebuilds the recorder lazily; same shapes, same shardings)
+            tgt.load_pool(str(tmp_path))
+            tgt.step({u: _drive(u, 9) for u in tgt.active_users},
+                     record=True)
+        assert watch.violations == 0, watch.violation_signatures
+        assert m.compile_count() == warm_m, m.compiled_programs()
+        assert tgt.compile_count() == warm_t, tgt.compiled_programs()
 
     def test_drained_session_survives_durable_store(self, tmp_path):
         """Drain from an on-disk SessionStore (not just the RAM archive):

@@ -309,9 +309,11 @@ class TestSchedulerObs:
         up-front at 0 executables and grow to exactly 1 when used."""
         sched = _sched()
         progs = sched.compiled_programs()
-        assert set(progs) == {"slot_put", "slot_take", "pool_step",
-                              "pool_rollout", "pool_step_telemetry",
-                              "pool_rollout_telemetry"}
+        assert set(progs) == {"slot_put", "slot_take", "recorder_reset",
+                              "pool_step", "pool_rollout",
+                              "pool_step_telemetry",
+                              "pool_rollout_telemetry",
+                              "pool_step_record", "pool_rollout_record"}
         assert progs["pool_step_telemetry"] == 0
         sched.admit("u0")
         drives = {"u0": np.ones(8, np.float32)}

@@ -184,9 +184,11 @@ class TestCompileAudit:
         # slot_take has compiled (the session factory gathers slot 0 of
         # the initial pool to build the fresh-session template)
         assert s.compiled_programs() == {
-            "slot_put": 0, "slot_take": 1, "prefill": 0, "decode_step": 0,
+            "slot_put": 0, "slot_take": 1, "recorder_reset": 0,
+            "prefill": 0, "decode_step": 0,
             "decode_window": 0, "decode_step_telemetry": 0,
-            "decode_window_telemetry": 0}
+            "decode_window_telemetry": 0,
+            "decode_step_record": 0, "decode_window_record": 0}
 
         s.admit_prompt("a", _prompt("a", 6, vocab))
         s.admit_prompt("b", _prompt("b", 4, vocab))   # 2nd prompt LENGTH
@@ -199,9 +201,11 @@ class TestCompileAudit:
         s.evict("b")
         expected = {
             "slot_put": 1, "slot_take": 1,
+            "recorder_reset": 0,          # health not enabled: never traced
             "prefill": 2,                 # one per distinct prompt length
             "decode_step": 1, "decode_step_telemetry": 1,
             "decode_window": 1, "decode_window_telemetry": 1,
+            "decode_step_record": 0, "decode_window_record": 0,
         }
         assert s.compiled_programs() == expected
         assert s.compile_count() == sum(expected.values())
